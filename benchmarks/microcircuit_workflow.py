@@ -1,0 +1,62 @@
+"""Paper §3 STACS workflow timing: network generation decoupled from
+simulation through the serialized representation — build -> serialize ->
+ingest -> simulate -> snapshot."""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.core.partition import rcb_partition
+from repro.io import load_binary, save_binary
+from repro.snn import SimConfig, Simulator, microcircuit, to_dcsr
+from repro.core import merge_to_single
+
+
+def run(scale=0.01, steps=100):
+    t = {}
+    t0 = time.perf_counter()
+    net = microcircuit(scale=scale, seed=0)
+    d = to_dcsr(net, assignment=rcb_partition(net.coords, 4))
+    t["generate"] = time.perf_counter() - t0
+
+    td = tempfile.mkdtemp()
+    t0 = time.perf_counter()
+    save_binary(d, td)
+    t["serialize"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    d2, _, _ = load_binary(td)
+    t["ingest"] = time.perf_counter() - t0
+    shutil.rmtree(td)
+
+    sim = Simulator(merge_to_single(d2), SimConfig(align_k=32))
+    st = sim.init_state()
+    st, _ = sim.run(st, 5)
+    jax.block_until_ready(st["vtx_state"])
+    t0 = time.perf_counter()
+    st, outs = sim.run(st, steps)
+    jax.block_until_ready(st["vtx_state"])
+    t["simulate"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sim.state_to_dcsr(st)
+    td = tempfile.mkdtemp()
+    save_binary(sim.net, td, t_now=int(st["t"]))
+    t["snapshot"] = time.perf_counter() - t0
+    shutil.rmtree(td)
+    return d.n, d.m, t
+
+
+def main(quick=True):
+    n, m, t = run(scale=0.005 if quick else 0.02,
+                  steps=50 if quick else 200)
+    for phase, secs in t.items():
+        print(f"microcircuit_{phase},{secs * 1e6:.0f},n={n};m={m}")
+
+
+if __name__ == "__main__":
+    main(quick=False)

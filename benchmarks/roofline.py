@@ -1,0 +1,84 @@
+"""Roofline table from the dry-run JSON records (results/dryrun):
+the §Roofline deliverable — three terms, dominant bottleneck,
+MODEL_FLOPS/HLO ratio, and a markdown emitter for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+
+def load_records(out_dir="results/dryrun", mesh="single",
+                 tag: Optional[str] = None) -> List[Dict]:
+    recs = []
+    suffix = f"__{mesh}{('_' + tag) if tag else ''}.json"
+    for f in sorted(glob.glob(os.path.join(out_dir, "*" + suffix))):
+        base = os.path.basename(f)[: -len(suffix)]
+        if tag is None and "__single_" in os.path.basename(f):
+            continue  # tagged variant, not baseline
+        r = json.load(open(f))
+        if not tag and r.get("tag"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def one_liner(r: Dict) -> str:
+    if r.get("skipped"):
+        return (
+            f"{r['arch']},{r['shape']},SKIP({r.get('reason', '')})"
+        )
+    if "error" in r:
+        return f"{r['arch']},{r['shape']},ERROR"
+    t = r["roofline"]
+    return (
+        f"{r['arch']},{r['shape']},{r['dominant'].replace('_s', '')},"
+        f"compute={t['compute_s']:.2e},mem={t['memory_s']:.2e},"
+        f"coll={t['collective_s']:.2e},"
+        f"useful={r.get('useful_flops_ratio') or 0:.2f}"
+    )
+
+
+def markdown_table(recs: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| MODEL/HLO flops | bytes/dev |\n|---|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for r in recs:
+        if r.get("skipped") or "error" in r:
+            continue
+        t = r["roofline"]
+        argb = r.get("memory", {}).get("argument_size_in_bytes", 0)
+        tmpb = r.get("memory", {}).get("temp_size_in_bytes", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.2e} | "
+            f"{t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+            f"**{r['dominant'].replace('_s', '')}** | "
+            f"{r.get('useful_flops_ratio') or 0:.2f} | "
+            f"{(argb + tmpb) / 1e9:.1f} GB |"
+        )
+    return "\n".join(lines)
+
+
+def main(quick=True):
+    recs = load_records()
+    if not recs:
+        print("roofline,0,no-dryrun-records-found")
+        return
+    doms = {}
+    for r in recs:
+        if "roofline" in r:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"roofline[{one_liner(r)}],0,")
+    print(f"roofline_summary,0,cells={len(recs)};dominants={doms}")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--markdown" in sys.argv:
+        mesh = "multi" if "--multi" in sys.argv else "single"
+        print(markdown_table(load_records(mesh=mesh)))
+    else:
+        main(quick=False)

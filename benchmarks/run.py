@@ -1,0 +1,29 @@
+"""Benchmark harness — one function per paper table/claim.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  serialization_scaling    paper §3: 12 GB @ 0.3B syn, linear, k-invariant
+  spike_throughput         synaptic events/s of the jitted sim loop
+  partition_quality        balance/edge-cut: block/hash/voxel/RCB(+rate)
+  microcircuit_workflow    generate -> serialize -> ingest -> sim -> snapshot
+  roofline                 §Roofline terms per dry-run cell (reads
+                           results/dryrun; run launch.dryrun first)
+"""
+import sys
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    from . import (
+        microcircuit_workflow, partition_quality, roofline,
+        serialization_scaling, spike_throughput,
+    )
+
+    serialization_scaling.main(quick=quick)
+    spike_throughput.main(quick=quick)
+    partition_quality.main(quick=quick)
+    microcircuit_workflow.main(quick=quick)
+    roofline.main(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Paper §3 scalability table: on-disk cost linear in synapses,
+independent of partition count.
+
+Paper's numbers (full scale): 77K neurons / 0.3B synapses -> ~12 GB
+(~40 B/synapse); 2x neurons -> 154K / 1.2B synapses -> ~49 GB
+(~41 B/synapse).  We build scaled microcircuits, measure bytes/synapse of
+the text format, verify linearity, and extrapolate to the paper's sizes.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.partition import rcb_partition
+from repro.io import save_text, save_binary
+from repro.snn import microcircuit, to_dcsr
+
+
+def run(scales=(0.01, 0.02, 0.04), k=4, quick=False) -> List[dict]:
+    if quick:
+        scales = scales[:2]
+    rows = []
+    for s in scales:
+        net = microcircuit(scale=s, seed=0)
+        d = to_dcsr(net, assignment=rcb_partition(net.coords, k))
+        td = tempfile.mkdtemp()
+        t0 = time.perf_counter()
+        sizes = save_text(d, td, "mc")
+        t_text = time.perf_counter() - t0
+        text_bytes = sum(
+            v for kk, v in sizes.items() if kk != ".event"
+        )
+        t0 = time.perf_counter()
+        save_binary(d, td + "_bin")
+        t_bin = time.perf_counter() - t0
+        import os
+        bin_bytes = sum(
+            os.path.getsize(os.path.join(td + "_bin", f))
+            for f in os.listdir(td + "_bin")
+        )
+        shutil.rmtree(td)
+        shutil.rmtree(td + "_bin")
+        rows.append(dict(
+            scale=s, n=d.n, m=d.m,
+            text_bytes=text_bytes,
+            text_bytes_per_syn=text_bytes / d.m,
+            bin_bytes_per_syn=bin_bytes / d.m,
+            save_text_s=t_text, save_bin_s=t_bin,
+        ))
+    return rows
+
+
+def partition_independence(scale=0.02) -> List[dict]:
+    net = microcircuit(scale=scale, seed=0)
+    rows = []
+    for k in (1, 4, 16):
+        d = to_dcsr(net, k=k)
+        td = tempfile.mkdtemp()
+        sizes = save_text(d, td, "mc")
+        shutil.rmtree(td)
+        rows.append(dict(k=k, state_bytes=sizes[".state"],
+                         adjcy_bytes=sizes[".adjcy"]))
+    return rows
+
+
+def main(quick=True):
+    rows = run(quick=quick)
+    bps = [r["text_bytes_per_syn"] for r in rows]
+    # linearity: bytes/synapse constant across scales
+    lin = max(bps) / min(bps)
+    full_m = 0.3e9
+    extrap_gb = bps[-1] * full_m / 1e9
+    for r in rows:
+        print(
+            f"serialization_scaling[scale={r['scale']}],"
+            f"{r['save_text_s'] * 1e6:.0f},"
+            f"m={r['m']};B/syn={r['text_bytes_per_syn']:.1f};"
+            f"bin={r['bin_bytes_per_syn']:.1f}"
+        )
+    print(
+        f"serialization_linearity,0,ratio={lin:.3f};"
+        f"extrap_0.3B_syn={extrap_gb:.1f}GB;paper=12GB"
+    )
+    for r in partition_independence():
+        print(
+            f"serialization_kinv[k={r['k']}],0,"
+            f"state_bytes={r['state_bytes']}"
+        )
+
+
+if __name__ == "__main__":
+    main(quick=False)

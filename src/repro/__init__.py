@@ -1,0 +1,16 @@
+"""repro: distributed CSR (dCSR) framework for SNN simulation, serialization
+and interoperability — plus the general JAX training/serving substrate it
+rides on (model zoo, sharding policies, checkpointing, launchers).
+
+Subpackages:
+  core      dCSR layout, partitioners, TPU ELL view, model registry, events
+  snn       neuron/synapse dynamics, network builders, (distributed) simulators
+  kernels   Pallas TPU kernels (spike gather, LIF step, STDP) + jnp oracles
+  io        paper-faithful text format, binary fast path, tensor checkpoints
+  models    transformer/SSM/MoE/enc-dec/VLM zoo
+  train     optimizers, losses, train/serve steps, data pipeline
+  sharding  PartitionSpec policies per architecture
+  launch    production meshes, multi-pod dry-run, train/simulate drivers
+  configs   one config per assigned architecture + the paper's microcircuit
+"""
+__version__ = "1.0.0"

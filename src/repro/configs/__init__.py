@@ -1,0 +1,2 @@
+from .base import ArchConfig, ShapeCell, SHAPES, cells_for  # noqa: F401
+from .registry import ARCHS, get_config, all_cells  # noqa: F401

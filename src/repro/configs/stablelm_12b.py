@@ -1,0 +1,20 @@
+"""stablelm-12b [dense] [hf:stabilityai/stablelm-2-12b; hf].
+40L d_model=5120 32H (GQA kv=8) d_ff=13824 vocab=100352."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab_size=100352,
+    head_dim=160,
+    mlp="swiglu",
+    norm="layernorm",
+    qkv_bias=True,
+    param_dtype="bfloat16",
+    remat=True,
+)

@@ -1,0 +1,35 @@
+"""dCSR core: the paper's distributed compressed-sparse-row layout.
+
+Public surface:
+  - :mod:`repro.core.dcsr`      -- DCSRNetwork / DCSRPartition, build & repartition
+  - :mod:`repro.core.partition` -- block/hash/voxel/RCB partitioners + metrics
+  - :mod:`repro.core.ell`      -- TPU-native delay-bucketed blocked-ELL view
+  - :mod:`repro.core.state`    -- model registry (the ``.model`` dictionary)
+  - :mod:`repro.core.events`   -- in-flight events <-> ring buffers
+"""
+from .dcsr import (  # noqa: F401
+    DCSRNetwork,
+    DCSRPartition,
+    from_edges,
+    to_edges,
+    repartition,
+    merge_to_single,
+)
+from .ell import DelayELL, ELLBucket, build_delay_ell  # noqa: F401
+from .partition import (  # noqa: F401
+    block_partition,
+    hash_partition,
+    voxel_partition,
+    rcb_partition,
+    rate_rebalance,
+    balance,
+    edge_cut,
+)
+from .state import (  # noqa: F401
+    ModelRegistry,
+    ModelSpec,
+    default_registry,
+    NONE_MODEL,
+    EDGE_WEIGHT,
+    EDGE_DELAY,
+)

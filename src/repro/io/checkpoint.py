@@ -1,0 +1,251 @@
+"""Partition-based tensor checkpoints for training state (dCSR's
+serialization scheme lifted to sharded pytrees).
+
+Exactly the paper's recipe, applied to dense tensors instead of graph rows:
+
+  * every device/process writes **only its own partition** of each array
+    (``leaf<i>_s<j>.npy`` = one addressable shard),
+  * a manifest records global shapes + per-shard index offsets — the direct
+    analogue of the ``dist`` prefix array,
+  * restore is **elastic**: a checkpoint written on one mesh restores onto a
+    different mesh/sharding (the paper's "repartitioning ... to optimally
+    fit different backends"), because the manifest, not the file layout,
+    defines the global array.
+
+Fault tolerance: CRC32 per shard file, write-to-tmp + atomic rename (a crash
+mid-write never corrupts the latest complete step), async background writer
+(training continues while the previous step flushes), retention of the last
+``max_to_keep`` steps, and ``restore_latest_valid`` that walks backwards past
+corrupt/incomplete steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _crc_bytes(b: bytes) -> int:
+    return zlib.crc32(b)
+
+
+def _leaf_paths(tree: Any) -> List[str]:
+    paths, _ = zip(
+        *jax.tree_util.tree_flatten_with_path(tree)[0]
+    ) if jax.tree_util.tree_leaves(tree) else ((), None)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [jax.tree_util.keystr(kp) for kp, _ in flat]
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        root: str,
+        max_to_keep: int = 3,
+        async_write: bool = True,
+    ):
+        self.root = root
+        self.max_to_keep = max_to_keep
+        self.async_write = async_write
+        os.makedirs(root, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: List[BaseException] = []
+        self._worker: Optional[threading.Thread] = None
+        if async_write:
+            self._worker = threading.Thread(
+                target=self._drain, daemon=True
+            )
+            self._worker.start()
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, wait: bool = False) -> str:
+        """Snapshot host-side immediately; write in background (or inline)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        names = [jax.tree_util.keystr(kp) for kp, _ in flat]
+        # snapshot shards to host np (cheap on CPU; on TPU this is the D2H)
+        snap = []
+        for leaf in leaves:
+            arr = leaf
+            if isinstance(arr, jax.Array):
+                shards = [
+                    (s.index, np.asarray(s.data))
+                    for s in arr.addressable_shards
+                ]
+                snap.append((tuple(arr.shape), str(arr.dtype), shards))
+            else:
+                a = np.asarray(arr)
+                snap.append(
+                    (tuple(a.shape), str(a.dtype),
+                     [(tuple(slice(None) for _ in a.shape), a)])
+                )
+        job = (step, names, snap)
+        if self.async_write and not wait:
+            self._q.put(job)
+        else:
+            self._write(job)
+        return self.step_dir(step)
+
+    def _drain(self):
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            try:
+                self._write(job)
+            except BaseException as e:  # surfaced by wait()
+                self._err.append(e)
+            finally:
+                self._q.task_done()
+
+    def _write(self, job):
+        step, names, snap = job
+        final = self.step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest: Dict[str, Any] = dict(step=step, leaves=[])
+        for i, (name, (shape, dtype, shards)) in enumerate(
+            zip(names, snap)
+        ):
+            entry = dict(
+                name=name, shape=list(shape), dtype=dtype, shards=[]
+            )
+            for j, (index, data) in enumerate(shards):
+                fn = f"leaf{i}_s{j}.npy"
+                full = os.path.join(tmp, fn)
+                np.save(full, data)
+                with open(full, "rb") as f:
+                    crc = _crc_bytes(f.read())
+                entry["shards"].append(
+                    dict(
+                        file=fn,
+                        crc=crc,
+                        # dist-style offsets: start/stop per dim
+                        index=[
+                            [
+                                0 if s.start is None else int(s.start),
+                                (shape[d] if s.stop is None
+                                 else int(s.stop)),
+                            ]
+                            for d, s in enumerate(index)
+                        ] if shape else [],
+                    )
+                )
+            manifest["leaves"].append(entry)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    # ------------------------------------------------------------- restore
+    def restore(
+        self,
+        step: Optional[int] = None,
+        like: Any = None,
+        shardings: Any = None,
+        verify: bool = True,
+    ) -> Tuple[Any, int]:
+        """Restore (tree, step).  ``like`` supplies the pytree structure;
+        ``shardings`` (same structure or a single sharding) triggers
+        device_put with *new* partitioning — the elastic path."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = self.step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            man = json.load(f)
+        arrays = []
+        for entry in man["leaves"]:
+            shape = tuple(entry["shape"])
+            out = np.empty(shape, dtype=entry["dtype"])
+            for sh in entry["shards"]:
+                full = os.path.join(d, sh["file"])
+                with open(full, "rb") as f:
+                    raw = f.read()
+                if verify and _crc_bytes(raw) != sh["crc"]:
+                    raise IOError(
+                        f"corrupt shard {sh['file']} in step {step}"
+                    )
+                data = np.load(full)
+                idx = tuple(
+                    slice(a, b) for a, b in sh["index"]
+                )
+                out[idx] = data
+            arrays.append(out)
+        if like is not None:
+            treedef = jax.tree_util.tree_structure(like)
+            tree = jax.tree_util.tree_unflatten(treedef, arrays)
+        else:
+            tree = arrays
+        if shardings is not None:
+            if jax.tree_util.tree_structure(
+                shardings, is_leaf=lambda x: hasattr(x, "addressable_devices")
+            ) != jax.tree_util.tree_structure(tree):
+                tree = jax.tree_util.tree_map(
+                    lambda a: jax.device_put(a, shardings), tree
+                )
+            else:
+                tree = jax.tree_util.tree_map(
+                    lambda a, s: jax.device_put(a, s), tree, shardings
+                )
+        return tree, step
+
+    def restore_latest_valid(self, like: Any = None, shardings: Any = None):
+        """Walk steps newest-first, skipping corrupt/incomplete ones (node
+        failure mid-write, bit rot): the fault-tolerant restart entry."""
+        for step in sorted(self.all_steps(), reverse=True):
+            try:
+                return self.restore(
+                    step, like=like, shardings=shardings, verify=True
+                )
+            except (IOError, OSError, json.JSONDecodeError, ValueError):
+                continue
+        raise FileNotFoundError(f"no valid checkpoint under {self.root}")
+
+    # ------------------------------------------------------------- helpers
+    def step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for fn in os.listdir(self.root):
+            m = re.fullmatch(r"step_(\d+)", fn)
+            if m and os.path.exists(
+                os.path.join(self.root, fn, "manifest.json")
+            ):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def wait(self):
+        """Block until queued writes land; re-raise background errors."""
+        self._q.join()
+        if self._err:
+            raise self._err.pop()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.max_to_keep]:
+            shutil.rmtree(self.step_dir(s), ignore_errors=True)
+
+    def close(self):
+        if self._worker is not None:
+            self._q.put(None)
+            self._worker.join(timeout=10)
+            self._worker = None

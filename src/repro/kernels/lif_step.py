@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused LIF neuron update.
+
+Elementwise state advance (decay, integrate, threshold, reset, refractory)
+fused into one VPU pass: five HBM-bound ops in jnp become a single read/write
+of each state array.  Operates on 2D (rows, 128)-shaped panels (the ops
+wrapper pads/reshapes 1D state) so blocks are sublane/lane aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(v_ref, ref_ref, i_ref, v_out, ref_out, s_out, *, params):
+    dt = params["dt"]
+    decay = jnp.float32(jnp.exp(-dt / params["tau_m"]))
+    v = v_ref[...]
+    refrac = ref_ref[...]
+    i_syn = i_ref[...]
+    active = refrac <= 0
+    v_int = (
+        params["v_rest"]
+        + (v - params["v_rest"]) * decay
+        + params["r_m"] * i_syn * (1 - decay)
+    )
+    v_new = jnp.where(active, v_int, params["v_reset"])
+    spike = (v_new >= params["v_thresh"]) & active
+    ref_steps = jnp.float32(round(params["t_ref"] / dt))
+    ref_out[...] = jnp.where(spike, ref_steps, jnp.maximum(refrac - 1, 0.0))
+    v_out[...] = jnp.where(spike, params["v_reset"], v_new)
+    s_out[...] = spike.astype(v.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "params_tuple")
+)
+def _lif_call(v2d, ref2d, i2d, *, block_rows, interpret, params_tuple):
+    params = dict(params_tuple)
+    rows, lanes = v2d.shape
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, lanes), lambda r: (r, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, params=params),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(v2d.shape, v2d.dtype)] * 3,
+        interpret=interpret,
+    )(v2d, ref2d, i2d)
+
+
+def lif_step_pallas(
+    v: jnp.ndarray,
+    refrac: jnp.ndarray,
+    i_syn: jnp.ndarray,
+    *,
+    params: dict,
+    block_rows: int = 8,
+    interpret: bool = False,
+):
+    """(R,) state arrays -> (v', refrac', spike).  Pads R to a full
+    (rows, 128) panel, runs the fused kernel, strips the padding."""
+    (R,) = v.shape
+    lanes = 128
+    rows = -(-R // lanes)
+    rows_pad = -(-rows // block_rows) * block_rows
+    pad = rows_pad * lanes - R
+
+    def to2d(x):
+        return jnp.pad(x, (0, pad)).reshape(rows_pad, lanes)
+
+    v2, r2, s2 = _lif_call(
+        to2d(v), to2d(refrac), to2d(i_syn),
+        block_rows=block_rows, interpret=interpret,
+        params_tuple=tuple(sorted(params.items())),
+    )
+    return (
+        v2.reshape(-1)[:R],
+        r2.reshape(-1)[:R],
+        s2.reshape(-1)[:R],
+    )

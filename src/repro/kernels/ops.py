@@ -1,0 +1,74 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Backend dispatch: on TPU the compiled Pallas kernels run natively; elsewhere
+``interpret=True`` executes the same kernel bodies for correctness (this
+container is CPU-only — TPU is the target, interpret mode the validator).
+``backend="ref"`` routes to the pure-jnp oracles (used by the distributed
+simulator under shard_map, where XLA fusion of the oracle is already optimal
+on CPU, and by A/B correctness tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .lif_step import lif_step_pallas
+from .spike_gather import spike_gather_pallas
+from .stdp_update import stdp_update_pallas
+
+
+@functools.lru_cache(maxsize=None)
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: Optional[str]) -> str:
+    if backend is not None:
+        return backend
+    return "pallas" if _on_tpu() else "pallas_interpret"
+
+
+def spike_gather(
+    activity, cols, weights, *, backend: Optional[str] = None, **kw
+):
+    b = _resolve(backend)
+    if b == "ref":
+        return ref.spike_gather_ref(activity, cols, weights)
+    return spike_gather_pallas(
+        activity, cols, weights,
+        interpret=(b == "pallas_interpret"), **kw,
+    )
+
+
+def lif_step(v, refrac, i_syn, *, params, backend: Optional[str] = None, **kw):
+    b = _resolve(backend)
+    if b == "ref":
+        return ref.lif_step_ref(v, refrac, i_syn, **params)
+    return lif_step_pallas(
+        v, refrac, i_syn, params=params,
+        interpret=(b == "pallas_interpret"), **kw,
+    )
+
+
+def stdp_update(
+    weights, valid, cols, pre_trace, pre_spike, post_trace, post_spike,
+    *, params, backend: Optional[str] = None, **kw
+):
+    b = _resolve(backend)
+    if b == "ref":
+        return ref.stdp_update_ref(
+            weights, valid, cols, pre_trace, pre_spike, post_trace,
+            post_spike,
+            a_plus=params["a_plus"], a_minus=params["a_minus"],
+            w_min=params["w_min"], w_max=params["w_max"],
+        )
+    return stdp_update_pallas(
+        weights, valid, cols, pre_trace, pre_spike, post_trace, post_spike,
+        a_plus=params["a_plus"], a_minus=params["a_minus"],
+        w_min=params["w_min"], w_max=params["w_max"],
+        interpret=(b == "pallas_interpret"), **kw,
+    )

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition the corresponding kernel must
+match (tests sweep shapes/dtypes and assert_allclose against these).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+
+def spike_gather_ref(
+    activity: jnp.ndarray,  # (n,) global activity (spikes as 0/1 floats)
+    cols: jnp.ndarray,  # (R, K) int32 global source ids (0 on padding)
+    weights: jnp.ndarray,  # (R, K) weights (0 on padding)
+) -> jnp.ndarray:  # (R,)
+    """currents[r] = sum_k weights[r,k] * activity[cols[r,k]].
+
+    Padding slots carry weight 0, so no mask is needed for the forward
+    accumulation (a deliberate layout invariant of repro.core.ell).
+    """
+    return jnp.sum(weights * jnp.take(activity, cols, axis=0), axis=-1)
+
+
+def lif_step_ref(
+    v: jnp.ndarray,  # (R,) membrane potential
+    refrac: jnp.ndarray,  # (R,) remaining refractory steps (float, >= 0)
+    i_syn: jnp.ndarray,  # (R,) synaptic current this step
+    *,
+    dt: float,
+    tau_m: float,
+    v_rest: float,
+    v_reset: float,
+    v_thresh: float,
+    t_ref: float,
+    r_m: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Leaky integrate-and-fire, exact exponential-Euler update.
+
+    During refractoriness the membrane is clamped to v_reset and input is
+    discarded; the counter then decrements.  Returns (v', refrac', spike).
+    """
+    decay = jnp.exp(-dt / tau_m).astype(v.dtype)
+    active = refrac <= 0
+    v_int = v_rest + (v - v_rest) * decay + r_m * i_syn * (1 - decay)
+    v_new = jnp.where(active, v_int, v_reset)
+    spike = (v_new >= v_thresh) & active
+    ref_steps = jnp.asarray(round(t_ref / dt), dtype=refrac.dtype)
+    refrac_new = jnp.where(spike, ref_steps, jnp.maximum(refrac - 1, 0))
+    v_out = jnp.where(spike, v_reset, v_new)
+    return v_out, refrac_new, spike.astype(v.dtype)
+
+
+def alif_step_ref(
+    v, refrac, adapt, i_syn, *, dt, tau_m, v_rest, v_reset, v_thresh,
+    t_ref, r_m, tau_adapt, beta,
+):
+    """Adaptive LIF: threshold rises by beta per spike, decays with
+    tau_adapt.  Returns (v', refrac', adapt', spike)."""
+    decay = jnp.exp(-dt / tau_m).astype(v.dtype)
+    a_decay = jnp.exp(-dt / tau_adapt).astype(v.dtype)
+    active = refrac <= 0
+    v_int = v_rest + (v - v_rest) * decay + r_m * i_syn * (1 - decay)
+    v_new = jnp.where(active, v_int, v_reset)
+    thresh = v_thresh + adapt
+    spike = (v_new >= thresh) & active
+    ref_steps = jnp.asarray(round(t_ref / dt), dtype=refrac.dtype)
+    refrac_new = jnp.where(spike, ref_steps, jnp.maximum(refrac - 1, 0))
+    adapt_new = adapt * a_decay + beta * spike.astype(v.dtype)
+    v_out = jnp.where(spike, v_reset, v_new)
+    return v_out, refrac_new, adapt_new, spike.astype(v.dtype)
+
+
+def izhikevich_step_ref(v, u, i_syn, *, dt, a, b, c, d):
+    """Izhikevich (2003) two-variable model, forward Euler.
+    Returns (v', u', spike)."""
+    spike = v >= 30.0
+    v0 = jnp.where(spike, c, v)
+    u0 = jnp.where(spike, u + d, u)
+    dv = 0.04 * v0 * v0 + 5.0 * v0 + 140.0 - u0 + i_syn
+    du = a * (b * v0 - u0)
+    return v0 + dt * dv, u0 + dt * du, spike.astype(v.dtype)
+
+
+def stdp_update_ref(
+    weights: jnp.ndarray,  # (R, K)
+    valid: jnp.ndarray,  # (R, K) 0/1 float mask
+    cols: jnp.ndarray,  # (R, K) int32 global pre ids
+    pre_trace: jnp.ndarray,  # (n,) global presynaptic traces
+    pre_spike: jnp.ndarray,  # (n,) global spike vector this step
+    post_trace: jnp.ndarray,  # (R,) local postsynaptic traces
+    post_spike: jnp.ndarray,  # (R,) local spikes this step
+    *,
+    a_plus: float,
+    a_minus: float,
+    w_min: float,
+    w_max: float,
+) -> jnp.ndarray:
+    """Trace-based pair STDP (all-to-all interaction):
+
+      on post spike: w += a_plus  * pre_trace[col]   (potentiation)
+      on pre  spike: w -= a_minus * post_trace[row]  (depression)
+
+    applied simultaneously per step; weights clipped to [w_min, w_max].
+    Slots with ``valid == 0`` (padding *or* non-plastic synapses) keep their
+    original weight unchanged.
+    """
+    pre_t = jnp.take(pre_trace, cols, axis=0)
+    pre_s = jnp.take(pre_spike, cols, axis=0)
+    dw = (
+        a_plus * pre_t * post_spike[:, None]
+        - a_minus * post_trace[:, None] * pre_s
+    )
+    w = jnp.clip(weights + dw, w_min, w_max)
+    return jnp.where(valid > 0, w, weights)
+
+
+def trace_decay_ref(trace, spike, *, dt, tau):
+    """x' = x * exp(-dt/tau) + spike   (per-neuron e-trace)."""
+    return trace * jnp.exp(-dt / tau).astype(trace.dtype) + spike

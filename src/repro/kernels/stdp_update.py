@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused trace-based pair-STDP weight update.
+
+Same blocked-ELL tiling as spike_gather (the two kernels share layout so the
+plasticity pass streams the identical panels), with *two* VMEM-resident
+global vectors (presynaptic trace and spike) gathered per panel and the
+per-row postsynaptic terms broadcast across lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(
+    pre_t_ref, pre_s_ref, cols_ref, w_ref, valid_ref, post_t_ref,
+    post_s_ref, w_out, *, a_plus, a_minus, w_min, w_max
+):
+    cols = cols_ref[...]
+    w = w_ref[...]
+    valid = valid_ref[...]
+    pre_t = jnp.take(pre_t_ref[...], cols, axis=0)
+    pre_s = jnp.take(pre_s_ref[...], cols, axis=0)
+    post_t = post_t_ref[...]  # (block_r, 1)
+    post_s = post_s_ref[...]  # (block_r, 1)
+    dw = a_plus * pre_t * post_s - a_minus * post_t * pre_s
+    w_out[...] = jnp.where(
+        valid > 0, jnp.clip(w + dw, w_min, w_max), w
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_r", "block_k", "interpret",
+        "a_plus", "a_minus", "w_min", "w_max",
+    ),
+)
+def stdp_update_pallas(
+    weights: jnp.ndarray,  # (R, K)
+    valid: jnp.ndarray,  # (R, K) 0/1 same dtype as weights
+    cols: jnp.ndarray,  # (R, K) int32
+    pre_trace: jnp.ndarray,  # (n,)
+    pre_spike: jnp.ndarray,  # (n,)
+    post_trace: jnp.ndarray,  # (R,)
+    post_spike: jnp.ndarray,  # (R,)
+    *,
+    a_plus: float,
+    a_minus: float,
+    w_min: float,
+    w_max: float,
+    block_r: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    R, K = weights.shape
+    n = pre_trace.shape[0]
+    block_r = min(block_r, R)
+    block_k = min(block_k, K)
+    assert R % block_r == 0 and K % block_k == 0
+    grid = (R // block_r, K // block_k)
+    vec = pl.BlockSpec((n,), lambda r, k: (0,))
+    panel = pl.BlockSpec((block_r, block_k), lambda r, k: (r, k))
+    col = pl.BlockSpec((block_r, 1), lambda r, k: (r, 0))
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, a_plus=a_plus, a_minus=a_minus,
+            w_min=w_min, w_max=w_max,
+        ),
+        grid=grid,
+        in_specs=[vec, vec, panel, panel, panel, col, col],
+        out_specs=panel,
+        out_shape=jax.ShapeDtypeStruct((R, K), weights.dtype),
+        interpret=interpret,
+    )(
+        pre_trace.astype(weights.dtype),
+        pre_spike.astype(weights.dtype),
+        cols,
+        weights,
+        valid,
+        post_trace.astype(weights.dtype)[:, None],
+        post_spike.astype(weights.dtype)[:, None],
+    )

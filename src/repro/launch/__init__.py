@@ -1,0 +1,4 @@
+"""Launchers: production meshes, multi-pod dry-run, training/simulation
+drivers.  NOTE: never import .dryrun from library code — it sets
+XLA_FLAGS at module scope (512 host devices) by design."""
+from .mesh import make_production_mesh, make_snn_mesh  # noqa: F401

@@ -1,0 +1,384 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_XLA_EXTRA", ""
+) + " --xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh, with zero real allocation
+(ShapeDtypeStruct inputs), and capture:
+
+  * ``compiled.memory_analysis()``  — bytes/device (does it fit 16 GB HBM)
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline
+  * collective bytes parsed from the post-SPMD HLO (hlo_analysis)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      [--arch kimi-k2-1t-a32b] [--shape train_4k] [--mesh single|multi] \
+      [--opt adamw|adamw8bit] [--out results/dryrun] [--skip-existing]
+
+NOTE the module-level XLA_FLAGS line above: it MUST precede any jax import
+(jax locks the device count on first init), which is why this module never
+gets imported by tests/benches — they see 1 device.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, cells_for, get_config
+from ..models import build_model
+from ..sharding.policy import make_policy, param_shardings, policy_context
+from ..train.optimizer import AdamW
+from ..train.train_loop import make_train_step
+from ..train.serve import make_serve_step, make_prefill_fn
+from .hlo_analysis import (
+    analyze_hlo, roofline_terms, dominant_term, PEAK_FLOPS,
+)
+from .mesh import make_production_mesh
+from .specs import (
+    input_specs, input_shardings, cache_specs, cache_shardings,
+    params_specs, opt_specs, opt_shardings, batch_spec,
+)
+
+
+def _coerce(v: str):
+    for fn in (int, float):
+        try:
+            return fn(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return v == "True"
+    return v
+
+
+def parse_overrides(s: Optional[str]) -> Dict[str, Any]:
+    if not s:
+        return {}
+    return {
+        kv.split("=", 1)[0]: _coerce(kv.split("=", 1)[1])
+        for kv in s.split(",")
+    }
+
+
+def lower_cell(
+    arch: str,
+    shape: str,
+    *,
+    multi_pod: bool = False,
+    opt_name: str = "adamw",
+    seq_shard: bool = True,
+    donate: bool = True,
+    overrides: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Lower+compile one cell; returns the analysis record."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = SHAPES[shape]
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return dict(arch=arch, shape=shape, skipped=True,
+                    reason="full attention: no sub-quadratic path")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    pol = make_policy(mesh, cfg, cell.global_batch, seq_shard=seq_shard)
+    model = build_model(cfg)
+    p_sds = params_specs(model)
+    p_shard = param_shardings(pol, p_sds)
+    data_sds = input_specs(cfg, cell)
+    data_shard = input_shardings(cfg, cell, pol)
+    t0 = time.time()
+
+    if cell.kind == "train":
+        optimizer = AdamW(
+            lr=3e-4, quantize_moments=(opt_name == "adamw8bit")
+        )
+        o_sds = opt_specs(optimizer, p_sds)
+        o_shard = opt_shardings(o_sds, p_shard, pol, optimizer)
+        step = make_train_step(model, cfg, optimizer, policy=pol)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, data_shard),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        with mesh:
+            lowered = jitted.lower(p_sds, o_sds, data_sds)
+    elif cell.kind == "prefill":
+        prefill = make_prefill_fn(model, cfg, policy=pol,
+                                  cache_len=cell.seq_len)
+        extras = {k: v for k, v in data_sds.items() if k != "tokens"}
+        jitted = jax.jit(
+            prefill,
+            in_shardings=(p_shard, data_shard["tokens"],
+                          {k: data_shard[k] for k in extras} or None),
+            static_argnums=(),
+        )
+        with mesh:
+            lowered = jitted.lower(
+                p_sds, data_sds["tokens"], extras or None
+            )
+    else:  # decode
+        c_sds = cache_specs(model, cfg, cell)
+        c_shard = cache_shardings(c_sds, cfg, cell, pol)
+        serve = make_serve_step(model, cfg, policy=pol)
+        jitted = jax.jit(
+            serve,
+            in_shardings=(p_shard, c_shard, data_shard["token"],
+                          data_shard["pos"]),
+            donate_argnums=(1,) if donate else (),
+        )
+        with mesh:
+            lowered = jitted.lower(
+                p_sds, c_sds, data_sds["token"], data_sds["pos"]
+            )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo)
+    flops_dev = float(stats.flops)
+    bytes_dev = float(stats.hbm_bytes)
+    terms = roofline_terms(flops_dev, bytes_dev, stats.collective_bytes)
+
+    n_dense = cfg.n_params()
+    n_active = cfg.n_active_params()
+    if cell.kind == "train":
+        model_flops = 6 * n_active * cell.global_batch * cell.seq_len
+    elif cell.kind == "prefill":
+        model_flops = 2 * n_active * cell.global_batch * cell.seq_len
+    else:
+        model_flops = 2 * n_active * cell.global_batch  # one token
+    model_flops_dev = model_flops / chips
+
+    mem_stats = {}
+    if mem is not None:
+        for attr in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_stats[attr] = int(v)
+
+    rec = dict(
+        arch=arch, shape=shape,
+        mesh="2x16x16" if multi_pod else "16x16",
+        chips=chips,
+        kind=cell.kind,
+        opt=opt_name if cell.kind == "train" else None,
+        seq_shard=seq_shard,
+        batch_axes=list(pol.batch_axes),
+        fsdp=pol.fsdp,
+        n_params=n_dense,
+        n_active_params=n_active,
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collective_bytes=stats.collective_bytes,
+        collective_by_kind=stats.collective_bytes_by_kind,
+        collective_counts=stats.collective_counts,
+        largest_collectives=stats.largest_collectives[:5],
+        collective_text_bytes=stats.collective_text_bytes,
+        n_whiles=stats.n_whiles,
+        max_loop_multiplier=stats.max_multiplier,
+        xla_cost_flops=float(cost.get("flops", 0.0)),
+        xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+        roofline=terms,
+        dominant=dominant_term(terms),
+        model_flops_per_device=model_flops_dev,
+        useful_flops_ratio=(
+            model_flops_dev / flops_dev if flops_dev else None
+        ),
+        memory=mem_stats,
+        overrides=overrides or {},
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        skipped=False,
+    )
+    return rec
+
+
+def lower_snn_cell(
+    *,
+    k: int = 256,
+    scale: float = 0.5,
+    exchange: str = "dense",
+    steps: int = 2,
+    cap_frac: float = 0.25,
+) -> Dict[str, Any]:
+    """The paper's own system at pod scale: the shard_map'd microcircuit
+    simulator lowered over one dCSR partition per chip (k=256), with the
+    spike exchange (dense all-gather vs compressed index) visible in the
+    collective term."""
+    from ..core.partition import rcb_partition
+    from ..snn import DistSimulator, SimConfig, microcircuit, to_dcsr
+    from .mesh import make_snn_mesh
+
+    net = microcircuit(scale=scale, seed=0)
+    d = to_dcsr(net, assignment=rcb_partition(net.coords, k),
+                uniform=True)
+    sim = DistSimulator(
+        d, SimConfig(exchange=exchange, align_k=128,
+                     index_cap_frac=cap_frac),
+        mesh=make_snn_mesh(k),
+    )
+    t0 = time.time()
+    lowered = sim.lower(steps)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    stats = analyze_hlo(compiled.as_text())
+    # the synaptic kernel is gather-multiply-accumulate (no dot ops): the
+    # compute term is analytic — 2 flops per padded ELL slot per step
+    slots = sum(
+        int(np.prod(c.shape)) for c in sim.stacked.cols
+    )
+    flops_dev = max(stats.flops, 2.0 * slots / k)
+    terms = roofline_terms(
+        flops_dev, stats.hbm_bytes / steps,
+        stats.collective_bytes / steps,
+    )
+    mem = compiled.memory_analysis()
+    return dict(
+        arch="snn-microcircuit", shape=f"k{k}_scale{scale}_{exchange}",
+        mesh=f"{k}x1", chips=k, kind="simulate",
+        n=d.n, m=d.m, steps=steps,
+        ell_slots=slots,
+        flops_per_device=flops_dev,
+        bytes_per_device=stats.hbm_bytes / steps,
+        collective_bytes=stats.collective_bytes / steps,
+        collective_by_kind={
+            kk: v / steps for kk, v in
+            stats.collective_bytes_by_kind.items()
+        },
+        roofline=terms,
+        dominant=dominant_term(terms),
+        memory={
+            a: int(getattr(mem, a))
+            for a in ("argument_size_in_bytes", "temp_size_in_bytes")
+            if mem is not None and getattr(mem, a, None) is not None
+        },
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        skipped=False,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--opt", default="adamw",
+                    choices=["adamw", "adamw8bit"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument(
+        "--override", default="",
+        help="comma-separated ArchConfig overrides, e.g. "
+             "'remat=True,ctx_parallel=True,scan_unroll=16'",
+    )
+    ap.add_argument("--snn", action="store_true",
+                    help="dry-run the distributed SNN simulator instead")
+    ap.add_argument("--snn-k", type=int, default=256)
+    ap.add_argument("--snn-scale", type=float, default=0.5)
+    ap.add_argument("--snn-exchange", default="dense")
+    ap.add_argument("--snn-cap", type=float, default=0.25)
+    args = ap.parse_args()
+    overrides = parse_overrides(args.override)
+
+    if args.snn:
+        os.makedirs(args.out, exist_ok=True)
+        rec = lower_snn_cell(
+            k=args.snn_k, scale=args.snn_scale,
+            exchange=args.snn_exchange, cap_frac=args.snn_cap,
+        )
+        name = f"snn__{rec['shape']}" + (
+            f"_cap{args.snn_cap}" if args.snn_exchange == "index" else ""
+        )
+        with open(os.path.join(args.out, name + ".json"), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        r = rec["roofline"]
+        print(
+            f"[snn-dryrun] {name} n={rec['n']} m={rec['m']} "
+            f"compile={rec['compile_s']}s compute={r['compute_s']:.2e} "
+            f"mem={r['memory_s']:.2e} coll={r['collective_s']:.2e}"
+        )
+        return
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    meshes = (
+        [False] if args.mesh == "single"
+        else [True] if args.mesh == "multi" else [False, True]
+    )
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        cells = (
+            [SHAPES[args.shape]] if args.shape else list(cells_for(cfg))
+        )
+        for cell in cells:
+            for mp in meshes:
+                mtag = "multi" if mp else "single"
+                tag = f"_{args.tag}" if args.tag else ""
+                name = f"{arch}__{cell.name}__{mtag}{tag}"
+                path = os.path.join(args.out, name + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    try:
+                        with open(path) as f:
+                            prev = json.load(f)
+                        if "error" not in prev:
+                            print(f"[skip-existing] {name}")
+                            continue
+                    except Exception:
+                        pass
+                print(f"[dryrun] {name} ...", flush=True)
+                try:
+                    rec = lower_cell(
+                        arch, cell.name, multi_pod=mp, opt_name=args.opt,
+                        seq_shard=not args.no_seq_shard,
+                        overrides=overrides,
+                    )
+                    rec["tag"] = args.tag
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append(name)
+                    rec = dict(arch=arch, shape=cell.name, mesh=mtag,
+                               error=str(e)[:2000], skipped=False)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+                if rec.get("skipped"):
+                    print(f"  -> skipped ({rec['reason']})")
+                elif "error" in rec:
+                    print("  -> ERROR")
+                else:
+                    r = rec["roofline"]
+                    print(
+                        f"  -> ok compile={rec['compile_s']}s "
+                        f"compute={r['compute_s']:.2e}s "
+                        f"mem={r['memory_s']:.2e}s "
+                        f"coll={r['collective_s']:.2e}s "
+                        f"dom={rec['dominant']}"
+                    )
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

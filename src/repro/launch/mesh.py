@@ -1,0 +1,18 @@
+"""Production meshes.  A FUNCTION, not a module-level constant: importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ("data","model"); multi-pod adds a leading
+    "pod" axis (2 pods = 512 chips, pure-DP across pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_snn_mesh(k: int):
+    """1D partition mesh for the distributed SNN simulator."""
+    return jax.make_mesh((k,), ("parts",))

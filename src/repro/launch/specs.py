@@ -1,0 +1,164 @@
+"""ShapeDtypeStruct input specs + sharding trees for every (arch x shape)
+cell — the dry-run contract: weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..models import build_model
+from ..sharding.policy import Policy, param_shardings, _div
+from ..train.optimizer import AdamW
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_spec(pol: Policy) -> Tuple:
+    return tuple(pol.batch_axes) if pol.batch_axes else None
+
+
+# ---------------------------------------------------------------------------
+# Input specs per cell kind
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Model *data* inputs (tokens / frames / img_embed / token+pos) as
+    ShapeDtypeStructs."""
+    B, S = cell.global_batch, cell.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cell.kind in ("train", "prefill"):
+        out: Dict[str, Any] = {}
+        if cfg.encdec:
+            out["frames"] = sds((B, S, cfg.d_model), cdt)
+            out["tokens"] = sds((B, S), jnp.int32)
+        elif cfg.n_img_tokens:
+            out["tokens"] = sds((B, S - cfg.n_img_tokens), jnp.int32)
+            out["img_embed"] = sds((B, cfg.n_img_tokens, cfg.d_model), cdt)
+        else:
+            out["tokens"] = sds((B, S), jnp.int32)
+        return out
+    # decode: one token against a seq_len cache
+    return dict(
+        token=sds((B, 1), jnp.int32),
+        pos=sds((), jnp.int32),
+    )
+
+
+def input_shardings(cfg: ArchConfig, cell: ShapeCell, pol: Policy):
+    b = batch_spec(pol)
+    mesh = pol.mesh
+    ns = lambda spec: NamedSharding(mesh, spec)
+    specs = input_specs(cfg, cell)
+    out = {}
+    for k, v in specs.items():
+        if k == "pos":
+            out[k] = ns(P())
+        elif v.ndim >= 2:
+            out[k] = ns(P(b, *([None] * (v.ndim - 1))))
+        else:
+            out[k] = ns(P())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (decode cells)
+# ---------------------------------------------------------------------------
+
+def cache_specs(model, cfg: ArchConfig, cell: ShapeCell):
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.encdec:
+        fn = lambda: model.init_cache(B, S, S)
+    else:
+        fn = lambda: model.init_cache(B, S)
+    return jax.eval_shape(fn)
+
+
+def cache_shardings(cache_sds, cfg: ArchConfig, cell: ShapeCell,
+                    pol: Policy):
+    """KV caches: batch over the batch axes; the *sequence* dim over
+    "model" when divisible (keeps 32k caches on-chip — decode attention
+    then pays an all-gather, measured in §Roofline and attacked in §Perf).
+    Recurrent states: batch over batch axes only."""
+    mesh = pol.mesh
+    b = batch_spec(pol)
+    ms = pol.model_size
+    B = cell.global_batch
+
+    def leaf_spec(x):
+        shp = x.shape
+        nd = len(shp)
+        spec = [None] * nd
+        # batch dim: first dim equal to the cell's global batch (cache
+        # leaves are (B, ...), (L, B, ...) or (G, B, ...) stacked)
+        if b is not None:
+            for i, d in enumerate(shp):
+                if d == B:
+                    spec[i] = b
+                    break
+        # KV cache (..., S_cache, KV, hd): shard S_cache over model
+        if nd >= 3:
+            s_dim = nd - 3
+            if spec[s_dim] is None and shp[s_dim] > 1 and _div(
+                shp[s_dim], ms
+            ):
+                spec[s_dim] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf_spec, cache_sds)
+
+
+# ---------------------------------------------------------------------------
+# Param / optimizer-state shardings
+# ---------------------------------------------------------------------------
+
+def params_specs(model) -> Any:
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def opt_specs(optimizer, params_sds) -> Any:
+    return jax.eval_shape(optimizer.init, params_sds)
+
+
+def opt_shardings(opt_sds, p_shard, pol: Policy, optimizer) -> Any:
+    """Adam m/v inherit the param sharding; int8-quantized blocks shard
+    their leading (block) dim as widely as divisibility allows."""
+    mesh = pol.mesh
+
+    def q8_spec(x):
+        # quantized moments are (NB, BLOCK) or (L, NB, BLOCK); shard the
+        # widest divisible leading dim as broadly as possible
+        for dim in range(max(x.ndim - 1, 1)):
+            for axes in (("pod", "data", "model"), ("data", "model"),
+                         ("data",), ("model",)):
+                if all(a in mesh.shape for a in axes):
+                    size = int(np.prod([mesh.shape[a] for a in axes]))
+                    if _div(x.shape[dim], size):
+                        spec = [None] * x.ndim
+                        spec[dim] = axes
+                        return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    if getattr(optimizer, "quantize_moments", False):
+        def map_tree(sub):
+            # sub mirrors params but each leaf is a dict(q, scale)
+            return jax.tree.map(q8_spec, sub)
+
+        return dict(
+            m=map_tree(opt_sds["m"]),
+            v=map_tree(opt_sds["v"]),
+            count=NamedSharding(mesh, P()),
+        )
+    return dict(
+        m=p_shard,
+        v=p_shard,
+        count=NamedSharding(mesh, P()),
+    ) if "v" in opt_sds else dict(
+        mu=p_shard, count=NamedSharding(mesh, P())
+    )

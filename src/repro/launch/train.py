@@ -1,0 +1,113 @@
+"""Production training launcher.
+
+Single-process drives the whole mesh here (jax CPU/TPU pod slice); on a
+real multi-host pod each process runs this same script (jax.distributed
+handles device visibility) — data loading is host-sharded by
+(host_id, n_hosts) exactly like the dCSR partition files.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 100 --reduced --ckpt /tmp/ck
+
+Fault tolerance: auto-resume from the latest *valid* checkpoint (corrupt
+or torn steps skipped), async checkpoint writes, SIGTERM-graceful final
+save (preemption handling).
+"""
+import argparse
+import signal
+import sys
+
+import jax
+
+from ..configs import get_config
+from ..io import CheckpointManager
+from ..models import build_model
+from ..train import (
+    AdamW, DataConfig, batch_iterator, cosine_schedule, fit,
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--opt8bit", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-scale)")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    opt = AdamW(
+        lr=cosine_schedule(args.lr, warmup=min(50, args.steps // 10 + 1),
+                           total=args.steps),
+        quantize_moments=args.opt8bit,
+    )
+    dc = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.global_batch,
+        n_hosts=jax.process_count(), host_id=jax.process_index(),
+    )
+
+    cm = params = opt_state = None
+    start = 0
+    if args.ckpt:
+        cm = CheckpointManager(args.ckpt)
+        try:
+            p_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            like = dict(params=p_sds,
+                        opt_state=jax.eval_shape(opt.init, p_sds))
+            tree, start = cm.restore_latest_valid(like=like)
+            import jax.numpy as jnp
+            params = jax.tree.map(jnp.asarray, tree["params"])
+            opt_state = jax.tree.map(jnp.asarray, tree["opt_state"])
+            print(f"[train] resumed from step {start}", flush=True)
+        except FileNotFoundError:
+            print("[train] fresh start", flush=True)
+
+    stop = {"now": False}
+
+    def on_term(sig, frame):  # preemption: finish step, save, exit
+        stop["now"] = True
+
+    signal.signal(signal.SIGTERM, on_term)
+
+    state = {"params": params, "opt_state": opt_state, "step": start}
+
+    def log_fn(msg):
+        print(f"[train] {msg}", flush=True)
+
+    def guarded_iter():
+        for step, batch in batch_iterator(dc, start_step=start):
+            if stop["now"]:
+                log_fn(f"SIGTERM: checkpointing at step {step} and "
+                       "exiting")
+                if cm is not None:
+                    cm.save(step, dict(params=state["params"],
+                                       opt_state=state["opt_state"]),
+                            wait=True)
+                sys.exit(0)
+            yield step, batch
+
+    params, opt_state, metrics = fit(
+        model, cfg, opt, guarded_iter(), steps=args.steps,
+        params=params, opt_state=opt_state, ckpt_manager=cm,
+        ckpt_every=args.ckpt_every, log_fn=log_fn,
+    )
+    state["params"], state["opt_state"] = params, opt_state
+    if cm is not None:
+        cm.save(args.steps, dict(params=params, opt_state=opt_state),
+                wait=True)
+        cm.close()
+    log_fn("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: generic decoder LM (attn/local_attn/rglru/mlstm/slstm blocks,
+dense or MoE FFN), enc-dec, VLM."""
+from .transformer import DecoderLM  # noqa: F401
+from .encdec import EncDecLM  # noqa: F401
+from .vlm import VLM  # noqa: F401
+from .zoo import build_model  # noqa: F401

@@ -1,0 +1,177 @@
+"""Whisper-style encoder-decoder backbone (conv/mel frontend is a STUB per
+the assignment: the encoder consumes precomputed frame embeddings).
+
+Encoder: learned positions + bidirectional self-attention layers.
+Decoder: learned positions + (causal self-attn + cross-attn + MLP) layers,
+scan-stacked.  Decode mode caches self-attn KV per position and reuses the
+cross-attn KV computed once from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.policy import constrain
+from . import layers as L
+
+
+def _enc_layer_init(key, cfg, dt):
+    ks = jax.random.split(key, 2)
+    return dict(
+        ln1=L.norm_init(cfg.norm, cfg.d_model, dt),
+        attn=L.attention_init(ks[0], cfg, dt),
+        ln2=L.norm_init(cfg.norm, cfg.d_model, dt),
+        mlp=L.mlp_init(ks[1], cfg, dt),
+    )
+
+
+def _dec_layer_init(key, cfg, dt):
+    ks = jax.random.split(key, 3)
+    return dict(
+        ln1=L.norm_init(cfg.norm, cfg.d_model, dt),
+        self_attn=L.attention_init(ks[0], cfg, dt),
+        ln_x=L.norm_init(cfg.norm, cfg.d_model, dt),
+        cross_attn=L.attention_init(ks[1], cfg, dt),
+        ln2=L.norm_init(cfg.norm, cfg.d_model, dt),
+        mlp=L.mlp_init(ks[2], cfg, dt),
+    )
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, cfg.enc_layers + cfg.n_layers + 4)
+        enc_layers = [
+            _enc_layer_init(ks[i], cfg, dt) for i in range(cfg.enc_layers)
+        ]
+        dec_layers = [
+            _dec_layer_init(ks[cfg.enc_layers + i], cfg, dt)
+            for i in range(cfg.n_layers)
+        ]
+        return dict(
+            emb=L.embed_init(ks[-1], cfg, dt),
+            enc_pos=L._init(ks[-2], (cfg.max_seq, cfg.d_model), 0.02, dt),
+            dec_pos=L._init(ks[-3], (cfg.max_seq, cfg.d_model), 0.02, dt),
+            enc_layers=jax.tree.map(lambda *x: jnp.stack(x), *enc_layers),
+            dec_layers=jax.tree.map(lambda *x: jnp.stack(x), *dec_layers),
+            enc_ln_f=L.norm_init(cfg.norm, cfg.d_model, dt),
+            ln_f=L.norm_init(cfg.norm, cfg.d_model, dt),
+        )
+
+    # -- encoder -----------------------------------------------------------
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """frames: (B, S_enc, d) stub frontend output."""
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        S = frames.shape[1]
+        x = frames.astype(cdt) + params["enc_pos"][:S].astype(cdt)
+        x = constrain(x, "btd")
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+        def body(x, lp):
+            h = L.norm_apply(cfg.norm, lp["ln1"], x)
+            out, _ = L.attention_apply(
+                lp["attn"], h, cfg, positions=pos, causal=False
+            )
+            x = x + out
+            h = L.norm_apply(cfg.norm, lp["ln2"], x)
+            x = x + L.mlp_apply(lp["mlp"], h, cfg)
+            return constrain(x, "btd"), None
+
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return L.norm_apply(cfg.norm, params["enc_ln_f"], x)
+
+    # -- caches --------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int, enc_len: int) -> Dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        Ld = cfg.n_layers
+        z = lambda s: jnp.zeros((Ld, batch, s, KV, hd), dt)
+        return dict(
+            self_k=z(seq_len), self_v=z(seq_len),
+            cross_k=z(enc_len), cross_v=z(enc_len),
+        )
+
+    # -- decoder ---------------------------------------------------------------
+    def decode(
+        self,
+        params,
+        tokens: jnp.ndarray,  # (B, S)
+        *,
+        enc_out: Optional[jnp.ndarray] = None,  # required at prefill
+        cache: Optional[Dict] = None,
+        cache_pos=None,
+    ) -> Tuple[jnp.ndarray, Optional[Dict], Dict]:
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        B, S = tokens.shape
+        x = L.embed_lookup(params["emb"], tokens, cfg)
+        if cache_pos is None:
+            x = x + params["dec_pos"][:S].astype(cdt)
+            positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        else:
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["dec_pos"], cache_pos, 1, axis=0
+            ).astype(cdt)
+            positions = jnp.full((B, 1), cache_pos, jnp.int32)
+        x = constrain(x, "btd")
+
+        def body(x, xs):
+            lp, sk, sv, ck, cv = xs
+            h = L.norm_apply(cfg.norm, lp["ln1"], x)
+            c_self = (dict(k=sk, v=sv) if sk is not None else None)
+            out, c_self = L.attention_apply(
+                lp["self_attn"], h, cfg, positions=positions,
+                causal=True, cache=c_self, cache_pos=cache_pos,
+            )
+            x = x + out
+            h = L.norm_apply(cfg.norm, lp["ln_x"], x)
+            c_cross = (dict(k=ck, v=cv) if ck is not None else None)
+            out, c_cross = L.attention_apply(
+                lp["cross_attn"], h, cfg, positions=positions,
+                causal=False, cache=c_cross, cache_pos=cache_pos,
+                kv_source=enc_out, cross=True,
+            )
+            x = x + out
+            h = L.norm_apply(cfg.norm, lp["ln2"], x)
+            x = x + L.mlp_apply(lp["mlp"], h, cfg)
+            ys = None
+            if c_self is not None:
+                ys = (c_self["k"], c_self["v"], c_cross["k"], c_cross["v"])
+            return constrain(x, "btd"), ys
+
+        xs = (
+            params["dec_layers"],
+            cache["self_k"] if cache is not None else None,
+            cache["self_v"] if cache is not None else None,
+            cache["cross_k"] if cache is not None else None,
+            cache["cross_v"] if cache is not None else None,
+        )
+        x, ys = jax.lax.scan(body, x, xs)
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(
+                self_k=ys[0], self_v=ys[1], cross_k=ys[2], cross_v=ys[3]
+            )
+        x = L.norm_apply(cfg.norm, params["ln_f"], x)
+        logits = L.logits_apply(params["emb"], x, cfg)
+        return logits, new_cache, {}
+
+    def apply(self, params, tokens, *, frames=None, enc_out=None,
+              cache=None, cache_pos=None, **_):
+        """Unified train/serve entry: train/prefill passes frames (encoder
+        runs); decode passes cache with precomputed cross KV."""
+        if enc_out is None and frames is not None:
+            enc_out = self.encode(params, frames)
+        return self.decode(
+            params, tokens, enc_out=enc_out, cache=cache,
+            cache_pos=cache_pos,
+        )

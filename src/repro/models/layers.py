@@ -1,0 +1,341 @@
+"""Foundational model layers (functional: init_* return param pytrees,
+apply functions are pure).
+
+Conventions:
+  * params are stored in ``cfg.param_dtype``; compute casts to
+    ``cfg.compute_dtype`` (norms and softmax accumulate in fp32).
+  * attention projections use flattened (d, H*hd) weights — every assigned
+    arch has H*hd % 16 == 0, so the TP policy can always shard the
+    projection even when the head count can't be.
+  * sharding hints go through :func:`repro.sharding.policy.constrain`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.policy import constrain
+
+
+def _init(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32
+    )).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, bias=False, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": _init(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, cdtype):
+    y = x.astype(cdtype) @ p["w"].astype(cdtype)
+    if "b" in p:
+        y = y + p["b"].astype(cdtype)
+    return y
+
+
+# -- norms ------------------------------------------------------------------
+
+def norm_init(kind, d, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["nbias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(kind, p, x):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(
+            jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6
+        )
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = y * p["scale"].astype(jnp.float32)
+    if "nbias" in p:
+        y = y + p["nbias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -- rotary embeddings -------------------------------------------------------
+
+def rope(x, positions, theta):
+    """x: (B, S, H, hd), positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# -- attention ---------------------------------------------------------------
+
+def attention_init(key, cfg, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return dict(
+        wq=dense_init(ks[0], d, H * hd, dtype, bias=cfg.qkv_bias),
+        wk=dense_init(ks[1], d, KV * hd, dtype, bias=cfg.qkv_bias),
+        wv=dense_init(ks[2], d, KV * hd, dtype, bias=cfg.qkv_bias),
+        wo=dense_init(ks[3], H * hd, d, dtype, scale=(H * hd) ** -0.5),
+    )
+
+
+def _mask_bias(qpos, kpos, causal, window, prefix_len, dtype):
+    """(…, Sq, Sk) additive bias: 0 allowed / -inf masked."""
+    ok = jnp.ones(qpos.shape[:-1] + (qpos.shape[-1], kpos.shape[-1]),
+                  bool) if False else None
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    allowed = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if causal:
+        allowed = k <= q
+        if prefix_len:
+            allowed = allowed | ((q < prefix_len) & (k < prefix_len))
+    if window:
+        allowed = allowed & (k > q - window)
+    return jnp.where(allowed, 0.0, -1e30).astype(dtype)
+
+
+def sdpa(q, k, v, *, causal, window=0, prefix_len=0, q_offset=0,
+         k_valid=None):
+    """Full (unblocked) scaled dot-product attention with GQA.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).  fp32 softmax.
+    ``k_valid``: optional number of valid cache slots (decode).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qh.astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) * (hd ** -0.5)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[1])
+    bias = _mask_bias(qpos, kpos, causal, window, prefix_len, jnp.float32)
+    scores = scores + bias
+    if k_valid is not None:
+        scores = jnp.where(
+            kpos[None, None, None, None, :] < k_valid, scores, -1e30
+        )
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal, window=0, prefix_len=0,
+                      q_offset=0, block_q=512, block_k=1024):
+    """Flash-style online-softmax attention: O(S) memory, double scan over
+    query/key blocks.  The TPU-native long-context path (no (S, S) score
+    materialization)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (Sq + pad_q) // block_q, (Sk + pad_k) // block_k
+    qs = q.reshape(B, nq, block_q, KV, G, hd).astype(jnp.float32)
+    ks = k.reshape(B, nk, block_k, KV, hd).astype(jnp.float32)
+    vs = v.reshape(B, nk, block_k, KV, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+
+    def q_block(qi, q_blk):
+        qpos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk = ks[:, ki]
+            v_blk = vs[:, ki]
+            kpos = ki * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k_blk) * scale
+            bias = _mask_bias(qpos, kpos, causal, window, prefix_len,
+                              jnp.float32)
+            kv_pad_ok = (kpos < Sk)
+            s = s + bias + jnp.where(kv_pad_ok, 0.0, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, v_blk
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, block_q), -1e30)
+        l0 = jnp.zeros((B, KV, G, block_q))
+        a0 = jnp.zeros((B, KV, G, block_q, hd))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(nk)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B, KV, G, block_q, hd)
+
+    outs = jax.lax.map(
+        lambda qi: q_block(qi, qs[:, qi]), jnp.arange(nq)
+    )  # (nq, B, KV, G, block_q, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * block_q, KV * G, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def _prefill_cache_write(k, cache_k, window):
+    """Write prefilled keys/values into a (possibly ring-buffered) cache."""
+    B, S = k.shape[0], k.shape[1]
+    Sc = cache_k.shape[1]
+    if not window:
+        if S == Sc:
+            return k.astype(cache_k.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), 0, axis=1
+        )
+    # local-attention ring: keep last `window` entries at slot = pos % window
+    tail = k[:, -Sc:] if S > Sc else k
+    start = max(S - Sc, 0)
+    slots = (start + np.arange(tail.shape[1])) % Sc
+    return jnp.asarray(cache_k).at[:, slots].set(
+        tail.astype(cache_k.dtype)
+    )
+
+
+def attention_apply(
+    p, x, cfg, *, positions, causal=True, window=0, prefix_len=0,
+    cache: Optional[Dict] = None, cache_pos=None, kv_source=None,
+    cross=False, use_chunked: Optional[bool] = None,
+):
+    """Self/cross attention with optional KV cache.
+
+    cache: dict(k=(B, S_cache, KV, hd), v=...).  Three cache modes:
+      * prefill (cache given, cache_pos None): fill cache, full attention;
+      * decode (cache_pos given, S == 1): append at ``pos`` (ring slot
+        ``pos %% window`` for local attention), mask by ``k_valid``;
+      * cross decode (``cross=True``): reuse cached encoder KV untouched.
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(p["wq"], x, cdt).reshape(B, S, H, hd)
+    if cfg.use_rope and not cross:
+        q = rope(q, positions, cfg.rope_theta)
+    q = constrain(q, "bthd")
+
+    k_valid = None
+    decode = cache_pos is not None
+    if cross and decode:
+        k, v = cache["k"], cache["v"]
+        k_valid = jnp.asarray(k.shape[1])
+    else:
+        kv_in = x if kv_source is None else kv_source
+        k = dense(p["wk"], kv_in, cdt).reshape(B, -1, KV, hd)
+        v = dense(p["wv"], kv_in, cdt).reshape(B, -1, KV, hd)
+        if cfg.use_rope and not cross and kv_source is None:
+            k = rope(k, positions, cfg.rope_theta)
+        if cache is not None and not decode:  # prefill
+            cache = dict(
+                cache,
+                k=_prefill_cache_write(k, cache["k"], window),
+                v=_prefill_cache_write(v, cache["v"], window),
+            )
+        elif decode:  # append one token
+            Sc = cache["k"].shape[1]
+            slot = jnp.mod(cache_pos, Sc) if window else cache_pos
+            k = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=1
+            )
+            v = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=1
+            )
+            cache = dict(cache, k=k, v=v)
+            k_valid = jnp.minimum(cache_pos + 1, Sc)
+
+    if decode:
+        out = sdpa(q, k, v, causal=False, window=0, k_valid=k_valid)
+    else:
+        if use_chunked is None:
+            use_chunked = S > 2048
+        attn = chunked_attention if use_chunked else sdpa
+        out = attn(
+            q, k, v, causal=causal and kv_source is None,
+            window=window, prefix_len=prefix_len,
+        )
+    y = dense(p["wo"], out.reshape(B, S, H * hd), cdt)
+    return constrain(y, "btd"), cache
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def mlp_init(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return dict(
+            w_in=dense_init(ks[0], d, ff, dtype),
+            w_gate=dense_init(ks[1], d, ff, dtype),
+            w_out=dense_init(ks[2], ff, d, dtype, scale=ff ** -0.5),
+        )
+    return dict(
+        w_in=dense_init(ks[0], d, ff, dtype),
+        w_out=dense_init(ks[2], ff, d, dtype, scale=ff ** -0.5),
+    )
+
+
+def mlp_apply(p, x, cfg):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = dense(p["w_in"], x, cdt)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(dense(p["w_gate"], x, cdt)) * h
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(dense(p["w_gate"], x, cdt)) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "btf")
+    return constrain(dense(p["w_out"], h, cdt), "btd")
+
+
+# -- embeddings ---------------------------------------------------------------
+
+def embed_init(key, cfg, dtype):
+    p = dict(embed=_init(key, (cfg.vocab_size, cfg.d_model), 1.0, dtype))
+    if not cfg.tie_embeddings:
+        p["out_head"] = _init(
+            jax.random.fold_in(key, 1), (cfg.vocab_size, cfg.d_model),
+            cfg.d_model ** -0.5, dtype,
+        )
+    return p
+
+
+def embed_lookup(p, tokens, cfg):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return jnp.take(p["embed"], tokens, axis=0).astype(cdt)
+
+
+def logits_apply(p, x, cfg):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    table = p["embed"] if cfg.tie_embeddings else p["out_head"]
+    logits = x.astype(cdt) @ table.astype(cdt).T
+    return constrain(logits, "logits")

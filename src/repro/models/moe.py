@@ -1,0 +1,245 @@
+"""Mixture-of-Experts FFN: group-wise capacity routing (GShard-style),
+scatter/gather dispatch, expert-parallel over the "model" mesh axis.
+
+Design notes:
+  * Routing positions are computed **per batch row** (group = row), so the
+    sort/cumsum machinery never crosses data shards — the GShard trick that
+    keeps routing local under SPMD.
+  * Experts shard over "model" when E %% model_size == 0 (kimi-k2: 384/16),
+    otherwise expert weights fall back to TP on the ff dim
+    (granite: 40 experts, ff-TP) — the policy is always total.
+  * This is the owner-computes-at-target principle of the paper's dCSR
+    (edges live with their target): tokens are moved to the expert's
+    partition, computed there, and combined back with a sum — the MoE
+    analogue of spike delivery.
+  * Over-capacity tokens are dropped (standard GShard semantics); the
+    fraction is returned in aux for monitoring.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..sharding.policy import constrain, current_policy
+from .layers import _init
+
+
+def moe_init(key, cfg, dtype):
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    p = dict(
+        w_router=_init(ks[0], (d, E), d ** -0.5, jnp.float32),
+        experts_in=_init(ks[1], (E, d, ff), d ** -0.5, dtype),
+        experts_out=_init(ks[3], (E, ff, d), ff ** -0.5, dtype),
+    )
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["experts_gate"] = _init(ks[2], (E, d, ff), d ** -0.5, dtype)
+    return p
+
+
+def _positions_in_expert(e_idx: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Per-row: position of each assignment within its expert's queue.
+    e_idx: (A,) expert ids; returns (A,) int32 ranks (stable order)."""
+    A = e_idx.shape[0]
+    order = jnp.argsort(e_idx, stable=True)
+    sorted_e = e_idx[order]
+    counts = jnp.bincount(e_idx, length=n_experts)
+    starts = jnp.cumsum(counts) - counts
+    ranks_sorted = jnp.arange(A, dtype=jnp.int32) - starts[sorted_e].astype(
+        jnp.int32
+    )
+    ranks = jnp.zeros((A,), jnp.int32).at[order].set(ranks_sorted)
+    return ranks
+
+
+def moe_apply(p: Dict, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, S, d) -> (out (B, S, d), aux).  Dispatches on
+    cfg.moe_impl: 'gspmd' (scatter/gather under auto-SPMD — the baseline)
+    or 'ep_shard_map' (explicit expert-parallel shard_map: each model rank
+    computes ONLY its experts on replicated tokens + one psum — the
+    owner-computes-at-target optimization, EXPERIMENTS §Perf)."""
+    pol = current_policy()
+    if (
+        cfg.moe_impl == "ep_shard_map"
+        and pol is not None
+        and "model" in pol.mesh.shape
+    ):
+        return _moe_apply_ep(p, x, cfg, pol)
+    return _moe_apply_gspmd(p, x, cfg)
+
+
+def _moe_apply_gspmd(p: Dict, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray,
+                                                            Dict]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cap = max(int(cfg.capacity_factor * S * k / E) + 1, 1)
+
+    logits = x.astype(jnp.float32) @ p["w_router"]  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    gates = gates / jnp.maximum(
+        gates.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    e_flat = idx.reshape(B, S * k)
+    pos = jax.vmap(lambda e: _positions_in_expert(e, E))(e_flat)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)  # cap -> dropped by scatter mode
+
+    # dispatch: (B, E, cap, d)
+    tok_of = jnp.repeat(
+        jnp.arange(S, dtype=jnp.int32)[None, :, None], k, axis=2
+    ).reshape(1, S * k) * jnp.ones((B, 1), jnp.int32)
+    xt = x.astype(cdt)
+    buf = jnp.zeros((B, E, cap, d), cdt)
+    gathered = jnp.take_along_axis(
+        xt, tok_of[..., None].astype(jnp.int32), axis=1
+    )  # (B, S*k, d)
+    buf = buf.at[
+        jnp.arange(B)[:, None], e_flat, pos_c
+    ].add(jnp.where(keep[..., None], gathered, 0), mode="drop")
+    buf = constrain(buf, "moe_becd")
+
+    # expert FFN: contract d per expert
+    h = jnp.einsum("becd,edf->becf", buf, p["experts_in"].astype(cdt))
+    if "experts_gate" in p:
+        g = jnp.einsum(
+            "becd,edf->becf", buf, p["experts_gate"].astype(cdt)
+        )
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("becf,efd->becd", h, p["experts_out"].astype(cdt))
+    out_buf = constrain(out_buf, "moe_becd")
+
+    # combine: gather back per assignment, weight by gate, sum over k
+    vals = out_buf[
+        jnp.arange(B)[:, None], e_flat, pos_c
+    ]  # (B, S*k, d)
+    vals = vals * (keep[..., None] * gates.reshape(B, S * k)[..., None]
+                   ).astype(cdt)
+    out = vals.reshape(B, S, k, d).sum(axis=2)
+
+    # aux: load-balance (GShard) + router z-loss + drop fraction
+    me = probs.mean(axis=(0, 1))  # (E,) mean prob
+    ce = jnp.zeros((E,), jnp.float32).at[e_flat.reshape(-1)].add(
+        1.0
+    ) / (B * S * k)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    drop_frac = 1.0 - keep.mean()
+    aux = dict(
+        moe_lb_loss=lb_loss, moe_z_loss=z_loss, moe_drop_frac=drop_frac
+    )
+    return constrain(out, "btd"), aux
+
+
+def _moe_apply_ep(p: Dict, x: jnp.ndarray, cfg, pol) -> Tuple[
+        jnp.ndarray, Dict]:
+    """Explicit expert parallelism over the "model" axis.
+
+    Tokens are replicated across model ranks (they already are between TP
+    regions); every rank routes identically but *dispatches only the
+    assignments owned by its local expert shard*, runs its E/ms experts,
+    and contributes a partial combine — summed with ONE psum of (B_l, S,
+    d) per layer.  Collective cost is that of a dense TP MLP, independent
+    of E — versus the GSPMD baseline where scatter/gather into the
+    E-sharded buffer degenerates into buffer-sized all-gathers."""
+    mesh = pol.mesh
+    ms = mesh.shape["model"]
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    # non-divisible expert counts (granite: 40 over 16): zero-pad the
+    # expert dimension — padded experts receive no assignments (the
+    # router has only E outputs), they just even out the shards
+    E_pad = ((E + ms - 1) // ms) * ms
+    E_l = E_pad // ms
+    cap = max(int(cfg.capacity_factor * S * k / E) + 1, 1)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    bspec = tuple(pol.batch_axes) if pol.batch_axes else None
+
+    def pad_e(w):
+        if E_pad == E:
+            return w
+        return jnp.pad(w, ((0, E_pad - E),) + ((0, 0),) * (w.ndim - 1))
+
+    has_gate = "experts_gate" in p
+
+    def local(x_l, w_router, w_in, w_gate, w_out):
+        rank = jax.lax.axis_index("model")
+        Bl = x_l.shape[0]
+        logits = x_l.astype(jnp.float32) @ w_router  # (Bl, S, E)
+        probs = jax.nn.softmax(logits, -1)
+        gates, idx = jax.lax.top_k(probs, k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        e_flat = idx.reshape(Bl, S * k)
+        pos = jax.vmap(lambda e: _positions_in_expert(e, E))(e_flat)
+        keep = pos < cap
+        # ownership: only assignments routed to this rank's experts
+        e_local = e_flat - rank * E_l
+        mine = (e_local >= 0) & (e_local < E_l) & keep
+        e_idx = jnp.where(mine, e_local, E_l)  # E_l -> dropped
+        pos_c = jnp.where(mine, pos, cap)
+        tok_of = jnp.tile(
+            jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)[None],
+            (Bl, 1),
+        )
+        xt = x_l.astype(cdt)
+        gathered = jnp.take_along_axis(
+            xt, tok_of[..., None], axis=1
+        )
+        buf = jnp.zeros((Bl, E_l, cap, d), cdt).at[
+            jnp.arange(Bl)[:, None], e_idx, pos_c
+        ].add(jnp.where(mine[..., None], gathered, 0), mode="drop")
+        h = jnp.einsum("becd,edf->becf", buf, w_in.astype(cdt))
+        if has_gate:
+            g = jnp.einsum("becd,edf->becf", buf, w_gate.astype(cdt))
+            act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+            h = act(g) * h
+        else:
+            h = jax.nn.gelu(h)
+        out_buf = jnp.einsum("becf,efd->becd", h, w_out.astype(cdt))
+        vals = out_buf[jnp.arange(Bl)[:, None], e_idx, pos_c]
+        vals = vals * (
+            mine[..., None] * gates.reshape(Bl, S * k)[..., None]
+        ).astype(cdt)
+        partial = vals.reshape(Bl, S, k, d).sum(2)
+        out = jax.lax.psum(partial, "model")
+        # aux: identical on every model rank; average over batch axes so
+        # the scalars are globally replicated (out_spec P())
+        me = probs.mean(axis=(0, 1))
+        ce = jnp.zeros((E,), jnp.float32).at[e_flat.reshape(-1)].add(
+            1.0
+        ) / (Bl * S * k)
+        lb = E * jnp.sum(me * ce)
+        zl = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+        dropf = 1.0 - keep.mean()
+        baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        if baxes:
+            lb = jax.lax.pmean(lb, baxes)
+            zl = jax.lax.pmean(zl, baxes)
+            dropf = jax.lax.pmean(dropf, baxes)
+        return out, lb, zl, dropf
+
+    w_gate = p.get("experts_gate", p["experts_in"])  # dummy if ungated
+    in_specs = (
+        P(bspec, None, None),  # tokens: batch-sharded, replicated on model
+        P(None, None),  # router replicated
+        P("model", None, None),  # experts_in
+        P("model", None, None),  # experts_gate (dummy alias if ungated)
+        P("model", None, None),  # experts_out
+    )
+    out, lb, zl, dropf = shard_map(
+        local, mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(P(bspec, None, None), P(), P(), P()),
+    )(x, p["w_router"], pad_e(p["experts_in"]), pad_e(w_gate),
+      pad_e(p["experts_out"]))
+    aux = dict(moe_lb_loss=lb, moe_z_loss=zl, moe_drop_frac=dropf)
+    return constrain(out, "btd"), aux

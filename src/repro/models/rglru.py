@@ -1,0 +1,119 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The temporal mixing block of the hybrid pattern: two parallel linear
+branches from the residual stream; branch 1 goes through a short causal
+depthwise conv and the Real-Gated Linear Recurrent Unit; branch 2 gates the
+output through GeLU; a final linear projects back to d_model.
+
+RG-LRU recurrence (elementwise over channels):
+
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+TPU adaptation: training/prefill evaluates the linear recurrence with
+``jax.lax.associative_scan`` (log-depth parallel scan — the natural TPU
+mapping of what the paper implements as a custom linear-scan GPU kernel);
+decode is a single fused elementwise update carrying h.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.policy import constrain
+from .layers import _init, dense_init, dense
+
+_C = 8.0
+_CONV_W = 4
+
+
+def rglru_init(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a ~ Uniform(0.9, 0.999) at r=1 (paper appendix)
+    u = jax.random.uniform(ks[0], (d,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return dict(
+        w_x=dense_init(ks[1], d, d, dtype),
+        w_gate_br=dense_init(ks[2], d, d, dtype),
+        conv_w=_init(ks[3], (_CONV_W, d), _CONV_W ** -0.5, dtype),
+        w_rec_gates=dense_init(ks[4], d, 2 * d, dtype),  # r and i gates
+        a_param=lam.astype(jnp.float32),
+        w_out=dense_init(ks[5], d, cfg.d_model, dtype,
+                         scale=d ** -0.5),
+    )
+
+
+def _causal_conv(x, w, state: Optional[jnp.ndarray]):
+    """Depthwise causal conv, width 4.  state: (B, W-1, d) trailing inputs
+    from the previous call (decode carries it)."""
+    B, S, d = x.shape
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((B, W - 1, d), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, d)
+    out = sum(
+        xp[:, i : i + S] * w[i].astype(x.dtype) for i in range(W)
+    )
+    new_state = xp[:, -(W - 1):]
+    return out, new_state
+
+
+def _scan_recurrence(a, b):
+    """h_t = a_t * h_{t-1} + b_t via associative scan over S."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    av, bv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return bv
+
+
+def rglru_apply(
+    p: Dict, x: jnp.ndarray, cfg, *,
+    state: Optional[Dict] = None, decode: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B, S, d).  state (decode): dict(h=(B, d), conv=(B, 3, d))."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    branch = dense(p["w_x"], x, cdt)  # (B, S, d)
+    gate_br = dense(p["w_gate_br"], x, cdt)
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(branch, p["conv_w"], conv_state)
+
+    gates = dense(p["w_rec_gates"], u, cdt).astype(jnp.float32)
+    r, i = jnp.split(jax.nn.sigmoid(gates), 2, axis=-1)
+    log_a = -_C * jax.nn.softplus(p["a_param"]) * r  # (B, S, d) fp32
+    a = jnp.exp(log_a)
+    gated_x = i * u.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    if decode:
+        h_prev = state["h"].astype(jnp.float32)  # (B, d)
+        h = a[:, 0] * h_prev + b[:, 0]
+        hs = h[:, None, :]
+        new_state = dict(h=h.astype(cdt), conv=new_conv.astype(cdt))
+    else:
+        hs = _scan_recurrence(a, b)  # (B, S, d)
+        new_state = (
+            dict(h=hs[:, -1].astype(cdt), conv=new_conv.astype(cdt))
+            if state is not None
+            else None
+        )
+    out = hs.astype(cdt) * jax.nn.gelu(gate_br)
+    y = dense(p["w_out"], out, cdt)
+    return constrain(y, "btd"), new_state
+
+
+def rglru_init_state(cfg, batch, dtype):
+    d = cfg.d_model
+    return dict(
+        h=jnp.zeros((batch, d), dtype),
+        conv=jnp.zeros((batch, _CONV_W - 1, d), dtype),
+    )

@@ -1,0 +1,277 @@
+"""Decoder-only LM assembling the block zoo (attn / local_attn / rglru /
+mlstm / slstm / MoE-FFN) with pattern-grouped scan-over-layers.
+
+Layer stacking: the block pattern (period P) defines a *group*; the L // P
+full groups are stacked (leading dim G) and run under ``jax.lax.scan`` — one
+trace regardless of depth, which keeps 61-layer HLO small and lets the FSDP
+policy shard the stacked weights.  The L %% P remainder layers run unrolled.
+``cfg.layer_stack == "unroll"`` disables scan entirely (debug path).
+
+Caches mirror the grouping: pytree with leading G plus a list for remainder
+layers; every block type defines its own cache/state structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.policy import constrain
+from . import layers as L
+from .moe import moe_init, moe_apply
+from .rglru import rglru_init, rglru_apply, rglru_init_state
+from .xlstm import (
+    mlstm_init, mlstm_apply, mlstm_init_state,
+    slstm_init, slstm_apply, slstm_init_state,
+)
+
+MIXER_HAS_MLP = {"attn": True, "local_attn": True, "rglru": True,
+                 "mlstm": False, "slstm": False}
+
+
+def block_init(key, cfg: ArchConfig, btype: str, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": L.norm_init(cfg.norm, cfg.d_model, dtype)}
+    if btype in ("attn", "local_attn"):
+        p["mixer"] = L.attention_init(ks[0], cfg, dtype)
+    elif btype == "rglru":
+        p["mixer"] = rglru_init(ks[0], cfg, dtype)
+    elif btype == "mlstm":
+        p["mixer"] = mlstm_init(ks[0], cfg, dtype)
+    elif btype == "slstm":
+        p["mixer"] = slstm_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(btype)
+    if MIXER_HAS_MLP[btype] and cfg.mlp != "none":
+        p["ln2"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+        p["mlp"] = (
+            moe_init(ks[1], cfg, dtype) if cfg.moe
+            else L.mlp_init(ks[1], cfg, dtype)
+        )
+    return p
+
+
+def block_cache_init(cfg: ArchConfig, btype: str, batch: int,
+                     seq_len: int, dtype) -> Optional[Dict]:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    if btype == "attn":
+        return dict(
+            k=jnp.zeros((batch, seq_len, KV, hd), dtype),
+            v=jnp.zeros((batch, seq_len, KV, hd), dtype),
+        )
+    if btype == "local_attn":
+        w = min(cfg.window or seq_len, seq_len)
+        return dict(
+            k=jnp.zeros((batch, w, KV, hd), dtype),
+            v=jnp.zeros((batch, w, KV, hd), dtype),
+        )
+    if btype == "rglru":
+        return rglru_init_state(cfg, batch, dtype)
+    if btype == "mlstm":
+        return mlstm_init_state(cfg, batch, dtype)
+    if btype == "slstm":
+        return slstm_init_state(cfg, batch, dtype)
+    raise ValueError(btype)
+
+
+def block_apply(
+    p, x, cfg: ArchConfig, btype: str, *,
+    positions, cache=None, cache_pos=None, prefix_len=0,
+) -> Tuple[jnp.ndarray, Optional[Dict], Dict]:
+    aux: Dict = {}
+    h = L.norm_apply(cfg.norm, p["ln1"], x)
+    decode = cache_pos is not None
+    if btype in ("attn", "local_attn"):
+        out, cache = L.attention_apply(
+            p["mixer"], h, cfg, positions=positions,
+            causal=True,
+            window=cfg.window if btype == "local_attn" else 0,
+            prefix_len=prefix_len, cache=cache, cache_pos=cache_pos,
+        )
+    elif btype == "rglru":
+        out, cache = rglru_apply(
+            p["mixer"], h, cfg, state=cache, decode=decode
+        )
+    elif btype == "mlstm":
+        out, cache = mlstm_apply(
+            p["mixer"], h, cfg, state=cache, decode=decode
+        )
+    else:  # slstm
+        out, cache = slstm_apply(
+            p["mixer"], h, cfg, state=cache, decode=decode
+        )
+    x = x + out
+    if "mlp" in p:
+        h2 = L.norm_apply(cfg.norm, p["ln2"], x)
+        if cfg.moe:
+            m, aux = moe_apply(p["mlp"], h2, cfg)
+        else:
+            m = L.mlp_apply(p["mlp"], h2, cfg)
+        x = x + m
+    return constrain(x, "btd"), cache, aux
+
+
+def _zeros_aux(cfg) -> Dict:
+    if cfg.moe:
+        return dict(
+            moe_lb_loss=jnp.float32(0), moe_z_loss=jnp.float32(0),
+            moe_drop_frac=jnp.float32(0),
+        )
+    return {}
+
+
+class DecoderLM:
+    """cfg-driven decoder LM.  Params:
+      embed (+ out_head), groups (stacked over G), rest (list), ln_f."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        P = cfg.pattern_period
+        self.n_groups = cfg.n_layers // P if cfg.layer_stack == "scan" else 0
+        self.rest_types: Tuple[str, ...] = tuple(
+            cfg.block_at(i)
+            for i in range(self.n_groups * P, cfg.n_layers)
+        )
+
+    # -- params -----------------------------------------------------------
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        keys = jax.random.split(key, cfg.n_layers + 2)
+        params: Dict[str, Any] = dict(
+            emb=L.embed_init(keys[0], cfg, dt),
+            ln_f=L.norm_init(cfg.norm, cfg.d_model, dt),
+        )
+        per_layer = [
+            block_init(keys[i + 1], cfg, cfg.block_at(i), dt)
+            for i in range(cfg.n_layers)
+        ]
+        P = cfg.pattern_period
+        if self.n_groups:
+            groups = [
+                tuple(per_layer[g * P + j] for j in range(P))
+                for g in range(self.n_groups)
+            ]
+            params["groups"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *groups
+            )
+            params["rest"] = list(per_layer[self.n_groups * P:])
+        else:
+            params["rest"] = per_layer
+        return params
+
+    # -- caches -------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int) -> Dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        P = cfg.pattern_period
+        mk = lambda b: block_cache_init(cfg, b, batch, seq_len, dt)
+        cache: Dict[str, Any] = {}
+        if self.n_groups:
+            groups = [
+                tuple(mk(cfg.block_pattern[j]) for j in range(P))
+                for _ in range(self.n_groups)
+            ]
+            cache["groups"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *groups
+            )
+        cache["rest"] = [mk(b) for b in self.rest_types]
+        return cache
+
+    # -- forward ------------------------------------------------------------
+    def apply(
+        self,
+        params: Dict,
+        tokens: jnp.ndarray,  # (B, S) int32
+        *,
+        img_embed: Optional[jnp.ndarray] = None,  # (B, n_img, d)
+        cache: Optional[Dict] = None,
+        cache_pos=None,
+        positions: Optional[jnp.ndarray] = None,
+        logits_slice: Optional[int] = None,
+    ) -> Tuple[jnp.ndarray, Optional[Dict], Dict]:
+        cfg = self.cfg
+        x = L.embed_lookup(params["emb"], tokens, cfg)
+        if cfg.name.startswith("paligemma") or (
+            img_embed is not None and cfg.n_img_tokens
+        ):
+            if img_embed is not None:
+                x = jnp.concatenate(
+                    [img_embed.astype(x.dtype), x], axis=1
+                )
+        prefix_len = cfg.n_img_tokens if img_embed is not None else 0
+        B, S, _ = x.shape
+        if positions is None:
+            if cache_pos is not None:
+                positions = jnp.reshape(cache_pos, (1, 1)) * jnp.ones(
+                    (B, 1), jnp.int32
+                )
+            else:
+                positions = jnp.arange(S, dtype=jnp.int32)[None, :] * \
+                    jnp.ones((B, 1), jnp.int32)
+        x = constrain(x, "btd")
+
+        aux_total = _zeros_aux(cfg)
+        P = cfg.pattern_period
+        new_cache: Dict[str, Any] = {}
+
+        def run_group(x, gparams, gcache):
+            auxs = _zeros_aux(cfg)
+            ncache = []
+            for j in range(P):
+                c_j = gcache[j] if gcache is not None else None
+                x, c_j, aux = block_apply(
+                    gparams[j], x, cfg, cfg.block_pattern[j],
+                    positions=positions, cache=c_j, cache_pos=cache_pos,
+                    prefix_len=prefix_len,
+                )
+                ncache.append(c_j)
+                for k in auxs:
+                    auxs[k] = auxs[k] + aux.get(k, 0.0)
+            return x, (tuple(ncache) if gcache is not None else None), auxs
+
+        if self.n_groups:
+            def scan_body(x, xs):
+                gparams, gcache = xs
+                if cfg.remat:
+                    fn = jax.checkpoint(
+                        lambda x_, gp, gc: run_group(x_, gp, gc),
+                        static_argnums=(),
+                    )
+                    x, ncache, auxs = fn(x, gparams, gcache)
+                else:
+                    x, ncache, auxs = run_group(x, gparams, gcache)
+                return x, (ncache, auxs)
+
+            gcaches = cache["groups"] if cache is not None else None
+            x, (ncaches, auxs) = jax.lax.scan(
+                scan_body, x, (params["groups"], gcaches)
+            )
+            if cache is not None:
+                new_cache["groups"] = ncaches
+            for k in aux_total:
+                aux_total[k] = aux_total[k] + jnp.sum(auxs[k])
+
+        rest_caches = []
+        for i, btype in enumerate(self.rest_types):
+            c_i = cache["rest"][i] if cache is not None else None
+            x, c_i, aux = block_apply(
+                params["rest"][i], x, cfg, btype,
+                positions=positions, cache=c_i, cache_pos=cache_pos,
+                prefix_len=prefix_len,
+            )
+            rest_caches.append(c_i)
+            for k in aux_total:
+                aux_total[k] = aux_total[k] + aux.get(k, 0.0)
+        if cache is not None:
+            new_cache["rest"] = rest_caches
+
+        x = L.norm_apply(cfg.norm, params["ln_f"], x)
+        if logits_slice is not None:
+            x = x[:, -logits_slice:]
+        logits = L.logits_apply(params["emb"] if cfg.tie_embeddings
+                                else params["emb"], x, cfg)
+        return logits, (new_cache if cache is not None else None), aux_total

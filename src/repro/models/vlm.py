@@ -1,0 +1,19 @@
+"""PaliGemma-style VLM wrapper: gemma decoder (DecoderLM) + STUB SigLIP
+frontend per the assignment — ``input_specs()`` supplies precomputed patch
+embeddings (B, n_img_tokens, d_model) which are prepended to the text
+embedding sequence; the prefix attends bidirectionally (prefix-LM mask in
+block_apply)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .transformer import DecoderLM
+
+
+class VLM(DecoderLM):
+    """apply(tokens, img_embed=...) — see DecoderLM; loss masking over the
+    image prefix happens in train/losses.py."""
+
+    def stub_frontend_shape(self, batch: int):
+        return (batch, self.cfg.n_img_tokens, self.cfg.d_model)

@@ -1,0 +1,320 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, recurrent hidden-to-hidden) with exponential
+gating and max-stabilizers.
+
+TPU adaptation: both cells run as ``jax.lax.scan`` over time (the recurrent
+form); the known chunked-parallel mLSTM formulation is an optimization
+documented in EXPERIMENTS §Perf.  Constant-size state (C: hd x hd per head;
+scalars per unit) is what makes the arch eligible for the long_500k decode
+cell.
+
+Block structure (paper Fig. 9/10, simplified faithfully):
+  mLSTM block: LN -> up-proj x2 (d->2d) -> [conv+swish -> q,k | v] ->
+               mLSTM cell -> group-norm -> gate by swish(z) -> down-proj
+  sLSTM block: LN -> sLSTM cell (block-diagonal recurrent R per head) ->
+               group-norm -> GeGLU up/down (4/3 factor)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.policy import constrain
+from .layers import _init, dense_init, dense, norm_init, norm_apply
+from .rglru import _causal_conv
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = 2 * d  # inner dim after up-projection
+    nh = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return dict(
+        w_up=dense_init(ks[0], d, di, dtype),
+        w_z=dense_init(ks[1], d, di, dtype),
+        conv_w=_init(ks[2], (4, di), 0.5, dtype),
+        wq=dense_init(ks[3], di, di, dtype),
+        wk=dense_init(ks[4], di, di, dtype),
+        wv=dense_init(ks[5], di, di, dtype),
+        w_if=dense_init(ks[6], di, 2 * nh, dtype),  # i,f gate pre-acts
+        gn=norm_init("rmsnorm", di, dtype),
+        w_down=dense_init(ks[7], di, d, dtype, scale=di ** -0.5),
+    )
+
+
+def _mlstm_cell(q, k, v, i_pre, f_pre, state):
+    """One step.  q/k/v: (B, nh, hd); i_pre/f_pre: (B, nh);
+    state: (C (B,nh,hd,hd), n (B,nh,hd), m (B,nh))."""
+    C, n, m = state
+    log_f = -jax.nn.softplus(-f_pre)  # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    C_new = f_s[..., None, None] * C + i_s[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )
+    n_new = f_s[..., None] * n + i_s[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C_new, q)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, q)), jnp.exp(-m_new)
+    )
+    h = num / den[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_chunked(q, k, v, i_pre, f_pre, T):
+    """Chunkwise-parallel mLSTM (EXPERIMENTS §Perf): identical math to the
+    sequential cell, restructured so each chunk of length T is one batch
+    of MXU matmuls and the hd x hd matrix memory C touches HBM once per
+    chunk instead of once per step.
+
+    Derivation (per head; true/unstabilized quantities *):
+      F_t   = sum_{s<=t} log f_s                     (in-chunk cumsum)
+      C*_t  = e^{F_t} C*_0 + sum_{s<=t} e^{log i_s + F_t - F_s} v_s k_s^T
+      h_t   = (C*_t q_t) / max(|n*_t . q_t|, 1)
+    with the sequential stabilizer m_t == mm_t
+      mm_t = max(m_0 + F_t, max_{s<=t}(F_t - F_s + log i_s))
+    every exponential below is taken relative to mm_t, which makes the
+    chunk form bit-compatible with the scan form up to fp error.
+
+    q/k/v: (B, nh, S, hd); i_pre/f_pre: (B, nh, S).  Returns
+    (hs (B, nh, S, hd), (C, n, m) final stabilized state).
+    """
+    B, nh, S, hd = q.shape
+    assert S % T == 0
+    nc = S // T
+    qs = q.reshape(B, nh, nc, T, hd).swapaxes(1, 2)  # (B, nc, nh, T, hd)
+    ks = k.reshape(B, nh, nc, T, hd).swapaxes(1, 2)
+    vs = v.reshape(B, nh, nc, T, hd).swapaxes(1, 2)
+    ip = i_pre.reshape(B, nh, nc, T).swapaxes(1, 2)  # (B, nc, nh, T)
+    log_f = -jax.nn.softplus(-f_pre).reshape(B, nh, nc, T).swapaxes(1, 2)
+
+    tri = jnp.tril(jnp.ones((T, T), bool))
+
+    def chunk(carry, xs):
+        C0, n0, m0 = carry  # stabilized state, scale e^{-m0}
+        qc, kc, vc, ic, lfc = xs  # (B, nh, T, hd) / (B, nh, T)
+        F = jnp.cumsum(lfc, axis=-1)  # (B, nh, T)
+        # A[t, s] = F_t - F_s + log i_s   (valid for s <= t)
+        A = F[..., :, None] - F[..., None, :] + ic[..., None, :]
+        A = jnp.where(tri, A, -jnp.inf)
+        mm = jnp.maximum(
+            m0[..., None] + F, A.max(axis=-1)
+        )  # (B, nh, T)
+        D = jnp.exp(A - mm[..., None])  # decay matrix, masked rows
+        scores = jnp.einsum("bhtd,bhsd->bhts", qc, kc)
+        intra_num = jnp.einsum("bhts,bhsd->bhtd", D * scores, vc)
+        intra_den = jnp.einsum("bhts,bhts->bht", D, scores)
+        carry_scale = jnp.exp(m0[..., None] + F - mm)  # (B, nh, T)
+        inter_num = jnp.einsum("bhtd,bhed->bhte", qc, C0)
+        inter_den = jnp.einsum("bhtd,bhd->bht", qc, n0)
+        num = intra_num + carry_scale[..., None] * inter_num
+        den = jnp.maximum(
+            jnp.abs(intra_den + carry_scale * inter_den), jnp.exp(-mm)
+        )
+        h = num / den[..., None]
+        # end-of-chunk state at stabilizer m_T = mm[..., -1]
+        mT = mm[..., -1]
+        wts = jnp.exp(
+            ic + (F[..., -1:] - F) - mT[..., None]
+        )  # (B, nh, T): e^{log i_s + F_T - F_s - m_T}
+        C = jnp.exp(F[..., -1] + m0 - mT)[..., None, None] * C0 + \
+            jnp.einsum("bhs,bhsd,bhse->bhde", wts, vc, kc)
+        n = jnp.exp(F[..., -1] + m0 - mT)[..., None] * n0 + \
+            jnp.einsum("bhs,bhsd->bhd", wts, kc)
+        return (C, n, mT), h
+
+    C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, nh, hd), jnp.float32)
+    m0 = jnp.full((B, nh), -1e30, jnp.float32)
+    xs = tuple(a.swapaxes(0, 1) for a in (qs, ks, vs, ip, log_f))
+    (C, n, m), hs = jax.lax.scan(chunk, (C0, n0, m0), xs)
+    hs = hs.swapaxes(0, 1).swapaxes(1, 2).reshape(B, nh, S, hd)
+    return hs, (C, n, m)
+
+
+def mlstm_apply(p, x, cfg, *, state=None, decode=False):
+    """x: (B, S, d); state: dict(C, n, m, conv)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    di = 2 * d
+    hd = di // nh
+    u = dense(p["w_up"], x, cdt)
+    z = dense(p["w_z"], x, cdt)
+    conv_state = state["conv"] if state is not None else None
+    c, new_conv = _causal_conv(u, p["conv_w"], conv_state)
+    c = jax.nn.silu(c)
+    q = dense(p["wq"], c, cdt).reshape(B, S, nh, hd)
+    k = dense(p["wk"], c, cdt).reshape(B, S, nh, hd) * (hd ** -0.5)
+    v = dense(p["wv"], u, cdt).reshape(B, S, nh, hd)
+    g = dense(p["w_if"], u, cdt).astype(jnp.float32).reshape(B, S, 2, nh)
+    i_pre, f_pre = g[:, :, 0], g[:, :, 1]
+
+    if state is not None and decode:
+        st = (state["C"].astype(jnp.float32),
+              state["n"].astype(jnp.float32),
+              state["m"].astype(jnp.float32))
+        st, h = _mlstm_cell(
+            q[:, 0].astype(jnp.float32).transpose(0, 1, 2),
+            k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32),
+            i_pre[:, 0], f_pre[:, 0], st,
+        )
+        hs = h[:, None]
+        new_state = dict(
+            C=st[0].astype(cdt), n=st[1].astype(cdt), m=st[2],
+            conv=new_conv.astype(cdt),
+        )
+    elif cfg.mlstm_chunk and S % cfg.mlstm_chunk == 0 and S > 1:
+        hs_h, (Cn, nn, mn) = _mlstm_chunked(
+            q.astype(jnp.float32).swapaxes(1, 2),
+            k.astype(jnp.float32).swapaxes(1, 2),
+            v.astype(jnp.float32).swapaxes(1, 2),
+            i_pre.swapaxes(1, 2),
+            f_pre.swapaxes(1, 2),
+            cfg.mlstm_chunk,
+        )
+        hs = hs_h.swapaxes(1, 2)  # (B, S, nh, hd)
+        new_state = (
+            dict(C=Cn.astype(cdt), n=nn.astype(cdt), m=mn,
+                 conv=new_conv.astype(cdt))
+            if state is not None else None
+        )
+    else:
+        C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, nh, hd), jnp.float32)
+        m0 = jnp.full((B, nh), -1e30, jnp.float32)
+        ydt = jnp.dtype(cfg.state_dtype)
+
+        def step(carry, inp):
+            qt, kt, vt, it, ft = inp
+            carry, h = _mlstm_cell(qt, kt, vt, it, ft, carry)
+            return carry, h.astype(ydt)
+
+        xs = (
+            q.astype(jnp.float32).swapaxes(0, 1),
+            k.astype(jnp.float32).swapaxes(0, 1),
+            v.astype(jnp.float32).swapaxes(0, 1),
+            i_pre.swapaxes(0, 1),
+            f_pre.swapaxes(0, 1),
+        )
+        (Cn, nn, mn), hs = jax.lax.scan(
+            step, (C0, n0, m0), xs, unroll=cfg.scan_unroll
+        )
+        hs = hs.swapaxes(0, 1)  # (B, S, nh, hd)
+        new_state = (
+            dict(C=Cn.astype(cdt), n=nn.astype(cdt), m=mn,
+                 conv=new_conv.astype(cdt))
+            if state is not None else None
+        )
+    hflat = hs.reshape(B, -1, di).astype(cdt)
+    hflat = norm_apply("rmsnorm", p["gn"], hflat)
+    out = dense(p["w_down"], hflat * jax.nn.silu(z), cdt)
+    return constrain(out, "btd"), new_state
+
+
+def mlstm_init_state(cfg, batch, dtype):
+    d = cfg.d_model
+    di, nh = 2 * d, cfg.n_heads
+    hd = di // nh
+    return dict(
+        C=jnp.zeros((batch, nh, hd, hd), dtype),
+        n=jnp.zeros((batch, nh, hd), dtype),
+        m=jnp.full((batch, nh), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, 3, di), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 4)
+    return dict(
+        w_gates=dense_init(ks[0], d, 4 * d, dtype),  # z,i,f,o pre-acts
+        r_gates=_init(ks[1], (nh, hd, 4 * hd), hd ** -0.5, dtype),
+        gn=norm_init("rmsnorm", d, dtype),
+        w_up=dense_init(ks[2], d, 2 * (4 * d // 3), dtype),
+        w_down=dense_init(ks[3], 4 * d // 3, d, dtype,
+                          scale=(4 * d // 3) ** -0.5),
+    )
+
+
+def _slstm_cell(w_pre, r_w, state):
+    """w_pre: (B, nh, 4*hd) input pre-activations; r_w: (nh, hd, 4*hd);
+    state: (c, n, m, h) each (B, nh, hd)."""
+    c, n, m, h = state
+    pre = w_pre + jnp.einsum("bhi,hij->bhj", h, r_w)
+    z_p, i_p, f_p, o_p = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    log_f = -jax.nn.softplus(-f_p)
+    m_new = jnp.maximum(log_f + m, i_p)
+    i_s = jnp.exp(i_p - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_apply(p, x, cfg, *, state=None, decode=False):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    w_pre = dense(p["w_gates"], x, cdt).astype(jnp.float32).reshape(
+        B, S, nh, 4 * hd
+    )
+    r_w = p["r_gates"].astype(jnp.float32)
+
+    if state is not None and decode:
+        st = tuple(state[k].astype(jnp.float32) for k in "cnmh")
+        st, h = _slstm_cell(w_pre[:, 0], r_w, st)
+        hs = h[:, None]
+        new_state = {k: v.astype(cdt if k != "m" else jnp.float32)
+                     for k, v in zip("cnmh", st)}
+    else:
+        z0 = jnp.zeros((B, nh, hd), jnp.float32)
+        m0 = jnp.full((B, nh, hd), -1e30, jnp.float32)
+        ydt = jnp.dtype(cfg.state_dtype)
+
+        def step(carry, wt):
+            carry, h = _slstm_cell(wt, r_w, carry)
+            return carry, h.astype(ydt)
+
+        st, hs = jax.lax.scan(
+            step, (z0, z0, m0, z0), w_pre.swapaxes(0, 1),
+            unroll=cfg.scan_unroll,
+        )
+        hs = hs.swapaxes(0, 1)
+        new_state = (
+            {k: v.astype(cdt if k != "m" else jnp.float32)
+             for k, v in zip("cnmh", st)}
+            if state is not None else None
+        )
+    hflat = hs.reshape(B, -1, d).astype(cdt)
+    hflat = norm_apply("rmsnorm", p["gn"], hflat)
+    up = dense(p["w_up"], hflat, cdt)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = dense(p["w_down"], jax.nn.gelu(a) * b, cdt)
+    return constrain(out, "btd"), new_state
+
+
+def slstm_init_state(cfg, batch, dtype):
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = d // nh
+    z = jnp.zeros((batch, nh, hd), dtype)
+    return dict(c=z, n=z, m=jnp.full((batch, nh, hd), -1e30, jnp.float32),
+                h=z)

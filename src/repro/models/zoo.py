@@ -1,0 +1,15 @@
+"""Config -> model dispatch."""
+from __future__ import annotations
+
+from ..configs.base import ArchConfig
+from .encdec import EncDecLM
+from .transformer import DecoderLM
+from .vlm import VLM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.encdec:
+        return EncDecLM(cfg)
+    if cfg.n_img_tokens:
+        return VLM(cfg)
+    return DecoderLM(cfg)

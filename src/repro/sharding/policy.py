@@ -1,0 +1,253 @@
+"""Sharding policy: parameter PartitionSpecs + activation constraints.
+
+Mesh contract (launch/mesh.py): ``("data", "model")`` single-pod 16x16 or
+``("pod", "data", "model")`` multi-pod 2x16x16.  "pod" is an outer pure-DP
+axis.  This JAX build requires jit-boundary shardings to divide evenly, so
+every rule is divisibility-checked against the actual dim and falls back to
+replication — the policy is *total*: it never produces an invalid spec.
+
+Parameter rules (Megatron-style TP + optional FSDP):
+  * d_ff / expert / vocab / flattened-QKV output dims -> "model"
+  * attention heads -> "model" only when n_heads % model_size == 0
+  * FSDP: the d_model-ish dim additionally -> "data" when the arch is large
+    (>= fsdp_threshold params) — ZeRO-3-equivalent param+grad+opt sharding
+  * MoE experts -> "model" (expert parallelism, owner-computes-at-target,
+    the dCSR principle)
+
+Activation hints are applied inside model code through :func:`constrain`,
+which reads an ambient policy (contextvar) so model code stays
+policy-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "sharding_policy", default=None
+)
+
+
+@dataclasses.dataclass
+class Policy:
+    mesh: Mesh
+    cfg: ArchConfig
+    batch_axes: Tuple[str, ...]  # ("pod","data") or ("data",) or ()
+    fsdp: bool
+    seq_shard: bool  # shard sequence dim of long activations over "model"
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape["model"]
+
+    @property
+    def data_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.batch_axes])) \
+            if self.batch_axes else 1
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def make_policy(
+    mesh: Mesh,
+    cfg: ArchConfig,
+    global_batch: int,
+    *,
+    fsdp_threshold: int = 8_000_000_000,
+    seq_shard: bool = False,
+) -> Policy:
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    # largest prefix-product of batch axes that divides global_batch
+    chosen: Tuple[str, ...] = ()
+    for i in range(len(axes), 0, -1):
+        size = int(np.prod([mesh.shape[a] for a in axes[:i]]))
+        if _div(global_batch, size):
+            chosen = tuple(axes[:i])
+            break
+    fsdp = cfg.n_params() >= fsdp_threshold
+    return Policy(
+        mesh=mesh, cfg=cfg, batch_axes=chosen, fsdp=fsdp,
+        seq_shard=seq_shard,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings
+# ---------------------------------------------------------------------------
+
+def param_spec(pol: Policy, path: str, shape: Tuple[int, ...]) -> P:
+    """PartitionSpec for one parameter, keyed by its pytree path.
+
+    Conventions produced by repro.models initializers (leading stack dims
+    from scan-over-layers are detected by ndim and left unsharded):
+      embed/out_head: (V, d);  attention wq/wk/wv: (d, H*hd) flat;
+      wo: (H*hd, d);  mlp w_in/w_gate: (d, ff);  w_out: (ff, d);
+      moe experts: (E, d, ff) / (E, ff, d);  router: (d, E);
+      norms/bias/scalars: replicated.
+    """
+    cfg = pol.cfg
+    ms = pol.model_size
+    fs = pol.mesh.shape.get("data", 1)
+    d = cfg.d_model
+    name = path.split("/")[-1] if "/" in path else path
+    base = _base_spec(pol, path, name, shape, ms, fs, d)
+    return base
+
+
+def _base_spec(pol, path, name, shape, ms, fs, d):
+    cfg = pol.cfg
+    nd = len(shape)
+    fsdp = pol.fsdp
+
+    def maybe_fsdp(spec_list, dim):
+        """Add 'data' FSDP sharding on `dim` if divisible and free."""
+        if fsdp and spec_list[dim] is None and _div(shape[dim], fs):
+            spec_list[dim] = "data"
+        return spec_list
+
+    # norms, biases, scalars, small vectors -> replicated (+FSDP on dim0 for
+    # big stacked 1D? keep replicated: negligible)
+    if nd <= 1 or "norm" in path or name in ("b", "bias", "a_param"):
+        return P(*([None] * nd))
+
+    # strip leading stack dims (scan over layers/groups): any dims before
+    # the final 2-3 semantic dims stay None
+    lead = [None] * (nd - 2)
+    d0, d1 = shape[-2], shape[-1]
+
+    if "emb" in path or name in ("embed", "out_head", "pos_embed"):
+        # (V, d) or (S, d)
+        spec = [None, None]
+        if _div(d0, ms) and ("pos" not in name):
+            spec[0] = "model"
+            spec = maybe_fsdp(spec, 1)
+        elif _div(d1, ms):
+            spec[1] = "model"
+        return P(*lead, *spec)
+
+    if name in ("w_router",):  # (d, E)
+        return P(*lead, None, None)
+
+    # MoE expert weights: (..., E, d, ff) or (..., E, ff, d)
+    if "expert" in path:
+        e_dim = nd - 3
+        spec = [None] * nd
+        if _div(shape[e_dim], ms):
+            spec[e_dim] = "model"
+        elif _div(shape[-1], ms):
+            spec[-1] = "model"
+        if fsdp:
+            # shard the d-ish dim over data
+            tgt = nd - 2
+            if spec[tgt] is None and _div(shape[tgt], fs):
+                spec[tgt] = "data"
+        return P(*spec)
+
+    col_names = ("wq", "wk", "wv", "w_in", "w_gate", "w_up", "wi", "w1",
+                 "w_x", "w_gates", "w_z", "w_if", "conv_w")
+    row_names = ("wo", "w_out", "w_down", "w2", "w_o")
+    if name in col_names:
+        spec = [None, "model"] if _div(d1, ms) else [None, None]
+        if spec[1] is None and _div(d0, ms):
+            spec = [None, None]  # keep input dim whole; GSPMD propagates
+        spec = maybe_fsdp(spec, 0)
+        return P(*lead, *spec)
+    if name in row_names:
+        spec = ["model", None] if _div(d0, ms) else [None, None]
+        spec = maybe_fsdp(spec, 1)
+        return P(*lead, *spec)
+    # default: try TP on last dim, FSDP on first
+    spec = [None, "model"] if _div(d1, ms) else [None, None]
+    spec = maybe_fsdp(spec, 0)
+    return P(*lead, *spec)
+
+
+def param_shardings(pol: Policy, params: Any) -> Any:
+    """Tree of NamedShardings matching a params pytree (works on
+    ShapeDtypeStructs too — the dry-run path)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    out = []
+    for kp, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+        spec = param_spec(pol, path, tuple(leaf.shape))
+        out.append(NamedSharding(pol.mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (ambient)
+# ---------------------------------------------------------------------------
+
+def activation_spec(pol: Policy, kind: str, shape: Tuple[int, ...]) -> Optional[P]:
+    b = pol.batch_axes if pol.batch_axes else None
+    ms = pol.model_size
+    cfg = pol.cfg
+    bspec = tuple(pol.batch_axes) if pol.batch_axes else None
+    if bspec and shape and not _div(shape[0], pol.data_size):
+        bspec = None
+    if kind == "btd":  # (B, S, d)
+        if pol.seq_shard and len(shape) == 3 and _div(shape[1], ms):
+            return P(bspec, "model", None)
+        return P(bspec, None, None)
+    if kind == "btf":  # (B, S, ff)
+        return P(bspec, None, "model") if _div(shape[-1], ms) else P(bspec)
+    if kind == "bthd":  # (B, S, H, hd)
+        if _div(shape[2], ms):
+            return P(bspec, None, "model", None)
+        if cfg.ctx_parallel and _div(shape[1], ms) and shape[1] > 1:
+            # context parallelism: heads don't divide the model axis, so
+            # shard the query sequence instead (each rank computes its
+            # q-rows against gathered K/V) — kills replicated attention
+            return P(bspec, "model", None, None)
+        return P(bspec, None, None, None)
+    if kind == "logits":  # (B, S, V)
+        return P(bspec, None, "model") if _div(shape[-1], ms) else P(bspec)
+    if kind == "moe_becd":  # (B, E, C, d)
+        e_ok = _div(shape[1], ms)
+        d_ok = _div(shape[3], ms)
+        return P(
+            bspec,
+            "model" if e_ok else None,
+            None,
+            "model" if (not e_ok and d_ok) else None,
+        )
+    return None
+
+
+def constrain(x, kind: str):
+    pol: Optional[Policy] = _CTX.get()
+    if pol is None:
+        return x
+    spec = activation_spec(pol, kind, tuple(x.shape))
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, spec)
+    )
+
+
+@contextlib.contextmanager
+def policy_context(pol: Optional[Policy]):
+    tok = _CTX.set(pol)
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current_policy() -> Optional[Policy]:
+    return _CTX.get()

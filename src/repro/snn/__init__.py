@@ -1,0 +1,13 @@
+"""SNN layer: dynamics, builders, single-device and distributed simulators."""
+from .network import (  # noqa: F401
+    NetworkDef,
+    to_dcsr,
+    spatial_random,
+    microcircuit,
+    balanced_ei,
+    mixed_population,
+    PD14_SIZES,
+    PD14_PROBS,
+)
+from .simulator import SimConfig, Simulator  # noqa: F401
+from .dist_sim import DistSimulator  # noqa: F401

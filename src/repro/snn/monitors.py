@@ -1,0 +1,30 @@
+"""Light post-hoc monitors over simulator outputs."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+def firing_rates(outs: Dict, n: int, dt_ms: float) -> np.ndarray:
+    """Mean rate (Hz) per step from spike counts: counts/(n * dt)."""
+    counts = np.asarray(outs["spike_count"])
+    if counts.ndim == 2:  # distributed: (steps, k)
+        counts = counts.sum(axis=1)
+    return counts / (n * dt_ms * 1e-3)
+
+
+def per_neuron_rates(raster: np.ndarray, dt_ms: float) -> np.ndarray:
+    """raster (steps, n) 0/1 -> per-neuron rate in Hz."""
+    steps = raster.shape[0]
+    return raster.sum(axis=0) / (steps * dt_ms * 1e-3)
+
+
+def summary(outs: Dict, n: int, dt_ms: float) -> Dict[str, float]:
+    r = firing_rates(outs, n, dt_ms)
+    return dict(
+        mean_rate_hz=float(r.mean()),
+        max_step_rate_hz=float(r.max()),
+        silent=bool(r.sum() == 0),
+        saturated=bool((r > 0.5 / (dt_ms * 1e-3)).any()),
+    )

@@ -1,0 +1,289 @@
+"""Clock-driven SNN simulator over a dCSR partition (JAX, scan-based).
+
+One step (documented order — the serialization contract depends on it):
+
+  1. deliver: ``i_syn = ring[t % D]``; clear slot.
+  2. neuron update with ``i_syn + bias + noise(t, global_id)`` -> spikes s_t.
+  3. traces (if plastic): x' = x * exp(-dt/tau) + s_t   (inclusive variant).
+  4. exchange: act/pre-trace become global vectors (identity for k = 1,
+     all-gather in the distributed wrapper).
+  5. propagate with *pre-update* weights: per delay bucket b,
+     ``ring[(t + d_b) % D] += spike_gather(act, cols_b, w_b)``.
+  6. STDP: w' from the fused kernel (plastic slots only).
+  7. history: ``hist[t % D] = s_t`` (for in-flight event serialization).
+
+Noise is a pure function of (seed, t, global neuron id) so that any
+partitioning, restart, or resharding reproduces bit-identical trajectories —
+the property the dCSR checkpoint tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dcsr import DCSRNetwork, DCSRPartition
+from ..core.ell import DelayELL, build_delay_ell
+from ..core.state import EDGE_WEIGHT
+from ..kernels import ops
+from .neurons import make_neuron_step
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    backend: Optional[str] = None  # None=auto, 'ref', 'pallas_interpret', 'pallas'
+    align_k: int = 128
+    align_rows: int = 8
+    max_k: Optional[int] = None  # heavy-row split cap (single-partition only)
+    record_raster: bool = False
+    record_v: bool = False
+    exchange: str = "dense"  # 'dense' | 'index' (distributed only)
+    index_cap_frac: float = 0.25  # K cap for compressed exchange, frac of n_p
+    seed: int = 42
+
+
+@dataclasses.dataclass
+class PartitionDeviceData:
+    """Device-resident constants + initial state for one partition."""
+
+    n_p: int
+    row_start: int
+    vtx_model: jnp.ndarray
+    vtx_state0: jnp.ndarray
+    delays: Tuple[int, ...]
+    cols: List[jnp.ndarray]  # per bucket (R, K) int32 (global ids)
+    weights0: List[jnp.ndarray]  # per bucket (R, K) f32
+    plastic: List[jnp.ndarray]  # per bucket (R, K) f32 mask (stdp slots)
+    valid: List[jnp.ndarray]
+    row_maps: List[jnp.ndarray]
+    identity_rows: Tuple[bool, ...]
+    any_plastic: bool
+
+
+def partition_device_data(
+    part: DCSRPartition,
+    net: DCSRNetwork,
+    ell: DelayELL,
+) -> PartitionDeviceData:
+    stdp_id = net.registry.edge_id("syn_stdp")
+    cols, w0, plastic, valid, rmaps, ident = [], [], [], [], [], []
+    for b in ell.buckets:
+        cols.append(jnp.asarray(b.cols))
+        w0.append(jnp.asarray(b.weights))
+        is_stdp = np.zeros(b.cols.shape, dtype=np.float32)
+        sel = b.edge_index >= 0
+        is_stdp[sel] = (
+            part.edge_model[b.edge_index[sel]] == stdp_id
+        ).astype(np.float32)
+        plastic.append(jnp.asarray(is_stdp))
+        valid.append(jnp.asarray(b.valid.astype(np.float32)))
+        rmaps.append(jnp.asarray(b.row_map))
+        ident.append(b.identity_rows)
+    return PartitionDeviceData(
+        n_p=part.n,
+        row_start=part.row_start,
+        vtx_model=jnp.asarray(part.vtx_model),
+        vtx_state0=jnp.asarray(part.vtx_state),
+        delays=tuple(b.delay for b in ell.buckets),
+        cols=cols, weights0=w0, plastic=plastic, valid=valid,
+        row_maps=rmaps, identity_rows=tuple(ident),
+        any_plastic=bool(np.any(part.edge_model == stdp_id)),
+    )
+
+
+def _models_present(net: DCSRNetwork) -> Tuple[str, ...]:
+    names = []
+    for i, spec in enumerate(net.registry.vertex_models()):
+        if any(np.any(p.vtx_model == i) for p in net.parts):
+            names.append(spec.name)
+    return tuple(names)
+
+
+def make_core_step(
+    *,
+    registry,
+    models_present: Sequence[str],
+    dt: float,
+    noise_sigma: float,
+    base_key: jnp.ndarray,
+    d_ring: int,
+    n_global: int,
+    dev: PartitionDeviceData,
+    backend: str,
+    stdp_params: Optional[Dict[str, float]],
+    exchange: Callable,
+    noise_ids: Optional[jnp.ndarray] = None,
+    record_raster: bool = False,
+    record_v: bool = False,
+) -> Callable:
+    """The shared per-partition step; ``exchange`` injects the collective.
+
+    ``noise_ids`` are the *permanent* (pre-partitioning) neuron ids of the
+    local rows: noise is a pure function of (seed, t, permanent id), so a
+    trajectory is invariant under any partitioning/relabelling — the
+    property that makes elastic resharding (snn/reshard.py) bit-exact."""
+    neuron_step = make_neuron_step(registry, models_present, dt, backend)
+    D = d_ring
+    n_p = dev.n_p
+    any_plastic = dev.any_plastic and stdp_params is not None
+    tau_plus = stdp_params["tau_plus"] if any_plastic else 1.0
+    tau_minus = stdp_params["tau_minus"] if any_plastic else 1.0
+
+    def step(carry, _):
+        t = carry["t"]
+        slot = jnp.mod(t, D)
+        i_syn = jax.lax.dynamic_index_in_dim(
+            carry["ring"], slot, axis=0, keepdims=False
+        )
+        ring = jax.lax.dynamic_update_index_in_dim(
+            carry["ring"], jnp.zeros((carry["ring"].shape[1],),
+                                     carry["ring"].dtype),
+            slot, axis=0,
+        )
+        # deterministic noise keyed by (seed, t, permanent neuron id)
+        if noise_sigma > 0:
+            key_t = jax.random.fold_in(base_key, t)
+            noise_g = noise_sigma * jax.random.normal(
+                key_t, (n_global,), dtype=jnp.float32
+            )
+            noise = jnp.take(noise_g, noise_ids, axis=0)
+        else:
+            noise = jnp.zeros((n_p,), jnp.float32)
+
+        vtx_state, spikes = neuron_step(
+            dev.vtx_model, carry["vtx_state"], i_syn + noise
+        )
+
+        if any_plastic:
+            tr_plus = carry["tr_plus"] * jnp.exp(
+                -dt / tau_plus
+            ).astype(jnp.float32) + spikes
+            tr_minus = carry["tr_minus"] * jnp.exp(
+                -dt / tau_minus
+            ).astype(jnp.float32) + spikes
+        else:
+            tr_plus = carry["tr_plus"]
+            tr_minus = carry["tr_minus"]
+
+        act, pre_trace = exchange(spikes, tr_plus)
+
+        weights = carry["weights"]
+        new_weights = []
+        for i, d in enumerate(dev.delays):
+            cur = ops.spike_gather(
+                act, dev.cols[i], weights[i], backend=backend
+            )
+            if dev.identity_rows[i]:
+                cur_rows = cur[:n_p]
+            else:
+                cur_rows = jax.ops.segment_sum(
+                    cur, dev.row_maps[i], num_segments=n_p
+                )
+            wslot = jnp.mod(t + d, D)
+            ring = ring.at[wslot].add(cur_rows)
+            if any_plastic:
+                pad_r = dev.cols[i].shape[0] - n_p
+                post_t = jnp.pad(tr_minus, (0, pad_r)) if pad_r else tr_minus
+                post_s = jnp.pad(spikes, (0, pad_r)) if pad_r else spikes
+                if not dev.identity_rows[i]:
+                    post_t = jnp.take(tr_minus, dev.row_maps[i], axis=0)
+                    post_s = jnp.take(spikes, dev.row_maps[i], axis=0)
+                new_weights.append(
+                    ops.stdp_update(
+                        weights[i], dev.plastic[i], dev.cols[i],
+                        pre_trace, act, post_t, post_s,
+                        params=stdp_params, backend=backend,
+                    )
+                )
+            else:
+                new_weights.append(weights[i])
+
+        hist = jax.lax.dynamic_update_index_in_dim(
+            carry["hist"], spikes.astype(jnp.uint8), slot, axis=0
+        )
+        new_carry = dict(
+            t=t + 1, vtx_state=vtx_state, ring=ring, hist=hist,
+            weights=tuple(new_weights), tr_plus=tr_plus, tr_minus=tr_minus,
+        )
+        out = dict(spike_count=jnp.sum(spikes))
+        if record_raster:
+            out["raster"] = spikes.astype(jnp.uint8)
+        if record_v:
+            out["v_mean"] = jnp.mean(vtx_state[:, 0])
+        return new_carry, out
+
+    return step
+
+
+class Simulator:
+    """Single-partition (k = 1) simulator — also the bit-exact oracle the
+    distributed simulator is tested against."""
+
+    def __init__(self, net: DCSRNetwork, cfg: SimConfig = SimConfig()):
+        assert net.k == 1, "Simulator takes k=1 nets; see dist_sim for k>1"
+        self.net = net
+        self.cfg = cfg
+        self.dt = float(net.meta.get("dt", 0.1))
+        self.noise_sigma = float(net.meta.get("noise_sigma", 0.0))
+        part = net.parts[0]
+        self.ell = build_delay_ell(
+            part, net.n, align_k=cfg.align_k, align_rows=cfg.align_rows,
+            max_k=cfg.max_k,
+        )
+        self.d_ring = max(self.ell.max_delay, 1)
+        self.dev = partition_device_data(part, net, self.ell)
+        self.backend = cfg.backend or (
+            "pallas" if jax.default_backend() == "tpu" else "ref"
+        )
+        stdp = (
+            dict(net.registry.spec("syn_stdp").params)
+            if self.dev.any_plastic
+            else None
+        )
+        self._step = make_core_step(
+            registry=net.registry,
+            models_present=_models_present(net),
+            dt=self.dt,
+            noise_sigma=self.noise_sigma,
+            base_key=jax.random.PRNGKey(cfg.seed),
+            d_ring=self.d_ring,
+            n_global=net.n,
+            dev=self.dev,
+            backend=self.backend,
+            stdp_params=stdp,
+            exchange=lambda s, tr: (s, tr),
+            noise_ids=jnp.asarray(part.global_ids, jnp.int32),
+            record_raster=cfg.record_raster,
+            record_v=cfg.record_v,
+        )
+
+    def init_state(self, t0: int = 0) -> Dict:
+        n_p = self.dev.n_p
+        return dict(
+            t=jnp.asarray(t0, jnp.int32),
+            vtx_state=self.dev.vtx_state0,
+            ring=jnp.zeros((self.d_ring, n_p), jnp.float32),
+            hist=jnp.zeros((self.d_ring, n_p), jnp.uint8),
+            weights=tuple(self.dev.weights0),
+            tr_plus=jnp.zeros((n_p,), jnp.float32),
+            tr_minus=jnp.zeros((n_p,), jnp.float32),
+        )
+
+    @functools.partial(jax.jit, static_argnames=("self", "steps"))
+    def run(self, state: Dict, steps: int):
+        return jax.lax.scan(self._step, state, None, length=steps)
+
+    # -- dCSR sync (simulation state -> serializable network) -------------
+    def state_to_dcsr(self, state: Dict) -> None:
+        """Write simulation state back into the dCSR partition in place
+        (weights via ELL edge_index, vertex tuples directly)."""
+        part = self.net.parts[0]
+        part.vtx_state = np.asarray(state["vtx_state"])
+        self.ell.update_bucket_weights(
+            [np.asarray(w) for w in state["weights"]]
+        )
+        self.ell.scatter_weights_back(part)

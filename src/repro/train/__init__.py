@@ -1,0 +1,9 @@
+from .optimizer import AdamW, SGDM, cosine_schedule, global_norm  # noqa: F401
+from .losses import next_token_xent, total_loss  # noqa: F401
+from .data import DataConfig, host_batch, batch_iterator  # noqa: F401
+from .train_loop import make_train_step, make_loss_fn, fit  # noqa: F401
+from .serve import (  # noqa: F401
+    make_prefill_fn,
+    make_serve_step,
+    greedy_generate,
+)

@@ -1,0 +1,43 @@
+"""Losses: next-token cross-entropy (fp32 logsumexp), masking, MoE aux."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_xent(
+    logits: jnp.ndarray,  # (B, S, V)
+    tokens: jnp.ndarray,  # (B, S) int32 (same sequence; labels = shift)
+    mask: Optional[jnp.ndarray] = None,  # (B, S) over *label* positions
+) -> Tuple[jnp.ndarray, Dict]:
+    """loss = mean CE(logits[:, :-1], tokens[:, 1:])."""
+    lg = logits[:, :-1].astype(jnp.float32)
+    labels = tokens[:, 1:]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(
+        lg, labels[..., None], axis=-1
+    )[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+    else:
+        m = jnp.ones_like(nll)
+    denom = jnp.maximum(m.sum(), 1.0)
+    loss = (nll * m).sum() / denom
+    acc = ((jnp.argmax(lg, axis=-1) == labels) * m).sum() / denom
+    return loss, dict(xent=loss, accuracy=acc, tokens=denom)
+
+
+def total_loss(
+    logits, tokens, aux: Dict, *, mask=None,
+    moe_lb_weight: float = 0.01, moe_z_weight: float = 1e-3,
+) -> Tuple[jnp.ndarray, Dict]:
+    loss, metrics = next_token_xent(logits, tokens, mask)
+    if "moe_lb_loss" in aux:
+        loss = loss + moe_lb_weight * aux["moe_lb_loss"] \
+            + moe_z_weight * aux["moe_z_loss"]
+        metrics.update({k: aux[k] for k in aux})
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,84 @@
+"""Serving: prefill + KV-cache decode steps (batched), greedy/sampled
+generation loop.  ``make_serve_step`` produces exactly what the decode_*
+dry-run cells lower: one new token against a seq_len cache."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.policy import Policy, policy_context
+
+
+def make_prefill_fn(model, cfg: ArchConfig, policy: Optional[Policy] = None,
+                    cache_len: Optional[int] = None):
+    def prefill(params, tokens, extras: Optional[Dict] = None):
+        """tokens: (B, S_prompt).  Returns (cache, last_logits)."""
+        with policy_context(policy):
+            B, S = tokens.shape
+            kwargs = dict(extras or {})
+            if cfg.encdec:
+                cache = model.init_cache(
+                    B, cache_len or cfg.max_seq,
+                    kwargs["frames"].shape[1],
+                )
+                logits, cache, _ = model.apply(
+                    params, tokens, cache=cache, **kwargs
+                )
+            else:
+                cache = model.init_cache(B, cache_len or S)
+                logits, cache, _ = model.apply(
+                    params, tokens, cache=cache, **kwargs
+                )
+            return cache, logits[:, -1]
+
+    return prefill
+
+
+def make_serve_step(model, cfg: ArchConfig, policy: Optional[Policy] = None):
+    """decode one token: (params, cache, token (B,1), pos) ->
+    (logits (B, V), cache)."""
+
+    def serve_step(params, cache, token, pos):
+        with policy_context(policy):
+            logits, cache, _ = model.apply(
+                params, token, cache=cache, cache_pos=pos
+            )
+            return logits[:, -1], cache
+
+    return serve_step
+
+
+def greedy_generate(
+    model, cfg: ArchConfig, params, prompt: jnp.ndarray,
+    max_new: int, extras: Optional[Dict] = None,
+    temperature: float = 0.0, seed: int = 0,
+    cache_len: Optional[int] = None,
+):
+    """Batched generation with a jitted decode step (the serving loop of
+    examples/serve_lm.py)."""
+    B, S = prompt.shape
+    total = cache_len or (S + max_new)
+    prefill = jax.jit(make_prefill_fn(model, cfg, cache_len=total))
+    step = jax.jit(make_serve_step(model, cfg))
+    cache, logits = prefill(params, prompt, extras)
+    toks = []
+    key = jax.random.PRNGKey(seed)
+    cur = _pick(logits, temperature, key)
+    for i in range(max_new):
+        toks.append(cur)
+        logits, cache = step(
+            params, cache, cur[:, None], jnp.asarray(S + i, jnp.int32)
+        )
+        key = jax.random.fold_in(key, i)
+        cur = _pick(logits, temperature, key)
+    return jnp.stack(toks, axis=1)
+
+
+def _pick(logits, temperature, key):
+    if temperature and temperature > 0:
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,131 @@
+"""Train-step factory: loss -> grad -> clip -> optimizer, with optional
+gradient accumulation, remat (per-group in the model), sharding policy
+context, and donation (params/opt buffers reused in place)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.policy import Policy, policy_context
+from .losses import total_loss
+
+
+def make_loss_fn(model, cfg: ArchConfig):
+    def loss_fn(params, batch):
+        kwargs = {}
+        mask = None
+        if cfg.encdec:
+            kwargs["frames"] = batch["frames"]
+        if cfg.n_img_tokens:
+            kwargs["img_embed"] = batch["img_embed"]
+        logits, _, aux = model.apply(params, batch["tokens"], **kwargs)
+        if cfg.n_img_tokens:
+            # logits cover [img_prefix + text]; score text only
+            logits = logits[:, cfg.n_img_tokens:]
+        loss, metrics = total_loss(logits, batch["tokens"], aux, mask=mask)
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(
+    model,
+    cfg: ArchConfig,
+    optimizer,
+    policy: Optional[Policy] = None,
+    grad_accum: int = 1,
+) -> Callable:
+    """returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).  With ``grad_accum`` > 1 the batch's
+    leading dim is split into microbatches accumulated under lax.scan
+    (activation memory / global-batch decoupling)."""
+    loss_fn = make_loss_fn(model, cfg)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params, batch)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        with policy_context(policy):
+            if grad_accum > 1:
+                micro = jax.tree.map(
+                    lambda x: x.reshape(
+                        (grad_accum, x.shape[0] // grad_accum)
+                        + x.shape[1:]
+                    ),
+                    batch,
+                )
+
+                def acc_body(carry, mb):
+                    g_acc = carry
+                    g, metrics = grads_of(params, mb)
+                    g_acc = jax.tree.map(jnp.add, g_acc, g)
+                    return g_acc, metrics
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                grads, metrics_all = jax.lax.scan(acc_body, g0, micro)
+                grads = jax.tree.map(lambda g: g / grad_accum, grads)
+                metrics = jax.tree.map(lambda m: m[-1], metrics_all)
+            else:
+                grads, metrics = grads_of(params, batch)
+            params, opt_state, opt_metrics = optimizer.update(
+                grads, opt_state, params
+            )
+            metrics = dict(metrics, **opt_metrics)
+            return params, opt_state, metrics
+
+    return train_step
+
+
+def fit(
+    model,
+    cfg: ArchConfig,
+    optimizer,
+    data_iter,
+    *,
+    steps: int,
+    params=None,
+    opt_state=None,
+    ckpt_manager=None,
+    ckpt_every: int = 0,
+    start_step: int = 0,
+    log_every: int = 10,
+    log_fn=print,
+) -> Tuple[Any, Any, Dict]:
+    """Single-process training driver with checkpoint/restart.  Returns
+    (params, opt_state, last_metrics)."""
+    if params is None:
+        params = model.init(jax.random.PRNGKey(0))
+    if opt_state is None:
+        opt_state = optimizer.init(params)
+    step_fn = jax.jit(
+        make_train_step(model, cfg, optimizer), donate_argnums=(0, 1)
+    )
+    metrics = {}
+    for step, batch in data_iter:
+        if step >= steps:
+            break
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            log_fn(
+                f"step {step:5d} loss {m.get('loss', 0):.4f} "
+                f"acc {m.get('accuracy', 0):.3f} "
+                f"gnorm {m.get('grad_norm', 0):.2f}"
+            )
+        if ckpt_manager is not None and ckpt_every and \
+                (step + 1) % ckpt_every == 0:
+            ckpt_manager.save(
+                step + 1, dict(params=params, opt_state=opt_state)
+            )
+    if ckpt_manager is not None:
+        ckpt_manager.wait()
+    return params, opt_state, metrics

@@ -1,0 +1,10 @@
+# NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests
+# and benches must see the real single CPU device.  Multi-device tests
+# spawn subprocesses with their own env (see tests/helpers.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,27 @@
+"""Test helpers: subprocess runner for multi-(host-)device tests."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 480):
+    """Run `code` in a subprocess with n_devices fake host devices.
+    Returns stdout; raises on nonzero exit."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices}"
+    )
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=timeout,
+    )
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{out.stdout}\n"
+            f"STDERR:\n{out.stderr[-4000:]}"
+        )
+    return out.stdout

@@ -1,0 +1,154 @@
+"""dCSR core: construction, partitioning, round trips, invariants
+(unit + hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    from_edges, to_edges, repartition, merge_to_single,
+    block_partition, hash_partition, voxel_partition, rcb_partition,
+    balance, edge_cut, build_delay_ell,
+)
+from repro.core.state import EDGE_DELAY, EDGE_WEIGHT
+
+
+def random_net(rng, n=64, m=400, k=4):
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.normal(size=m).astype(np.float32)
+    d = rng.integers(1, 6, m).astype(np.float32)
+    coords = rng.random((n, 3)).astype(np.float32)
+    net = from_edges(
+        n, src, dst, np.stack([w, d], 1), coords=coords, k=k,
+    )
+    return net, (src, dst, w, d)
+
+
+def test_from_edges_preserves_edges(rng):
+    net, (src, dst, w, d) = random_net(rng)
+    assert net.n == 64 and net.m == 400
+    s2, d2, _, st2 = to_edges(net)
+    # map back through global_ids to original labels
+    gids = np.concatenate([p.global_ids for p in net.parts])
+    orig = set(zip(src.tolist(), dst.tolist(), np.round(w, 5).tolist()))
+    got = set(
+        zip(gids[s2].tolist(), gids[d2].tolist(),
+            np.round(st2[:, EDGE_WEIGHT], 5).tolist())
+    )
+    assert orig == got
+
+
+def test_row_ptr_invariants(rng):
+    net, _ = random_net(rng, k=3)
+    net.validate()
+    assert net.edist[-1] == net.m
+    for p in net.parts:
+        assert (np.diff(p.row_ptr) >= 0).all()
+        # col ids sorted within each row (construction sorts (dst, src))
+        for r in range(min(p.n, 10)):
+            cols = p.col_idx[p.row_ptr[r]: p.row_ptr[r + 1]]
+            assert (np.diff(cols) >= 0).all()
+
+
+def test_repartition_roundtrip(rng):
+    net, _ = random_net(rng, k=4)
+    merged = merge_to_single(net)
+    assert merged.k == 1 and merged.m == net.m
+    again = repartition(merged, hash_partition(net.n, 5, seed=3))
+    assert again.k == 5 and again.m == net.m
+    # provenance: original ids preserved as a permutation
+    gids = np.concatenate([p.global_ids for p in again.parts])
+    assert sorted(gids.tolist()) == list(range(net.n))
+
+
+@given(
+    n=st.integers(4, 40),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=25, deadline=None)
+def test_partitioners_cover_and_balance(n, k, seed):
+    rng = np.random.default_rng(seed)
+    coords = rng.random((n, 3)).astype(np.float32)
+    k = min(k, n)
+    for name, asn in [
+        ("block", block_partition(n, k)),
+        ("hash", hash_partition(n, k, seed)),
+        ("rcb", rcb_partition(coords, k)),
+        ("voxel", voxel_partition(coords, k)),
+    ]:
+        assert asn.shape == (n,), name
+        assert asn.min() >= 0 and asn.max() < k, name
+        sizes = np.bincount(asn, minlength=k)
+        assert sizes.sum() == n
+        if name in ("block", "hash", "rcb"):
+            assert balance(asn, k) <= 2.0, (name, sizes)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_block_partition_contiguous(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 200))
+    k = int(rng.integers(1, 17))
+    asn = block_partition(n, k)
+    assert (np.diff(asn) >= 0).all()  # contiguous ranges
+    sizes = np.bincount(asn, minlength=k)
+    assert sizes.max() - sizes[sizes > 0].min() <= 1
+
+
+def test_ell_roundtrip_and_fill(rng):
+    net, _ = random_net(rng, k=2)
+    for p in net.parts:
+        ell = build_delay_ell(p, net.n, align_k=4, align_rows=4)
+        assert sum(
+            int(b.valid.sum()) for b in ell.buckets
+        ) == p.m
+        # every edge appears exactly once
+        idx = np.concatenate(
+            [b.edge_index[b.edge_index >= 0] for b in ell.buckets]
+        )
+        assert sorted(idx.tolist()) == list(range(p.m))
+        # weight scatter-back is the identity without modification
+        before = p.edge_state[:, EDGE_WEIGHT].copy()
+        ell.scatter_weights_back(p)
+        np.testing.assert_array_equal(before, p.edge_state[:, EDGE_WEIGHT])
+        assert 0 < ell.fill_factor <= 1.0
+
+
+def test_ell_heavy_row_split(rng):
+    n, m = 20, 600
+    src = rng.integers(0, n, m)
+    dst = np.zeros(m, dtype=np.int64)  # all edges hit row 0
+    dst[m // 2:] = rng.integers(0, n, m - m // 2)
+    w = rng.normal(size=m).astype(np.float32)
+    d = np.ones(m, dtype=np.float32)
+    net = from_edges(n, src, dst, np.stack([w, d], 1), k=1)
+    p = net.parts[0]
+    ell = build_delay_ell(p, n, align_k=4, align_rows=4, max_k=16)
+    b = ell.buckets[0]
+    assert not b.identity_rows
+    assert b.cols.shape[1] <= 16
+    # virtual rows re-reduce to the correct row sums
+    act = rng.random(n).astype(np.float32)
+    cur_virt = (b.weights * act[b.cols]).sum(1)
+    cur = np.zeros(p.n)
+    np.add.at(cur, b.row_map, cur_virt)
+    # oracle from CSR
+    want = np.zeros(p.n)
+    tgt = p.edge_targets()
+    np.add.at(want, tgt, p.edge_state[:, EDGE_WEIGHT] * act[p.col_idx])
+    np.testing.assert_allclose(cur, want, rtol=1e-4, atol=1e-5)
+
+
+def test_rate_rebalance_improves_weighted_balance(rng):
+    from repro.core import rate_rebalance
+    n, k = 400, 4
+    coords = rng.random((n, 3)).astype(np.float32)
+    rates = np.zeros(n)
+    rates[: n // 8] = 50.0  # hot corner
+    coords[: n // 8] *= 0.1
+    base = rcb_partition(coords, k)
+    reb = rate_rebalance(coords, k, rates)
+    w = 1.0 + rates
+    assert balance(reb, k, w) <= balance(base, k, w) + 1e-9

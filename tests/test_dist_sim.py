@@ -1,0 +1,142 @@
+"""Distributed simulator (shard_map over k fake host devices, subprocess)
+vs the single-device oracle: bit-level raster equality, compressed
+exchange equivalence, plus the distributed checkpoint-restart path."""
+import pytest
+
+from helpers import run_with_devices
+
+EQUIV = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.snn import spatial_random, to_dcsr, Simulator, DistSimulator, SimConfig
+from repro.core import merge_to_single, rcb_partition
+
+net = spatial_random(240, avg_degree=10, seed=4)
+asn = rcb_partition(net.coords, 8)
+d = to_dcsr(net, assignment=asn, uniform=True)
+assert d.k == 8
+cfg = SimConfig(align_k=8, record_raster=True, exchange="{exchange}")
+dist = DistSimulator(d, cfg)
+st = dist.init_state()
+st, outs = dist.run(st, 60)
+raster_d = np.asarray(outs["raster"]).reshape(60, -1)  # (steps, k*n_p)
+
+oracle_net = merge_to_single(d)
+sim = Simulator(oracle_net, SimConfig(align_k=8, record_raster=True))
+st_o, outs_o = sim.run(sim.init_state(), 60)
+raster_o = np.asarray(outs_o["raster"])
+assert raster_d.shape == raster_o.shape, (raster_d.shape, raster_o.shape)
+mism = float(np.mean(raster_d != raster_o))
+print("mismatch", mism)
+assert mism == 0.0
+vd = np.asarray(st["vtx_state"]).reshape(-1, st["vtx_state"].shape[-1])
+vo = np.asarray(st_o["vtx_state"])
+np.testing.assert_allclose(vd, vo, rtol=1e-4, atol=1e-4)
+print("DIST EQUIV OK")
+"""
+
+
+@pytest.mark.slow
+def test_dist_sim_matches_oracle_dense():
+    out = run_with_devices(EQUIV.format(exchange="dense"), n_devices=8)
+    assert "DIST EQUIV OK" in out
+
+
+@pytest.mark.slow
+def test_dist_sim_matches_oracle_compressed_index():
+    out = run_with_devices(EQUIV.format(exchange="index"), n_devices=8)
+    assert "DIST EQUIV OK" in out
+
+
+STDP_DIST = """
+import numpy as np
+from repro.snn import balanced_ei, to_dcsr, Simulator, DistSimulator, SimConfig
+from repro.core import merge_to_single, block_partition
+
+net = balanced_ei(160, stdp=True, seed=7)
+net.vtx_state[:, 2] += 1.0
+d = to_dcsr(net, assignment=block_partition(net.n, 4), uniform=True)
+cfg = SimConfig(align_k=8)
+dist = DistSimulator(d, cfg)
+st, _ = dist.run(dist.init_state(), 50)
+dist.state_to_dcsr(st)
+w_dist = np.concatenate([p.edge_state[:, 0] for p in d.parts])
+
+oracle = merge_to_single(to_dcsr(
+    balanced_ei(160, stdp=True, seed=7), assignment=block_partition(160, 4), uniform=True))
+# re-apply bias bump lost by rebuilding
+import repro.snn.network as N
+net2 = balanced_ei(160, stdp=True, seed=7)
+net2.vtx_state[:, 2] += 1.0
+oracle = merge_to_single(to_dcsr(net2, assignment=block_partition(160, 4), uniform=True))
+sim = Simulator(oracle, cfg)
+st_o, _ = sim.run(sim.init_state(), 50)
+sim.state_to_dcsr(st_o)
+w_o = oracle.parts[0].edge_state[:, 0]
+np.testing.assert_allclose(np.sort(w_dist), np.sort(w_o), rtol=1e-4, atol=1e-5)
+print("DIST STDP OK")
+"""
+
+
+@pytest.mark.slow
+def test_dist_stdp_weights_match_oracle():
+    out = run_with_devices(STDP_DIST, n_devices=4)
+    assert "DIST STDP OK" in out
+
+
+CKPT_DIST = """
+import numpy as np, tempfile, os
+from repro.snn import spatial_random, to_dcsr, DistSimulator, SimConfig
+from repro.io import save_binary, load_binary
+from repro.core import rcb_partition
+
+def build():
+    net = spatial_random(160, avg_degree=8, seed=12)
+    return to_dcsr(net, assignment=rcb_partition(net.coords, 4),
+                   uniform=True)
+
+d = build()
+cfg = SimConfig(align_k=8, record_raster=True)
+dist = DistSimulator(d, cfg)
+st, outs_a = dist.run(dist.init_state(), 40)
+
+# checkpoint: runtime arrays per partition + dCSR to disk
+dist.state_to_dcsr(st)
+sim_state = {}
+for p in range(d.k):
+    sim_state[p] = dict(
+        ring=np.asarray(st["ring"])[p],
+        hist=np.asarray(st["hist"])[p],
+        tr_plus=np.asarray(st["tr_plus"])[p],
+        tr_minus=np.asarray(st["tr_minus"])[p],
+    )
+with tempfile.TemporaryDirectory() as td:
+    save_binary(d, td, sim_state=sim_state, t_now=int(st["t"]))
+    d2, ss2, t2 = load_binary(td)
+
+dist2 = DistSimulator(d2, cfg)
+st2 = dist2.init_state(t0=t2)
+st2 = dict(st2,
+    vtx_state=st["vtx_state"],
+    ring=np.stack([ss2[p]["ring"] for p in range(d2.k)]),
+    hist=np.stack([ss2[p]["hist"] for p in range(d2.k)]),
+    tr_plus=np.stack([ss2[p]["tr_plus"] for p in range(d2.k)]),
+    tr_minus=np.stack([ss2[p]["tr_minus"] for p in range(d2.k)]),
+)
+import jax.numpy as jnp
+st2 = {k: (jnp.asarray(v) if k != "weights" else v) for k, v in st2.items()}
+st2b, outs_b = dist2.run(st2, 30)
+
+# uninterrupted reference (fresh network: d was mutated by state_to_dcsr)
+dist3 = DistSimulator(build(), cfg)
+st3, outs_full = dist3.run(dist3.init_state(), 70)
+ra = np.asarray(outs_full["raster"])[40:]
+rb = np.asarray(outs_b["raster"])
+assert np.array_equal(ra, rb), "restart diverged"
+print("DIST CKPT OK")
+"""
+
+
+@pytest.mark.slow
+def test_dist_checkpoint_restart_exact():
+    out = run_with_devices(CKPT_DIST, n_devices=4)
+    assert "DIST CKPT OK" in out

@@ -1,0 +1,127 @@
+"""Per-arch smoke tests (assignment requirement): REDUCED config of the
+same family, one forward + one train step on CPU, asserting output shapes
+and no NaNs.  Full configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, cells_for, get_config
+from repro.models import build_model
+from repro.train import AdamW, make_train_step
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def make_batch(cfg, key, B=2, S=32):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.encdec:
+        batch["frames"] = jax.random.normal(
+            key, (B, S, cfg.d_model), jnp.float32
+        )
+    if cfg.n_img_tokens:
+        batch["tokens"] = toks[:, : S - cfg.n_img_tokens]
+        batch["img_embed"] = jax.random.normal(
+            key, (B, cfg.n_img_tokens, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    kwargs = {k: v for k, v in batch.items() if k != "tokens"}
+    logits, _, aux = model.apply(params, batch["tokens"], **kwargs)
+    S_out = batch["tokens"].shape[1] + (
+        cfg.n_img_tokens if cfg.n_img_tokens else 0
+    )
+    assert logits.shape == (2, S_out, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any()), arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, cfg, opt))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    params2, opt_state2, metrics = step(params, opt_state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), arch
+    # params actually moved
+    delta = sum(
+        float(jnp.abs(a - b).sum())
+        for a, b in zip(jax.tree.leaves(params2), jax.tree.leaves(params))
+        if a.dtype.kind == "f"
+    )
+    assert delta > 0, arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_smoke(arch):
+    """One prefill + two decode steps with the KV cache (decode shapes in
+    the assignment lower this path)."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jax.random.randint(
+        jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size, jnp.int32
+    )
+    kwargs = {}
+    if cfg.encdec:
+        kwargs["frames"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, S, cfg.d_model), jnp.float32
+        )
+        cache = model.init_cache(B, S + 2, S)
+    elif cfg.n_img_tokens:
+        kwargs["img_embed"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.n_img_tokens, cfg.d_model),
+            jnp.float32,
+        )
+        cache = model.init_cache(B, S + 2 + cfg.n_img_tokens)
+    else:
+        cache = model.init_cache(B, S + 2)
+    logits, cache, _ = model.apply(
+        params, toks, cache=cache, **kwargs
+    )
+    pos0 = S + (cfg.n_img_tokens or 0)
+    for i in range(2):
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        logits, cache, _ = model.apply(
+            params, nxt, cache=cache, cache_pos=jnp.asarray(pos0 + i),
+        )
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert not bool(jnp.isnan(logits.astype(jnp.float32)).any()), arch
+
+
+def test_n_params_analytic_close_to_actual():
+    """Analytic counter (used for MODEL_FLOPS) within 20% of real param
+    count for every arch family (reduced configs)."""
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        actual = sum(
+            int(np.prod(l.shape)) for l in jax.tree.leaves(sds)
+        )
+        est = cfg.n_params()
+        assert 0.5 < est / actual < 2.0, (arch, est, actual)
+
+
+def test_cells_for_assignment_rules():
+    long_archs = {
+        a for a in ALL_ARCHS
+        if any(c.name == "long_500k" for c in cells_for(get_config(a)))
+    }
+    assert long_archs == {"recurrentgemma-2b", "xlstm-350m"}
+    for a in ALL_ARCHS:
+        names = [c.name for c in cells_for(get_config(a))]
+        assert names[:3] == ["train_4k", "prefill_32k", "decode_32k"]

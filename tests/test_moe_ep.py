@@ -1,0 +1,86 @@
+"""EP shard_map MoE vs GSPMD baseline: forward + gradient equivalence
+under a real (fake-device) mesh."""
+import pytest
+
+from helpers import run_with_devices
+
+EP_EQUIV = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.models.moe import moe_init, moe_apply
+from repro.sharding.policy import make_policy, policy_context
+
+cfg = dataclasses.replace(
+    get_config("granite-moe-3b-a800m").reduced(), capacity_factor=8.0)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+pol = make_policy(mesh, cfg, 4)
+p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+
+def run(impl):
+    c = dataclasses.replace(cfg, moe_impl=impl)
+    def f(p, x):
+        with policy_context(pol):
+            return moe_apply(p, x, c)[0]
+    with mesh:
+        return jax.jit(f)(p, x)
+
+o1 = run("gspmd")
+o2 = run("ep_shard_map")
+assert float(jnp.max(jnp.abs(o1 - o2))) < 1e-4
+
+def loss(p, impl):
+    c = dataclasses.replace(cfg, moe_impl=impl)
+    with policy_context(pol):
+        out, aux = moe_apply(p, x, c)
+    return jnp.sum(out ** 2)
+with mesh:
+    g1 = jax.jit(jax.grad(lambda p: loss(p, "gspmd")))(p)
+    g2 = jax.jit(jax.grad(lambda p: loss(p, "ep_shard_map")))(p)
+for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+    a, b = np.asarray(a), np.asarray(b)
+    rel = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert rel < 1e-3, rel
+print("EP MOE OK")
+"""
+
+
+@pytest.mark.slow
+def test_ep_shard_map_matches_gspmd():
+    out = run_with_devices(EP_EQUIV, n_devices=8)
+    assert "EP MOE OK" in out
+
+
+EP_PADDED = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.models.moe import moe_init, moe_apply
+from repro.sharding.policy import make_policy, policy_context
+
+# E=6 over a 4-way model axis -> zero-padded to 8 (granite's 40-over-16)
+cfg = dataclasses.replace(get_config("granite-moe-3b-a800m").reduced(),
+                          n_experts=6, top_k=2, capacity_factor=8.0)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+pol = make_policy(mesh, cfg, 4)
+p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+
+def run(impl):
+    c = dataclasses.replace(cfg, moe_impl=impl)
+    def f(p, x):
+        with policy_context(pol):
+            return moe_apply(p, x, c)[0]
+    with mesh:
+        return jax.jit(f)(p, x)
+
+assert float(jnp.max(jnp.abs(run("gspmd") - run("ep_shard_map")))) < 1e-4
+print("PADDED EP OK")
+"""
+
+
+@pytest.mark.slow
+def test_ep_padded_nondivisible_experts():
+    out = run_with_devices(EP_PADDED, n_devices=8)
+    assert "PADDED EP OK" in out

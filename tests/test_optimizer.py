@@ -1,0 +1,103 @@
+"""Optimizer: AdamW vs hand-rolled reference, 8-bit moment quantization
+error bounds, clipping, schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train.optimizer import (
+    AdamW, SGDM, cosine_schedule, global_norm, _q8_quantize,
+    _q8_dequantize,
+)
+
+
+def test_adamw_matches_reference():
+    opt = AdamW(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                clip_norm=None)
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.asarray([[0.1, -0.2], [0.3, 0.4]])}
+    state = opt.init(p)
+    p1, state, _ = opt.update(g, state, p)
+    # closed-form first step: m=0.1g/0.1=g, v=0.01g^2/0.01=g^2
+    want = np.asarray(p["w"]) - 1e-2 * np.asarray(g["w"]) / (
+        np.abs(np.asarray(g["w"])) + 1e-8
+    )
+    np.testing.assert_allclose(np.asarray(p1["w"]), want, rtol=1e-5)
+
+
+def test_weight_decay_only_on_matrices():
+    opt = AdamW(lr=1e-2, weight_decay=0.5, clip_norm=None)
+    p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    state = opt.init(p)
+    p1, _, _ = opt.update(g, state, p)
+    assert float(jnp.abs(p1["w"] - 1).max()) > 0  # decayed
+    np.testing.assert_allclose(np.asarray(p1["b"]), 1.0)  # not decayed
+
+
+def test_clip_norm():
+    opt = AdamW(lr=1e-3, clip_norm=1.0)
+    p = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    st_ = opt.init(p)
+    _, _, m = opt.update(g, st_, p)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+@given(st.integers(0, 40), st.integers(1, 400))
+@settings(max_examples=20, deadline=None)
+def test_q8_roundtrip_error(seed, n):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=n) * 10 ** rng.uniform(-4, 2)).astype(
+        np.float32
+    )
+    q = _q8_quantize(jnp.asarray(x))
+    y = np.asarray(_q8_dequantize(q, (n,)))
+    blocks = np.pad(x, (0, (-n) % 128)).reshape(-1, 128)
+    scale = np.abs(blocks).max(1) / 127.0
+    err = np.abs(y - x)
+    bound = np.repeat(scale, 128)[:n] * 0.5 + 1e-12
+    assert (err <= bound + 1e-9).all()
+
+
+def test_adamw_8bit_tracks_fp32():
+    """Quantized-moment AdamW stays close to exact AdamW over a short
+    quadratic optimization."""
+    def loss(p):
+        return jnp.sum((p["w"] - 3.0) ** 2)
+
+    p_a = {"w": jnp.zeros((256,))}
+    p_b = {"w": jnp.zeros((256,))}
+    opt_a = AdamW(lr=5e-2, clip_norm=None)
+    opt_b = AdamW(lr=5e-2, clip_norm=None, quantize_moments=True)
+    s_a, s_b = opt_a.init(p_a), opt_b.init(p_b)
+    for _ in range(60):
+        g_a = jax.grad(loss)(p_a)
+        g_b = jax.grad(loss)(p_b)
+        p_a, s_a, _ = opt_a.update(g_a, s_a, p_a)
+        p_b, s_b, _ = opt_b.update(g_b, s_b, p_b)
+    la, lb = float(loss(p_a)), float(loss(p_b))
+    assert lb < 0.1 * 9 * 256, (la, lb)  # both converge well
+    assert abs(la - lb) / max(la, 1e-3) < 2.0
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=110, floor=0.1)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0)
+    assert float(lr(110)) == pytest.approx(0.1, abs=1e-3)
+    assert float(lr(5)) == pytest.approx(0.5)
+
+
+def test_sgdm_descends():
+    def loss(p):
+        return jnp.sum((p["w"] - 1.0) ** 2)
+
+    p = {"w": jnp.zeros((8,))}
+    opt = SGDM(lr=0.1)
+    s = opt.init(p)
+    l0 = float(loss(p))
+    for _ in range(20):
+        p, s, _ = opt.update(jax.grad(loss)(p), s, p)
+    assert float(loss(p)) < 0.05 * l0

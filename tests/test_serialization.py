@@ -1,0 +1,144 @@
+"""Paper-faithful text format + binary fast path: round trips, per-file
+parallel structure, hypothesis property tests, 'none' marker semantics."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import from_edges, rcb_partition
+from repro.core.events import EVENT_DTYPE, inflight_events, ring_from_events
+from repro.io import load_text, save_text, save_binary, load_binary
+from repro.snn import spatial_random, balanced_ei, to_dcsr
+
+
+def _nets_equal(a, b, atol=1e-5):
+    assert a.n == b.n and a.m == b.m and a.k == b.k
+    np.testing.assert_array_equal(a.dist, b.dist)
+    for pa, pb in zip(a.parts, b.parts):
+        np.testing.assert_array_equal(pa.global_ids, pb.global_ids)
+        np.testing.assert_array_equal(pa.row_ptr, pb.row_ptr)
+        np.testing.assert_array_equal(pa.col_idx, pb.col_idx)
+        np.testing.assert_array_equal(pa.vtx_model, pb.vtx_model)
+        np.testing.assert_array_equal(pa.edge_model, pb.edge_model)
+        np.testing.assert_allclose(pa.vtx_state, pb.vtx_state, atol=atol)
+        np.testing.assert_allclose(pa.edge_state, pb.edge_state, atol=atol)
+        np.testing.assert_allclose(pa.coords, pb.coords, atol=atol)
+
+
+def test_text_roundtrip_multi_partition(tmp_path):
+    net = spatial_random(120, avg_degree=9, seed=2, stdp=True)
+    d = to_dcsr(net, assignment=rcb_partition(net.coords, 3))
+    sizes = save_text(d, str(tmp_path), "net", t_now=17)
+    d2, evs, t = load_text(str(tmp_path), "net")
+    assert t == 17
+    _nets_equal(d, d2)
+    # the six paper file kinds all exist
+    for kind in (".dist", ".model", ".adjcy", ".coord", ".state",
+                 ".event"):
+        assert sizes[kind] >= 0
+    files = os.listdir(tmp_path)
+    for p in range(3):
+        for kind in ("adjcy", "coord", "state", "event"):
+            assert f"net.{kind}.{p}" in files
+
+
+def test_text_files_parallel_independent(tmp_path):
+    """Each partition's files parse standalone (the paper's parallel
+    ingest property): loading with a re-written single partition file
+    changes only that partition."""
+    net = spatial_random(90, avg_degree=6, seed=5)
+    d = to_dcsr(net, assignment=rcb_partition(net.coords, 3))
+    save_text(d, str(tmp_path), "net")
+    d2, _, _ = load_text(str(tmp_path), "net")
+    # hand-edit one weight in partition 1's state file only
+    p1 = os.path.join(tmp_path, "net.state.1")
+    lines = open(p1).read().splitlines()
+    toks = lines[0].split()
+    # vertex model is 'lif' with 3 state vars -> first edge weight at 5
+    if len(toks) > 5 and toks[4] != "none":
+        toks[5] = "9.5"
+    lines[0] = " ".join(toks)
+    open(p1, "w").write("\n".join(lines) + "\n")
+    d3, _, _ = load_text(str(tmp_path), "net")
+    _nets_equal_part = d3.parts[0]
+    np.testing.assert_allclose(
+        d3.parts[0].edge_state, d2.parts[0].edge_state
+    )
+    np.testing.assert_allclose(
+        d3.parts[2].edge_state, d2.parts[2].edge_state
+    )
+
+
+def test_event_file_roundtrip(tmp_path):
+    net = spatial_random(80, avg_degree=8, seed=3)
+    d = to_dcsr(net, assignment=rcb_partition(net.coords, 2))
+    D = max(d.max_delay(), 1)
+    rng = np.random.default_rng(0)
+    hist = (rng.random((D, d.n)) < 0.15).astype(np.uint8)
+    t_now = 25
+    evs = [
+        inflight_events(p, hist, t_now, D) for p in d.parts
+    ]
+    save_text(d, str(tmp_path), "net", events_by_part=evs, t_now=t_now)
+    d2, evs2, t2 = load_text(str(tmp_path), "net")
+    assert t2 == t_now
+    for a, b, p in zip(evs, evs2, d2.parts):
+        assert len(a) == len(b)
+        np.testing.assert_array_equal(a["src"], b["src"])
+        np.testing.assert_array_equal(a["t_arr"], b["t_arr"])
+        np.testing.assert_allclose(a["weight"], b["weight"], atol=1e-6)
+        # ring rebuild identical from loaded events
+        r1 = ring_from_events(a, p.row_start, p.n, D + 1, t_now)
+        r2 = ring_from_events(b, p.row_start, p.n, D + 1, t_now)
+        np.testing.assert_allclose(r1, r2, atol=1e-6)
+
+
+def test_binary_crc_detects_corruption(tmp_path):
+    net = spatial_random(60, avg_degree=5, seed=1)
+    d = to_dcsr(net, k=2)
+    save_binary(d, str(tmp_path))
+    fn = os.path.join(tmp_path, "part1.npz")
+    raw = bytearray(open(fn, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(fn, "wb").write(bytes(raw))
+    with pytest.raises(IOError, match="corrupt"):
+        load_binary(str(tmp_path))
+
+
+def test_storage_linear_in_synapses(tmp_path):
+    """The paper's claim: on-disk cost is linear in synapse count and
+    independent of partition count."""
+    sizes = {}
+    for m_scale in (4, 8):
+        net = spatial_random(100, avg_degree=m_scale, seed=0)
+        d = to_dcsr(net, k=1)
+        s = save_text(d, str(tmp_path / f"s{m_scale}"), "net")
+        sizes[m_scale] = (d.m, s[".state"] + s[".adjcy"])
+    (m1, b1), (m2, b2) = sizes[4], sizes[8]
+    ratio = (b2 / m2) / (b1 / m1)
+    assert 0.8 < ratio < 1.25, f"not linear: {sizes}"
+    # partition-count independence (±2% for per-file overhead)
+    net = spatial_random(100, avg_degree=8, seed=0)
+    b_k = {}
+    for k in (1, 4):
+        d = to_dcsr(net, k=k)
+        s = save_text(d, str(tmp_path / f"k{k}"), "net")
+        b_k[k] = s[".state"]
+    assert abs(b_k[1] - b_k[4]) / b_k[1] < 0.05, b_k
+
+
+@given(
+    n=st.integers(5, 40),
+    deg=st.integers(1, 6),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 30),
+)
+@settings(max_examples=12, deadline=None)
+def test_text_roundtrip_property(tmp_path_factory, n, deg, k, seed):
+    tmp = tmp_path_factory.mktemp("rt")
+    net = spatial_random(n, avg_degree=deg, seed=seed)
+    d = to_dcsr(net, k=min(k, n))
+    save_text(d, str(tmp), "net")
+    d2, _, _ = load_text(str(tmp), "net")
+    _nets_equal(d, d2)

@@ -1,0 +1,131 @@
+"""End-to-end training + serving: loss decreases, checkpoint/restart
+continuity, grad-accum equivalence, data determinism, generation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.io import CheckpointManager
+from repro.models import build_model
+from repro.train import (
+    AdamW, DataConfig, batch_iterator, fit, greedy_generate, host_batch,
+    make_train_step,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg)
+    return cfg, model
+
+
+def test_loss_decreases(tiny):
+    cfg, model = tiny
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    opt = AdamW(lr=2e-3, weight_decay=0.0)
+    params = model.init(jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, cfg, opt))
+    opt_state = opt.init(params)
+    losses = []
+    for s, batch in batch_iterator(dc):
+        if s >= 50:
+            break
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < 0.5 * losses[0], (
+        losses[0], losses[-5:]
+    )
+
+
+def test_grad_accum_equivalent(tiny):
+    cfg, model = tiny
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                    global_batch=8)
+    batch = host_batch(dc, 0)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3, clip_norm=None)
+    s1 = jax.jit(make_train_step(model, cfg, opt, grad_accum=1))
+    s4 = jax.jit(make_train_step(model, cfg, opt, grad_accum=4))
+    p1, _, m1 = s1(params, opt.init(params), batch)
+    p4, _, m4 = s4(params, opt.init(params), batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-3, atol=2e-4,
+        )
+
+
+def test_checkpoint_restart_training_continuity(tiny, tmp_path):
+    cfg, model = tiny
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    opt = AdamW(lr=1e-3)
+
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    pA, oA, _ = fit(model, cfg, opt, batch_iterator(dc), steps=6,
+                    ckpt_manager=cm, ckpt_every=3, log_every=0)
+    # restart from step 3, resume data at step 3 -> identical to straight run
+    tree, step = cm.restore(step=3, like=dict(
+        params=jax.eval_shape(model.init, jax.random.PRNGKey(0)),
+        opt_state=jax.eval_shape(opt.init,
+                                 jax.eval_shape(model.init,
+                                                jax.random.PRNGKey(0))),
+    ))
+    assert step == 3
+    pB, oB, _ = fit(
+        model, cfg, opt, batch_iterator(dc, start_step=3), steps=6,
+        params=jax.tree.map(jnp.asarray, tree["params"]),
+        opt_state=jax.tree.map(jnp.asarray, tree["opt_state"]),
+        log_every=0,
+    )
+    for a, b in zip(jax.tree.leaves(pA), jax.tree.leaves(pB)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-5, atol=1e-6,
+        )
+
+
+def test_data_determinism_and_host_sharding():
+    dc = DataConfig(vocab_size=101, seq_len=16, global_batch=8)
+    a = host_batch(dc, 7)["tokens"]
+    b = host_batch(dc, 7)["tokens"]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # 2 hosts partition the global batch deterministically & disjointly
+    h0 = host_batch(
+        DataConfig(vocab_size=101, seq_len=16, global_batch=8,
+                   n_hosts=2, host_id=0), 7
+    )["tokens"]
+    h1 = host_batch(
+        DataConfig(vocab_size=101, seq_len=16, global_batch=8,
+                   n_hosts=2, host_id=1), 7
+    )["tokens"]
+    assert h0.shape == (4, 16) and h1.shape == (4, 16)
+    assert not np.array_equal(np.asarray(h0), np.asarray(h1))
+    # affine task property: t_{i+1} = (a t_i + b) mod V for each row
+    seq = np.asarray(a)
+    for row in seq:
+        d01 = (row[1] - row[0]) % 101
+        # verify recurrence consistency: the same (a, b) explains all steps
+        found = False
+        for aa in range(1, 8):
+            bb = (row[1] - aa * row[0]) % 101
+            if all((aa * row[i] + bb) % 101 == row[i + 1]
+                   for i in range(len(row) - 1)):
+                found = True
+                break
+        assert found, row[:6]
+
+
+def test_greedy_generate(tiny):
+    cfg, model = tiny
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(
+        jax.random.PRNGKey(5), (2, 8), 0, cfg.vocab_size, jnp.int32
+    )
+    out = greedy_generate(model, cfg, params, prompt, max_new=6)
+    assert out.shape == (2, 6)
+    assert (np.asarray(out) >= 0).all()
+    assert (np.asarray(out) < cfg.vocab_size).all()
+    out2 = greedy_generate(model, cfg, params, prompt, max_new=6)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
