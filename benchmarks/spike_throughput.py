@@ -1,9 +1,18 @@
 """Kernel/simulator throughput: synaptic events processed per second and
-per-step wall time for the microcircuit under the jitted scan loop
-(CPU here; the Pallas path targets TPU and is validated in interpret
-mode by tests)."""
+per-step wall time for the microcircuit under the jitted scan loop.
+
+Modes (``--mode``):
+  * ``ref``   — the pure-jnp oracle path (CPU production path; default)
+  * ``fused`` — fused single-kernel step vs. unfused three-kernel step,
+                both through the Pallas engine, reported side by side.
+
+On CPU the Pallas engines run in interpret mode, so the fused-vs-unfused
+numbers are an emulation proxy; the kernels compile natively on TPU where
+the HBM round-trips the fusion removes actually dominate (run there for
+the real comparison)."""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -12,13 +21,20 @@ import numpy as np
 from repro.snn import SimConfig, Simulator, microcircuit, to_dcsr
 
 
-def run(scale=0.02, steps=200, backend="ref"):
+def run(scale=0.02, steps=200, backend="ref", fused=None):
     net = microcircuit(scale=scale, seed=0)
     d = to_dcsr(net, k=1)
-    sim = Simulator(d, SimConfig(align_k=32, backend=backend))
+    # compiled Pallas needs 128-lane-aligned panels; interpret/ref runs use
+    # 32 to keep the CPU emulation panels small
+    align_k = 128 if backend == "pallas" else 32
+    sim = Simulator(
+        d, SimConfig(align_k=align_k, backend=backend, fused=fused)
+    )
     st = sim.init_state()
-    # warmup + compile
-    st2, outs = sim.run(st, 10)
+    # warmup + compile with the SAME static steps value: sim.run is jitted
+    # with steps static, so a different warmup length would leave the timed
+    # call to recompile inside the measured window
+    st2, outs = sim.run(st, steps)
     jax.block_until_ready(st2["vtx_state"])
     t0 = time.perf_counter()
     st3, outs = sim.run(st2, steps)
@@ -31,11 +47,12 @@ def run(scale=0.02, steps=200, backend="ref"):
         syn_events_per_s=d.m * rate * steps / dt,
         mean_activity=rate,
         fill=sim.ell.fill_factor,
+        engine=sim.engine_choice.engine,
     )
 
 
-def main(quick=True):
-    r = run(scale=0.01 if quick else 0.03, steps=100 if quick else 300)
+def main_ref(scale, steps):
+    r = run(scale=scale, steps=steps)
     print(
         f"spike_throughput,{r['us_per_step']:.0f},"
         f"m={r['m']};events/s={r['syn_events_per_s']:.2e};"
@@ -43,5 +60,50 @@ def main(quick=True):
     )
 
 
+def main_fused(scale, steps):
+    """Fused vs unfused step latency through the Pallas engine."""
+    from repro.kernels.dispatch import platform_default
+
+    backend = platform_default()
+    fused = run(scale=scale, steps=steps, backend=backend, fused=True)
+    unfused = run(scale=scale, steps=steps, backend=backend, fused=False)
+    assert fused["engine"] == "fused" and unfused["engine"] == "unfused"
+    speedup = unfused["us_per_step"] / max(fused["us_per_step"], 1e-9)
+    print(
+        f"spike_throughput_fused,{fused['us_per_step']:.0f},"
+        f"unfused_us={unfused['us_per_step']:.0f};"
+        f"speedup={speedup:.2f}x;backend={backend};"
+        f"n={fused['n']};m={fused['m']}"
+    )
+
+
+def main(argv=None, quick=None):
+    if quick is not None and argv is None:  # benchmarks/run.py entry
+        argv = ["--quick"] if quick else []
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=("ref", "fused"), default="ref")
+    ap.add_argument("--scale", type=float, default=None,
+                    help="microcircuit scale (default per mode)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    if args.mode == "fused":
+        scale = args.scale if args.scale is not None else (
+            0.005 if args.quick else 0.01
+        )
+        steps = args.steps if args.steps is not None else (
+            30 if args.quick else 100
+        )
+        main_fused(scale, steps)
+    else:
+        scale = args.scale if args.scale is not None else (
+            0.01 if args.quick else 0.03
+        )
+        steps = args.steps if args.steps is not None else (
+            100 if args.quick else 300
+        )
+        main_ref(scale, steps)
+
+
 if __name__ == "__main__":
-    main(quick=False)
+    main()

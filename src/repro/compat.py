@@ -1,0 +1,84 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The codebase is written against the modern jax API (``jax.shard_map`` with
+``check_vma=``); older releases (such as the 0.4.x line pinned in this
+container) only expose ``jax.experimental.shard_map.shard_map`` with the
+pre-rename ``check_rep=`` keyword.  Everything in-repo imports ``shard_map``
+from here so both API generations work unmodified.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["shard_map", "abstract_mesh", "cost_analysis", "pmean"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def pmean(x, axis_name):
+    """``jax.lax.pmean`` with an explicit VJP (pmean is its own transpose).
+
+    On the jax 0.4.x line, transposing a pmean/psum inside ``shard_map``
+    fails when the cotangent is a symbolic ``Zero`` (unused aux outputs of
+    a differentiated shard_map produce exactly that).  ``custom_vjp``
+    materializes cotangents before ``bwd`` runs, sidestepping the bug while
+    keeping the exact gradient.
+    """
+    return jax.lax.pmean(x, axis_name)
+
+
+def _pmean_fwd(x, axis_name):
+    return jax.lax.pmean(x, axis_name), None
+
+
+def _pmean_bwd(axis_name, _res, ct):
+    return (jax.lax.pmean(ct, axis_name),)
+
+
+pmean.defvjp(_pmean_fwd, _pmean_bwd)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict: modern jax returns a
+    dict, the 0.4.x line a one-element list of dicts (one per program)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """Construct a ``jax.sharding.AbstractMesh`` across API generations.
+
+    Modern jax takes ``AbstractMesh(axis_sizes, axis_names)``; the 0.4.x
+    line takes a single ``((name, size), ...)`` shape tuple.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def _wrap_legacy(sm: Callable) -> Callable:
+    """Adapt the jax<=0.4 experimental entry point: accept the modern
+    ``check_vma=`` keyword and forward it as ``check_rep=``."""
+
+    @functools.wraps(sm)
+    def shard_map(f: Callable, *args: Any, **kwargs: Any) -> Callable:
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return sm(f, *args, **kwargs)
+
+    return shard_map
+
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6: public, already takes check_vma
+    shard_map = jax.shard_map
+else:  # jax 0.4.x/0.5.x: experimental module, check_rep keyword
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    shard_map = _wrap_legacy(_experimental_shard_map)

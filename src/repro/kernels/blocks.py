@@ -1,0 +1,46 @@
+"""Block-size selection shared by the Pallas kernels.
+
+Panels are 8x128-aligned in production, so the requested block sizes
+normally divide them exactly.  For the small/odd shapes used by tests and
+CPU runs we degrade to the largest divisor <= the request — but loudly
+when a compiled (non-interpret) kernel would get a block off the hardware
+alignment, since a misaligned block on TPU is a silent orders-of-magnitude
+slowdown (or a Mosaic lowering failure).
+"""
+from __future__ import annotations
+
+import warnings
+
+
+def pick_block(dim: int, requested: int, *, interpret: bool, what: str,
+               align: int = 8) -> int:
+    """Largest divisor of ``dim`` that is <= min(requested, dim).
+
+    ``align`` is the hardware tile size of the blocked dimension (8 for
+    sublane/row dims, 128 for lane dims); a compiled kernel warns whenever
+    degradation produces a block that is not a multiple of it.
+    """
+    limit = max(min(requested, dim), 1)
+    # prefer the largest ALIGNED divisor (e.g. dim=1000, limit=256: pick
+    # 200, not the larger-but-misaligned 250)
+    block = 0
+    for d in range(limit - limit % align, 0, -align):
+        if dim % d == 0:
+            block = d
+            break
+    if block == 0:  # no aligned divisor <= limit; take any divisor
+        block = 1
+        for d in range(limit, 0, -1):
+            if dim % d == 0:
+                block = d
+                break
+    # off-tile blocks on the compiled path warn unconditionally — including
+    # when the dimension itself is the block (requested >= dim)
+    if not interpret and block % align != 0:
+        warnings.warn(
+            f"{what}: dimension {dim} forced block size {block} "
+            f"(requested {requested}, hardware tile {align}); pre-align "
+            "panels for TPU (8 rows x 128 lanes)",
+            stacklevel=3,
+        )
+    return block

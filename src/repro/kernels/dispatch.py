@@ -1,0 +1,200 @@
+"""Backend dispatch registry for the kernel layer.
+
+Every kernel op registers one implementation per backend; the public entry
+points in ``kernels/ops.py`` resolve a backend and dispatch through here.
+
+Backends:
+  * ``ref``              — pure-jnp oracles (XLA-fused; the correctness
+                           contract and the CPU production path)
+  * ``pallas``           — compiled Pallas kernels (TPU)
+  * ``pallas_interpret`` — the same kernel bodies in interpret mode
+                           (CPU validation of the TPU path)
+
+Resolution order: explicit ``backend=`` argument > ``REPRO_BACKEND``
+environment variable > platform default (``pallas`` on TPU, otherwise
+``pallas_interpret`` for direct kernel calls; the simulators default to
+``ref`` off-TPU, where XLA fusion of the oracles is already optimal).
+
+Separately from the *kernel* backend, ``select_step_engine`` decides the
+*step engine*: the fused single-``pallas_call`` step (kernels/fused_step.py)
+vs the unfused three-kernel sequence.  Fusion is only sound for a
+homogeneous non-plastic LIF partition with identity exchange and identity
+ELL rows; the selector encodes those rules so both simulators and the
+benchmarks share one policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+BACKENDS = ("ref", "pallas", "pallas_interpret")
+
+_REGISTRY: Dict[Tuple[str, str], Callable] = {}
+
+
+def register(op: str, backend: str) -> Callable:
+    """Decorator: register ``fn`` as the ``backend`` implementation of
+    ``op``.  Implementations of one op must share a call signature."""
+    assert backend in BACKENDS, f"unknown backend {backend!r}"
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(op, backend)] = fn
+        return fn
+
+    return deco
+
+
+def _ensure_registered() -> None:
+    # registrations live in ops.py; importing it is idempotent and avoids
+    # an empty registry when dispatch is imported standalone
+    from . import ops  # noqa: F401
+
+
+def backends_for(op: str) -> Tuple[str, ...]:
+    _ensure_registered()
+    return tuple(
+        b for (o, b) in sorted(_REGISTRY) if o == op
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _platform_default() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+
+
+def platform_default() -> str:
+    """Env-independent platform default backend (always a Pallas variant:
+    compiled on TPU, interpret mode elsewhere).  Public entry point for
+    callers that must bypass REPRO_BACKEND, e.g. the fused-vs-unfused
+    benchmark, which is meaningless on the ref oracles."""
+    return _platform_default()
+
+
+def resolve_backend(
+    backend: Optional[str] = None, *, default: Optional[str] = None
+) -> str:
+    """Explicit flag > REPRO_BACKEND env var > ``default`` (falls back to
+    the platform default: pallas on TPU, interpret mode elsewhere)."""
+    if backend is not None:
+        return backend
+    env = os.environ.get("REPRO_BACKEND")
+    if env:
+        return env
+    return default if default is not None else _platform_default()
+
+
+def resolve_sim_backend(backend: Optional[str] = None) -> str:
+    """Backend resolution for the simulators: same precedence chain, but
+    off-TPU they default to ``ref`` (XLA fusion of the oracles is the fast
+    CPU path), unlike direct kernel calls which default to interpret
+    mode."""
+    return resolve_backend(
+        backend,
+        default="pallas" if jax.default_backend() == "tpu" else "ref",
+    )
+
+
+def lookup(op: str, backend: Optional[str] = None) -> Callable:
+    _ensure_registered()
+    b = resolve_backend(backend)
+    try:
+        return _REGISTRY[(op, b)]
+    except KeyError:
+        raise KeyError(
+            f"no implementation of kernel op {op!r} for backend {b!r}; "
+            f"available: {backends_for(op) or '(none)'}"
+        ) from None
+
+
+# -- step-engine selection (fused vs unfused) -----------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepEngineChoice:
+    engine: str  # 'fused' | 'unfused'
+    reason: str
+
+    @property
+    def fused(self) -> bool:
+        return self.engine == "fused"
+
+
+# the fused kernel keeps six full-length f32 state vectors (v/refrac/i_tot
+# in, v/refrac/spike out) VMEM-resident alongside the streamed panels;
+# partitions whose vectors outgrow this budget fall back to the unfused
+# engine, which tiles state into (rows, 128) panels
+_FUSED_VECTOR_VMEM_BUDGET = 6 * 1024 * 1024
+FUSED_MAX_N_P = _FUSED_VECTOR_VMEM_BUDGET // (6 * 4)
+
+
+def _fusion_blocker(
+    models_present: Sequence[str],
+    any_plastic: bool,
+    identity_exchange: bool,
+    identity_rows: bool,
+    n_delay_buckets: int,
+    n_p: int,
+) -> Optional[str]:
+    if tuple(models_present) != ("lif",):
+        return (
+            f"heterogeneous vertex models {tuple(models_present)} "
+            "(fused step is LIF-only)"
+        )
+    if any_plastic:
+        return "plastic synapses need the separate STDP pass"
+    if not identity_exchange:
+        return (
+            "distributed exchange: the collective sits between spike "
+            "emission and propagation"
+        )
+    if not identity_rows:
+        return "heavy-row-split ELL needs the segment-sum re-reduction"
+    if n_delay_buckets < 1:
+        return "no synapses to propagate"
+    if n_p > FUSED_MAX_N_P:
+        return (
+            f"partition too large ({n_p} > {FUSED_MAX_N_P} neurons) for "
+            "VMEM-resident fused state vectors"
+        )
+    return None
+
+
+def select_step_engine(
+    *,
+    backend: str,
+    models_present: Sequence[str],
+    any_plastic: bool,
+    identity_exchange: bool,
+    identity_rows: bool,
+    n_delay_buckets: int,
+    n_p: int,
+    fused: Optional[bool] = None,
+) -> StepEngineChoice:
+    """Pick 'fused' or 'unfused' for a partition's step.
+
+    ``fused=None`` (auto) fuses whenever the partition is eligible and the
+    backend runs Pallas kernels; ``fused=True`` demands fusion (raises if
+    the partition is ineligible); ``fused=False`` disables it.
+    """
+    if fused is False:
+        return StepEngineChoice("unfused", "disabled by config")
+    blocker = _fusion_blocker(
+        models_present, any_plastic, identity_exchange, identity_rows,
+        n_delay_buckets, n_p,
+    )
+    if blocker is not None:
+        if fused is True:
+            raise ValueError(f"fused step engine requested but: {blocker}")
+        return StepEngineChoice("unfused", blocker)
+    if fused is True:
+        return StepEngineChoice("fused", "forced by config")
+    if backend in ("pallas", "pallas_interpret"):
+        return StepEngineChoice("fused", f"auto: {backend} backend")
+    return StepEngineChoice(
+        "unfused",
+        "auto: 'ref' backend composes pure-jnp oracles (XLA-fused)",
+    )

@@ -1,0 +1,189 @@
+"""Pallas TPU kernel: fused per-partition SNN step.
+
+One ``pallas_call`` performs the whole local step for a non-plastic LIF
+partition: membrane state advance + spike emission + blocked-ELL
+gather-accumulate over every delay bucket.  Compared to the unfused path
+(``lif_step`` then one ``spike_gather`` launch per bucket) this removes the
+HBM round-trips between kernels: each state vector is read and written
+exactly once, and the freshly emitted spike vector is consumed as the gather
+activity directly out of VMEM — it never hits HBM between emission and
+propagation.  Pronold et al. (2021) measure exactly this loop as the
+cache/memory-bound core of neuromorphic-scale simulation.
+
+Grid/Block layout:
+  * 1D grid over panel row blocks (``R // block_r`` steps);
+  * the LIF state vectors (v, refrac, i_syn; n elements, lane-padded) use
+    whole-vector blocks revisited by every grid step — VMEM-resident, one
+    HBM read/write total (same budget assumption as ``spike_gather``'s
+    activity vector);
+  * the state advance runs once, at grid step 0, writing the full spike
+    vector into its (VMEM-resident) output block; later grid steps read it
+    back as the gather activity;
+  * per delay bucket, the (block_r, K_d) col/weight panels stream through
+    VMEM and emit a (block_r, 1) current block.
+
+Applicability (the dispatcher enforces this): homogeneous LIF partition,
+no plasticity, identity exchange (activity == local spikes, i.e. the
+single-partition simulator or k == 1), identity ELL rows.  Heterogeneous /
+plastic / distributed steps use the unfused kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.ell import _align_up
+from . import ref
+from .blocks import pick_block
+
+_LANES = 128
+# panel bytes resident per grid step (cols + weights, all buckets); VMEM is
+# ~16 MB/core and the state vectors + current blocks share it
+_PANEL_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _make_kernel(nd: int, params: dict):
+    def kernel(*refs):
+        v_ref, ref_ref, i_ref = refs[:3]
+        cols_refs = refs[3: 3 + nd]
+        w_refs = refs[3 + nd: 3 + 2 * nd]
+        v_out, ref_out, s_out = refs[3 + 2 * nd: 6 + 2 * nd]
+        cur_refs = refs[6 + 2 * nd: 6 + 3 * nd]
+        r = pl.program_id(0)
+
+        @pl.when(r == 0)
+        def _advance():
+            # single definition of the LIF math, shared with lif_step and
+            # the ref oracle (elementwise jnp traces inside the kernel)
+            v_new, ref_new, spike = ref.lif_step_ref(
+                v_ref[...], ref_ref[...], i_ref[...], **params
+            )
+            v_out[...] = v_new
+            ref_out[...] = ref_new
+            s_out[...] = spike
+
+        # gather-accumulate straight from the VMEM-resident spike vector;
+        # f32 accumulation regardless of weight dtype (matches the oracle)
+        act = s_out[...].astype(jnp.float32)
+        for i in range(nd):
+            cols = cols_refs[i][...]
+            w = w_refs[i][...]
+            vals = jnp.take(act, cols, axis=0)
+            cur_refs[i][...] = jnp.sum(
+                w.astype(jnp.float32) * vals, axis=1, keepdims=True
+            )
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nd", "block_r", "interpret", "params_tuple"),
+)
+def _fused_call(
+    v, refrac, i_tot, *panels, nd, block_r, interpret, params_tuple
+):
+    params = dict(params_tuple)
+    cols = panels[:nd]
+    weights = panels[nd:]
+    n_vec = v.shape[0]
+    R = cols[0].shape[0]
+    grid = (R // block_r,)
+    vec_spec = pl.BlockSpec((n_vec,), lambda r: (0,))
+    out_shapes = (
+        [jax.ShapeDtypeStruct((n_vec,), v.dtype)] * 3
+        + [jax.ShapeDtypeStruct((R, 1), jnp.float32) for _ in weights]
+    )
+    out_specs = (
+        [vec_spec] * 3
+        + [pl.BlockSpec((block_r, 1), lambda r: (r, 0))] * nd
+    )
+    in_specs = (
+        [vec_spec] * 3
+        + [
+            pl.BlockSpec((block_r, c.shape[1]), lambda r: (r, 0))
+            for c in cols
+        ]
+        + [
+            pl.BlockSpec((block_r, w.shape[1]), lambda r: (r, 0))
+            for w in weights
+        ]
+    )
+    outs = pl.pallas_call(
+        _make_kernel(nd, params),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(v, refrac, i_tot, *cols, *weights)
+    return outs[0], outs[1], outs[2], outs[3:]
+
+
+def fused_lif_step_pallas(
+    v: jnp.ndarray,  # (n_p,) membrane potential
+    refrac: jnp.ndarray,  # (n_p,) refractory counters
+    i_tot: jnp.ndarray,  # (n_p,) total input current (syn + bias + noise)
+    cols: Sequence[jnp.ndarray],  # per delay bucket (R, K_d) int32
+    weights: Sequence[jnp.ndarray],  # per delay bucket (R, K_d)
+    *,
+    params: dict,
+    block_r: int = 256,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, List[jnp.ndarray]]:
+    """Fused step for identity-exchange LIF partitions.
+
+    Returns ``(v', refrac', spikes, currents)`` with the state vectors
+    trimmed back to ``n_p`` and ``currents[i]`` of shape ``(R,)`` (caller
+    slices rows; identity-row buckets only, so row r is neuron r).
+
+    All buckets must share R (guaranteed for identity-row ELL buckets of
+    one partition).  Column ids must be local (< n_p): identity exchange.
+    """
+    nd = len(cols)
+    assert nd >= 1, "fused step needs at least one delay bucket"
+    assert len(weights) == nd
+    (n_p,) = v.shape
+    R = cols[0].shape[0]
+    assert all(c.shape[0] == R for c in cols), (
+        "fused step needs a common R across delay buckets: "
+        f"{[c.shape for c in cols]}"
+    )
+    assert R >= n_p, (R, n_p)
+
+    # lane-pad state vectors; padded rows sit at v_reset with no input, so
+    # they can never cross threshold (v_reset < v_thresh by model sanity)
+    n_vec = _align_up(max(n_p, _LANES), _LANES)
+    pad = n_vec - n_p
+    v_p = jnp.pad(v, (0, pad), constant_values=params["v_reset"])
+    r_p = jnp.pad(refrac, (0, pad))
+    i_p = jnp.pad(i_tot, (0, pad))
+
+    # VMEM budget: unlike spike_gather's 2D (block_r, block_k) grid, the
+    # fused kernel streams full-width (block_r, K_d) panels for every
+    # bucket per grid step.  Scale block_r down so the resident panels
+    # (cols + weights per bucket) stay within budget even for wide
+    # production in-degrees; the state vectors are accounted separately
+    # by the caller's VMEM-resident assumption (as for spike_gather).
+    bytes_per_row = sum(
+        c.shape[1] * (c.dtype.itemsize + w.dtype.itemsize)
+        for c, w in zip(cols, weights)
+    )
+    max_rows = max(_PANEL_VMEM_BUDGET // max(bytes_per_row, 1), 1)
+    block_r = pick_block(R, min(block_r, max_rows), interpret=interpret,
+                         what="fused_step rows")
+    v2, r2, s2, curs = _fused_call(
+        v_p, r_p, i_p, *cols, *weights,
+        nd=nd, block_r=block_r, interpret=interpret,
+        params_tuple=tuple(sorted(params.items())),
+    )
+    return (
+        v2[:n_p],
+        r2[:n_p],
+        s2[:n_p],
+        [c[:, 0] for c in curs],  # f32, like the oracle
+    )

@@ -13,25 +13,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import ref
+
 
 def _kernel(v_ref, ref_ref, i_ref, v_out, ref_out, s_out, *, params):
-    dt = params["dt"]
-    decay = jnp.float32(jnp.exp(-dt / params["tau_m"]))
-    v = v_ref[...]
-    refrac = ref_ref[...]
-    i_syn = i_ref[...]
-    active = refrac <= 0
-    v_int = (
-        params["v_rest"]
-        + (v - params["v_rest"]) * decay
-        + params["r_m"] * i_syn * (1 - decay)
+    # the oracle is elementwise jnp, so it traces inside the kernel —
+    # ONE definition of the LIF math shared by ref / unfused / fused
+    v_new, ref_new, spike = ref.lif_step_ref(
+        v_ref[...], ref_ref[...], i_ref[...], **params
     )
-    v_new = jnp.where(active, v_int, params["v_reset"])
-    spike = (v_new >= params["v_thresh"]) & active
-    ref_steps = jnp.float32(round(params["t_ref"] / dt))
-    ref_out[...] = jnp.where(spike, ref_steps, jnp.maximum(refrac - 1, 0.0))
-    v_out[...] = jnp.where(spike, params["v_reset"], v_new)
-    s_out[...] = spike.astype(v.dtype)
+    v_out[...] = v_new
+    ref_out[...] = ref_new
+    s_out[...] = spike
 
 
 @functools.partial(

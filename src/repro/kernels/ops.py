@@ -1,56 +1,100 @@
 """Public jit'd entry points for the Pallas kernels.
 
-Backend dispatch: on TPU the compiled Pallas kernels run natively; elsewhere
-``interpret=True`` executes the same kernel bodies for correctness (this
-container is CPU-only — TPU is the target, interpret mode the validator).
+Backend dispatch goes through the registry in ``kernels/dispatch.py``: on
+TPU the compiled Pallas kernels run natively; elsewhere ``interpret=True``
+executes the same kernel bodies for correctness (this container is
+CPU-only — TPU is the target, interpret mode the validator).
 ``backend="ref"`` routes to the pure-jnp oracles (used by the distributed
-simulator under shard_map, where XLA fusion of the oracle is already optimal
-on CPU, and by A/B correctness tests).
+simulator under shard_map, where XLA fusion of the oracle is already
+optimal on CPU, and by A/B correctness tests).  ``REPRO_BACKEND`` in the
+environment overrides the platform default.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
+from typing import Callable, Optional
 
 from . import ref
+from .dispatch import lookup, register
+from .fused_step import fused_lif_step_pallas
 from .lif_step import lif_step_pallas
 from .spike_gather import spike_gather_pallas
 from .stdp_update import stdp_update_pallas
 
 
-@functools.lru_cache(maxsize=None)
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _register_pallas(op: str) -> Callable:
+    """Register one Pallas entry point (which takes ``interpret=``) as both
+    the compiled and the interpret-mode backend of ``op``."""
+
+    def deco(fn: Callable) -> Callable:
+        register(op, "pallas")(fn)
+        register(op, "pallas_interpret")(
+            functools.partial(fn, interpret=True)
+        )
+        return fn
+
+    return deco
 
 
-def _resolve(backend: Optional[str]) -> str:
-    if backend is not None:
-        return backend
-    return "pallas" if _on_tpu() else "pallas_interpret"
+# -- spike_gather ---------------------------------------------------------
+
+@register("spike_gather", "ref")
+def _spike_gather_ref(activity, cols, weights, **kw):
+    return ref.spike_gather_ref(activity, cols, weights)
+
+
+_register_pallas("spike_gather")(spike_gather_pallas)
 
 
 def spike_gather(
     activity, cols, weights, *, backend: Optional[str] = None, **kw
 ):
-    b = _resolve(backend)
-    if b == "ref":
-        return ref.spike_gather_ref(activity, cols, weights)
-    return spike_gather_pallas(
-        activity, cols, weights,
-        interpret=(b == "pallas_interpret"), **kw,
+    return lookup("spike_gather", backend)(activity, cols, weights, **kw)
+
+
+# -- lif_step -------------------------------------------------------------
+
+@register("lif_step", "ref")
+def _lif_step_ref(v, refrac, i_syn, *, params, **kw):
+    return ref.lif_step_ref(v, refrac, i_syn, **params)
+
+
+_register_pallas("lif_step")(lif_step_pallas)
+
+
+def lif_step(v, refrac, i_syn, *, params, backend: Optional[str] = None,
+             **kw):
+    return lookup("lif_step", backend)(v, refrac, i_syn, params=params, **kw)
+
+
+# -- stdp_update ----------------------------------------------------------
+
+def _stdp_args(params):
+    return dict(
+        a_plus=params["a_plus"], a_minus=params["a_minus"],
+        w_min=params["w_min"], w_max=params["w_max"],
     )
 
 
-def lif_step(v, refrac, i_syn, *, params, backend: Optional[str] = None, **kw):
-    b = _resolve(backend)
-    if b == "ref":
-        return ref.lif_step_ref(v, refrac, i_syn, **params)
-    return lif_step_pallas(
-        v, refrac, i_syn, params=params,
-        interpret=(b == "pallas_interpret"), **kw,
+@register("stdp_update", "ref")
+def _stdp_update_ref(
+    weights, valid, cols, pre_trace, pre_spike, post_trace, post_spike,
+    *, params, **kw
+):
+    return ref.stdp_update_ref(
+        weights, valid, cols, pre_trace, pre_spike, post_trace, post_spike,
+        **_stdp_args(params),
+    )
+
+
+@_register_pallas("stdp_update")
+def _stdp_update_pallas(
+    weights, valid, cols, pre_trace, pre_spike, post_trace, post_spike,
+    *, params, **kw
+):
+    return stdp_update_pallas(
+        weights, valid, cols, pre_trace, pre_spike, post_trace, post_spike,
+        **_stdp_args(params), **kw,
     )
 
 
@@ -58,17 +102,31 @@ def stdp_update(
     weights, valid, cols, pre_trace, pre_spike, post_trace, post_spike,
     *, params, backend: Optional[str] = None, **kw
 ):
-    b = _resolve(backend)
-    if b == "ref":
-        return ref.stdp_update_ref(
-            weights, valid, cols, pre_trace, pre_spike, post_trace,
-            post_spike,
-            a_plus=params["a_plus"], a_minus=params["a_minus"],
-            w_min=params["w_min"], w_max=params["w_max"],
-        )
-    return stdp_update_pallas(
+    return lookup("stdp_update", backend)(
         weights, valid, cols, pre_trace, pre_spike, post_trace, post_spike,
-        a_plus=params["a_plus"], a_minus=params["a_minus"],
-        w_min=params["w_min"], w_max=params["w_max"],
-        interpret=(b == "pallas_interpret"), **kw,
+        params=params, **kw,
+    )
+
+
+# -- fused_step (LIF advance + spike emission + gather, one launch) -------
+
+@register("fused_step", "ref")
+def _fused_step_ref(v, refrac, i_tot, cols, weights, *, params, **kw):
+    return ref.fused_step_ref(v, refrac, i_tot, cols, weights, params=params)
+
+
+_register_pallas("fused_step")(fused_lif_step_pallas)
+
+
+def fused_step(
+    v, refrac, i_tot, cols, weights, *, params,
+    backend: Optional[str] = None, **kw
+):
+    """Fused LIF step: (v', refrac', spikes, per-bucket currents).
+
+    ``cols``/``weights`` are tuples of per-delay-bucket (R, K_d) panels
+    with common R; eligibility rules live in ``dispatch.select_step_engine``.
+    """
+    return lookup("fused_step", backend)(
+        v, refrac, i_tot, tuple(cols), tuple(weights), params=params, **kw
     )

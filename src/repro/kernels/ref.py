@@ -19,8 +19,12 @@ def spike_gather_ref(
 
     Padding slots carry weight 0, so no mask is needed for the forward
     accumulation (a deliberate layout invariant of repro.core.ell).
+    Accumulation is in f32 regardless of weight dtype — the contract the
+    Pallas kernels implement (low-precision partial sums lose ~1% at
+    realistic in-degrees); the result stays f32 for the ring buffers.
     """
-    return jnp.sum(weights * jnp.take(activity, cols, axis=0), axis=-1)
+    vals = jnp.take(activity, cols, axis=0).astype(jnp.float32)
+    return jnp.sum(weights.astype(jnp.float32) * vals, axis=-1)
 
 
 def lif_step_ref(
@@ -119,3 +123,21 @@ def stdp_update_ref(
 def trace_decay_ref(trace, spike, *, dt, tau):
     """x' = x * exp(-dt/tau) + spike   (per-neuron e-trace)."""
     return trace * jnp.exp(-dt / tau).astype(trace.dtype) + spike
+
+
+def fused_step_ref(
+    v: jnp.ndarray,  # (n_p,)
+    refrac: jnp.ndarray,  # (n_p,)
+    i_tot: jnp.ndarray,  # (n_p,) total input current
+    cols,  # per delay bucket (R, K_d) int32, local ids
+    weights,  # per delay bucket (R, K_d)
+    *,
+    params: Dict[str, float],
+):
+    """Oracle for the fused per-partition step (kernels/fused_step.py):
+    LIF advance + spike emission + per-bucket gather-accumulate, composed
+    from the individual oracles.  Returns (v', refrac', spikes, currents).
+    """
+    v2, r2, s = lif_step_ref(v, refrac, i_tot, **params)
+    currents = [spike_gather_ref(s, c, w) for c, w in zip(cols, weights)]
+    return v2, r2, s, currents

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .blocks import pick_block
+
 
 def _kernel(act_ref, cols_ref, w_ref, out_ref):
     k = pl.program_id(1)
@@ -30,11 +32,15 @@ def _kernel(act_ref, cols_ref, w_ref, out_ref):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    act = act_ref[...]  # (n,) resident in VMEM
+    act = act_ref[...]  # (n,) f32, resident in VMEM
     cols = cols_ref[...]  # (block_r, block_k)
     w = w_ref[...]  # (block_r, block_k)
     vals = jnp.take(act, cols, axis=0)  # VPU gather from VMEM
-    out_ref[...] += jnp.sum(w * vals, axis=1, keepdims=True)
+    # accumulate in f32 regardless of weight dtype (matches the oracle;
+    # bf16 partial sums lose ~1% at realistic in-degrees)
+    out_ref[...] += jnp.sum(
+        w.astype(jnp.float32) * vals, axis=1, keepdims=True
+    )
 
 
 @functools.partial(
@@ -51,11 +57,10 @@ def spike_gather_pallas(
 ) -> jnp.ndarray:  # (R,)
     R, K = cols.shape
     n = activity.shape[0]
-    block_r = min(block_r, R)
-    block_k = min(block_k, K)
-    assert R % block_r == 0 and K % block_k == 0, (
-        f"ELL panels must be pre-aligned: {(R, K)} vs {(block_r, block_k)}"
-    )
+    block_r = pick_block(R, block_r, interpret=interpret,
+                         what="spike_gather rows")
+    block_k = pick_block(K, block_k, interpret=interpret,
+                         what="spike_gather cols", align=128)
     grid = (R // block_r, K // block_k)
     out = pl.pallas_call(
         _kernel,
@@ -66,7 +71,10 @@ def spike_gather_pallas(
             pl.BlockSpec((block_r, block_k), lambda r, k: (r, k)),
         ],
         out_specs=pl.BlockSpec((block_r, 1), lambda r, k: (r, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, 1), weights.dtype),
+        out_shape=jax.ShapeDtypeStruct((R, 1), jnp.float32),
         interpret=interpret,
-    )(activity.astype(weights.dtype), cols, weights)
+    )(activity.astype(jnp.float32), cols, weights)
+    # stays f32 like the oracle (ring buffers accumulate in f32; rounding
+    # back to a low-precision weight dtype would just discard the f32
+    # accumulation this kernel guarantees)
     return out[:, 0]

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .blocks import pick_block
+
 
 def _kernel(
     pre_t_ref, pre_s_ref, cols_ref, w_ref, valid_ref, post_t_ref,
@@ -57,9 +59,10 @@ def stdp_update_pallas(
 ) -> jnp.ndarray:
     R, K = weights.shape
     n = pre_trace.shape[0]
-    block_r = min(block_r, R)
-    block_k = min(block_k, K)
-    assert R % block_r == 0 and K % block_k == 0
+    block_r = pick_block(R, block_r, interpret=interpret,
+                         what="stdp_update rows")
+    block_k = pick_block(K, block_k, interpret=interpret,
+                         what="stdp_update cols", align=128)
     grid = (R // block_r, K // block_k)
     vec = pl.BlockSpec((n,), lambda r, k: (0,))
     panel = pl.BlockSpec((block_r, block_k), lambda r, k: (r, k))

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import cost_analysis
 from ..configs import ARCHS, SHAPES, cells_for, get_config
 from ..models import build_model
 from ..sharding.policy import make_policy, param_shardings, policy_context
@@ -142,7 +143,7 @@ def lower_cell(
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis(compiled)
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     stats = analyze_hlo(hlo)

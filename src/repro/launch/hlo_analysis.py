@@ -113,6 +113,29 @@ def _parse_instr(line: str):
     return None
 
 
+def _split_operands(operands: str) -> List[str]:
+    """Split an operand list on top-level commas only: shapes
+    (``f32[64,64]{1,0}``), tuple types, and nested calls all carry commas
+    inside brackets that a bare ``str.split(',')`` would tear apart."""
+    out: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in operands:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return [t for t in out if t]
+
+
 def _parse_shape(type_str: str) -> List[Tuple[str, List[int]]]:
     out = []
     for dt, dims in _SHAPE_RE.findall(type_str):
@@ -260,7 +283,8 @@ def analyze_hlo(hlo_text: str, top: int = 10) -> HloStats:
                     out_elems += n
                 contract = 1
                 dm = _DIMS_RE.search(tail)
-                first_operand = operands.split(",")[0].strip()
+                toks = _split_operands(operands)
+                first_operand = toks[0] if toks else ""
                 parts = first_operand.split()
                 lhs_name = parts[-1].lstrip("%") if parts else ""
                 lhs_type = types.get(lhs_name, first_operand)
@@ -285,8 +309,8 @@ def analyze_hlo(hlo_text: str, top: int = 10) -> HloStats:
             if op not in _FREE_OPS:
                 res_bytes = _shape_bytes(type_str)
                 trips = set(chains.get(comp, ()))
-                for tok in operands.split(","):
-                    tok = tok.strip()
+                op_toks = _split_operands(operands)
+                for tok in op_toks:
                     parts = tok.split()
                     cand = parts[-1].lstrip("%") if parts else tok
                     tstr = types.get(cand, tok)
@@ -311,17 +335,15 @@ def analyze_hlo(hlo_text: str, top: int = 10) -> HloStats:
                     # operand is the full stacked parameter array)
                     traffic = 2 * res_bytes
                 elif op == "dynamic-update-slice":
-                    upd = operands.split(",")[1].strip() if "," in \
-                        operands else ""
+                    upd = op_toks[1] if len(op_toks) > 1 else ""
                     cand = upd.split()[-1].lstrip("%") if upd else ""
                     ub = _shape_bytes(types.get(cand, upd))
                     traffic = 2 * ub
                 elif op == "scatter":
-                    toks = operands.split(",")
                     ub = 0
-                    if len(toks) >= 3:
-                        cand = toks[2].strip().split()[-1].lstrip("%")
-                        ub = _shape_bytes(types.get(cand, toks[2]))
+                    if len(op_toks) >= 3:
+                        cand = op_toks[2].split()[-1].lstrip("%")
+                        ub = _shape_bytes(types.get(cand, op_toks[2]))
                     traffic = 3 * ub
                 elif op in ("broadcast", "iota", "rng", "rng-bit-generator"):
                     traffic = res_bytes

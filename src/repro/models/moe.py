@@ -21,8 +21,9 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from ..compat import pmean, shard_map
 
 from ..sharding.policy import constrain, current_policy
 from .layers import _init
@@ -222,9 +223,9 @@ def _moe_apply_ep(p: Dict, x: jnp.ndarray, cfg, pol) -> Tuple[
         dropf = 1.0 - keep.mean()
         baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
         if baxes:
-            lb = jax.lax.pmean(lb, baxes)
-            zl = jax.lax.pmean(zl, baxes)
-            dropf = jax.lax.pmean(dropf, baxes)
+            lb = pmean(lb, baxes)
+            zl = pmean(zl, baxes)
+            dropf = pmean(dropf, baxes)
         return out, lb, zl, dropf
 
     w_gate = p.get("experts_gate", p["experts_in"])  # dummy if ungated

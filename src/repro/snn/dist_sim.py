@@ -25,10 +25,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from ..compat import shard_map
 
 from ..core.dcsr import DCSRNetwork
 from ..core.ell import build_delay_ell
+from ..kernels.dispatch import resolve_sim_backend, select_step_engine
 from .simulator import (
     SimConfig,
     make_core_step,
@@ -52,6 +54,7 @@ class StackedNet:
     vtx_state0: np.ndarray  # (k, n_p, S)
     any_plastic: bool
     d_ring: int
+    identity_rows: bool  # all buckets row-identity (max_k=None => True)
 
 
 def stack_partitions(net: DCSRNetwork, cfg: SimConfig) -> StackedNet:
@@ -112,6 +115,9 @@ def stack_partitions(net: DCSRNetwork, cfg: SimConfig) -> StackedNet:
         vtx_state0=np.stack([np.asarray(d.vtx_state0) for d in devs]),
         any_plastic=any(d.any_plastic for d in devs),
         d_ring=max(max(delays, default=1), 1),
+        identity_rows=all(
+            b.identity_rows for e in ells for b in e.buckets
+        ),
     )
 
 
@@ -133,9 +139,7 @@ class DistSimulator:
             )
             mesh = jax.make_mesh((k,), ("parts",))
         self.mesh = mesh
-        self.backend = cfg.backend or (
-            "pallas" if jax.default_backend() == "tpu" else "ref"
-        )
+        self.backend = resolve_sim_backend(cfg.backend)
         self.stdp_params = (
             dict(net.registry.spec("syn_stdp").params)
             if s.any_plastic else None
@@ -148,6 +152,19 @@ class DistSimulator:
         self.n_global = k * s.n_p
         self.models_present = _models_present(net)
         self._base_key = jax.random.PRNGKey(cfg.seed)
+        # engine selection is deterministic from construction-time facts;
+        # computing it once here surfaces SimConfig(fused=True) eligibility
+        # errors immediately, and _build_step reuses the same choice
+        self.engine_choice = select_step_engine(
+            backend=self.backend,
+            models_present=self.models_present,
+            any_plastic=s.any_plastic and self.stdp_params is not None,
+            identity_exchange=(k == 1 and cfg.exchange == "dense"),
+            identity_rows=s.identity_rows,
+            n_delay_buckets=len(s.delays),
+            n_p=s.n_p,
+            fused=cfg.fused,
+        )
 
     # -- state ------------------------------------------------------------
     def init_state(self, t0: int = 0) -> Dict:
@@ -223,6 +240,7 @@ class DistSimulator:
             noise_ids=noise_ids,
             record_raster=self.cfg.record_raster,
             record_v=self.cfg.record_v,
+            engine_choice=self.engine_choice,
         )
         return core, cap
 

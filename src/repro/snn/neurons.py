@@ -33,6 +33,10 @@ STATE_LAYOUT = {
     "izhikevich": ("v", "u", "bias"),
 }
 
+# the registry params the LIF kernels consume (single source for the
+# neuron step, the fused step engine, and any future LIF variant)
+LIF_PARAM_KEYS = ("tau_m", "v_rest", "v_reset", "v_thresh", "t_ref", "r_m")
+
 
 def registry_with_bias(reg: ModelRegistry) -> ModelRegistry:
     """Default registry already carries (v, refrac)...; network builders use
@@ -75,11 +79,10 @@ def make_neuron_step(
                 i_tot = i_syn + vtx_state[:, LIF_BIAS]
                 v, refr, s = ops.lif_step(
                     vtx_state[:, LIF_V], vtx_state[:, LIF_REF], i_tot,
-                    params={**{k: p[k] for k in (
-                        "tau_m", "v_rest", "v_reset", "v_thresh", "t_ref",
-                        "r_m")}, "dt": dt},
-                    backend=backend if backend != "pallas_interpret"
-                    else "pallas_interpret",
+                    params={
+                        **{k: p[k] for k in LIF_PARAM_KEYS}, "dt": dt,
+                    },
+                    backend=backend,
                 )
                 cand = new_state.at[:, LIF_V].set(
                     jnp.where(mask, v, new_state[:, LIF_V])

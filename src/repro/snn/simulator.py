@@ -30,12 +30,18 @@ from ..core.dcsr import DCSRNetwork, DCSRPartition
 from ..core.ell import DelayELL, build_delay_ell
 from ..core.state import EDGE_WEIGHT
 from ..kernels import ops
-from .neurons import make_neuron_step
+from ..kernels.dispatch import (
+    StepEngineChoice, resolve_sim_backend, select_step_engine,
+)
+from .neurons import (
+    LIF_BIAS, LIF_PARAM_KEYS, LIF_REF, LIF_V, make_neuron_step,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
     backend: Optional[str] = None  # None=auto, 'ref', 'pallas_interpret', 'pallas'
+    fused: Optional[bool] = None  # None=auto, True=require fused step, False=off
     align_k: int = 128
     align_rows: int = 8
     max_k: Optional[int] = None  # heavy-row split cap (single-partition only)
@@ -119,19 +125,52 @@ def make_core_step(
     noise_ids: Optional[jnp.ndarray] = None,
     record_raster: bool = False,
     record_v: bool = False,
+    fused: Optional[bool] = None,
+    identity_exchange: Optional[bool] = None,
+    engine_choice: Optional[StepEngineChoice] = None,
 ) -> Callable:
     """The shared per-partition step; ``exchange`` injects the collective.
 
     ``noise_ids`` are the *permanent* (pre-partitioning) neuron ids of the
     local rows: noise is a pure function of (seed, t, permanent id), so a
     trajectory is invariant under any partitioning/relabelling — the
-    property that makes elastic resharding (snn/reshard.py) bit-exact."""
-    neuron_step = make_neuron_step(registry, models_present, dt, backend)
+    property that makes elastic resharding (snn/reshard.py) bit-exact.
+
+    The step engine (fused single-kernel vs unfused three-kernel) is chosen
+    by ``kernels.dispatch.select_step_engine``; the choice is attached to
+    the returned step as ``step.engine_choice``."""
     D = d_ring
     n_p = dev.n_p
     any_plastic = dev.any_plastic and stdp_params is not None
     tau_plus = stdp_params["tau_plus"] if any_plastic else 1.0
     tau_minus = stdp_params["tau_minus"] if any_plastic else 1.0
+    if engine_choice is not None:
+        choice = engine_choice  # caller pre-selected (DistSimulator)
+    else:
+        if identity_exchange is None:
+            # single-partition default; distributed callers pass an
+            # explicit value (a k=1 *compressed-index* exchange still
+            # truncates at its cap, so same-size is not a sufficient
+            # proxy there)
+            identity_exchange = n_global == n_p
+        choice = select_step_engine(
+            backend=backend,
+            models_present=models_present,
+            any_plastic=any_plastic,
+            identity_exchange=identity_exchange,
+            identity_rows=all(dev.identity_rows),
+            n_delay_buckets=len(dev.delays),
+            n_p=n_p,
+            fused=fused,
+        )
+    if choice.fused:
+        neuron_step = None
+        lif_p = dict(registry.spec("lif").params)
+        lif_params = {
+            "dt": dt, **{k: lif_p[k] for k in LIF_PARAM_KEYS},
+        }
+    else:
+        neuron_step = make_neuron_step(registry, models_present, dt, backend)
 
     def step(carry, _):
         t = carry["t"]
@@ -154,60 +193,81 @@ def make_core_step(
         else:
             noise = jnp.zeros((n_p,), jnp.float32)
 
-        vtx_state, spikes = neuron_step(
-            dev.vtx_model, carry["vtx_state"], i_syn + noise
-        )
-
-        if any_plastic:
-            tr_plus = carry["tr_plus"] * jnp.exp(
-                -dt / tau_plus
-            ).astype(jnp.float32) + spikes
-            tr_minus = carry["tr_minus"] * jnp.exp(
-                -dt / tau_minus
-            ).astype(jnp.float32) + spikes
-        else:
-            tr_plus = carry["tr_plus"]
-            tr_minus = carry["tr_minus"]
-
-        act, pre_trace = exchange(spikes, tr_plus)
-
-        weights = carry["weights"]
-        new_weights = []
-        for i, d in enumerate(dev.delays):
-            cur = ops.spike_gather(
-                act, dev.cols[i], weights[i], backend=backend
+        if choice.fused:
+            # one Pallas launch: LIF advance + spike emission + per-bucket
+            # gather; the spike vector never round-trips through HBM
+            # between emission and propagation (identity exchange)
+            vtx = carry["vtx_state"]
+            i_tot = i_syn + noise + vtx[:, LIF_BIAS]
+            v2, r2, spikes, currents = ops.fused_step(
+                vtx[:, LIF_V], vtx[:, LIF_REF], i_tot,
+                dev.cols, carry["weights"],
+                params=lif_params, backend=backend,
             )
-            if dev.identity_rows[i]:
-                cur_rows = cur[:n_p]
-            else:
-                cur_rows = jax.ops.segment_sum(
-                    cur, dev.row_maps[i], num_segments=n_p
-                )
-            wslot = jnp.mod(t + d, D)
-            ring = ring.at[wslot].add(cur_rows)
+            vtx_state = (
+                vtx.at[:, LIF_V].set(v2).at[:, LIF_REF].set(r2)
+            )
+            for i, d in enumerate(dev.delays):
+                ring = ring.at[jnp.mod(t + d, D)].add(currents[i][:n_p])
+            new_weights = carry["weights"]
+            tr_plus, tr_minus = carry["tr_plus"], carry["tr_minus"]
+        else:
+            vtx_state, spikes = neuron_step(
+                dev.vtx_model, carry["vtx_state"], i_syn + noise
+            )
+
             if any_plastic:
-                pad_r = dev.cols[i].shape[0] - n_p
-                post_t = jnp.pad(tr_minus, (0, pad_r)) if pad_r else tr_minus
-                post_s = jnp.pad(spikes, (0, pad_r)) if pad_r else spikes
-                if not dev.identity_rows[i]:
-                    post_t = jnp.take(tr_minus, dev.row_maps[i], axis=0)
-                    post_s = jnp.take(spikes, dev.row_maps[i], axis=0)
-                new_weights.append(
-                    ops.stdp_update(
-                        weights[i], dev.plastic[i], dev.cols[i],
-                        pre_trace, act, post_t, post_s,
-                        params=stdp_params, backend=backend,
-                    )
-                )
+                tr_plus = carry["tr_plus"] * jnp.exp(
+                    -dt / tau_plus
+                ).astype(jnp.float32) + spikes
+                tr_minus = carry["tr_minus"] * jnp.exp(
+                    -dt / tau_minus
+                ).astype(jnp.float32) + spikes
             else:
-                new_weights.append(weights[i])
+                tr_plus = carry["tr_plus"]
+                tr_minus = carry["tr_minus"]
+
+            act, pre_trace = exchange(spikes, tr_plus)
+
+            weights = carry["weights"]
+            new_weights = []
+            for i, d in enumerate(dev.delays):
+                cur = ops.spike_gather(
+                    act, dev.cols[i], weights[i], backend=backend
+                )
+                if dev.identity_rows[i]:
+                    cur_rows = cur[:n_p]
+                else:
+                    cur_rows = jax.ops.segment_sum(
+                        cur, dev.row_maps[i], num_segments=n_p
+                    )
+                wslot = jnp.mod(t + d, D)
+                ring = ring.at[wslot].add(cur_rows)
+                if any_plastic:
+                    pad_r = dev.cols[i].shape[0] - n_p
+                    post_t = jnp.pad(tr_minus, (0, pad_r)) if pad_r \
+                        else tr_minus
+                    post_s = jnp.pad(spikes, (0, pad_r)) if pad_r else spikes
+                    if not dev.identity_rows[i]:
+                        post_t = jnp.take(tr_minus, dev.row_maps[i], axis=0)
+                        post_s = jnp.take(spikes, dev.row_maps[i], axis=0)
+                    new_weights.append(
+                        ops.stdp_update(
+                            weights[i], dev.plastic[i], dev.cols[i],
+                            pre_trace, act, post_t, post_s,
+                            params=stdp_params, backend=backend,
+                        )
+                    )
+                else:
+                    new_weights.append(weights[i])
+            new_weights = tuple(new_weights)
 
         hist = jax.lax.dynamic_update_index_in_dim(
             carry["hist"], spikes.astype(jnp.uint8), slot, axis=0
         )
         new_carry = dict(
             t=t + 1, vtx_state=vtx_state, ring=ring, hist=hist,
-            weights=tuple(new_weights), tr_plus=tr_plus, tr_minus=tr_minus,
+            weights=new_weights, tr_plus=tr_plus, tr_minus=tr_minus,
         )
         out = dict(spike_count=jnp.sum(spikes))
         if record_raster:
@@ -216,6 +276,7 @@ def make_core_step(
             out["v_mean"] = jnp.mean(vtx_state[:, 0])
         return new_carry, out
 
+    step.engine_choice = choice
     return step
 
 
@@ -236,9 +297,7 @@ class Simulator:
         )
         self.d_ring = max(self.ell.max_delay, 1)
         self.dev = partition_device_data(part, net, self.ell)
-        self.backend = cfg.backend or (
-            "pallas" if jax.default_backend() == "tpu" else "ref"
-        )
+        self.backend = resolve_sim_backend(cfg.backend)
         stdp = (
             dict(net.registry.spec("syn_stdp").params)
             if self.dev.any_plastic
@@ -259,7 +318,9 @@ class Simulator:
             noise_ids=jnp.asarray(part.global_ids, jnp.int32),
             record_raster=cfg.record_raster,
             record_v=cfg.record_v,
+            fused=cfg.fused,
         )
+        self.engine_choice: StepEngineChoice = self._step.engine_choice
 
     def init_state(self, t0: int = 0) -> Dict:
         n_p = self.dev.n_p

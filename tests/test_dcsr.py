@@ -2,7 +2,8 @@
 (unit + hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     from_edges, to_edges, repartition, merge_to_single,

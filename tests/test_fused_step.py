@@ -1,0 +1,221 @@
+"""Fused step engine: kernel-level parity vs the pure-jnp oracle across
+dtypes and non-aligned panel shapes, dispatcher backend/engine selection,
+and end-to-end fused-vs-reference equivalence on the microcircuit config
+(interpret mode — the TPU kernel body on CPU)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import dispatch, ops, ref
+from repro.kernels.fused_step import fused_lif_step_pallas
+
+LIF_PARAMS = dict(
+    dt=0.1, tau_m=10.0, v_rest=-65.0, v_reset=-65.0, v_thresh=-50.0,
+    t_ref=2.0, r_m=1.0,
+)
+
+
+def _random_case(rng, n_p, R, ks, dtype):
+    v = (-65.0 + 20.0 * rng.random(n_p)).astype(np.float32)
+    refrac = rng.integers(0, 3, n_p).astype(np.float32)
+    i_tot = (8.0 * rng.random(n_p)).astype(np.float32)
+    cols, weights = [], []
+    for K in ks:
+        c = rng.integers(0, n_p, (R, K)).astype(np.int32)
+        w = rng.normal(size=(R, K)).astype(dtype)
+        w[n_p:] = 0  # padded rows carry no synapses
+        cols.append(jnp.asarray(c))
+        weights.append(jnp.asarray(w))
+    return (
+        jnp.asarray(v), jnp.asarray(refrac), jnp.asarray(i_tot),
+        tuple(cols), tuple(weights),
+    )
+
+
+@pytest.mark.parametrize("n_p,R,ks", [
+    (64, 64, (16,)),  # aligned, single bucket
+    (100, 104, (8, 24)),  # non-aligned rows, two buckets
+    (37, 40, (4, 12, 20)),  # odd sizes, three buckets
+])
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_fused_kernel_matches_ref(rng, n_p, R, ks, dtype):
+    dtype = jnp.bfloat16 if dtype == "bfloat16" else dtype
+    v, refrac, i_tot, cols, weights = _random_case(rng, n_p, R, ks, dtype)
+    v_r, r_r, s_r, cur_r = ref.fused_step_ref(
+        v, refrac, i_tot, cols, weights, params=LIF_PARAMS
+    )
+    v_f, r_f, s_f, cur_f = fused_lif_step_pallas(
+        v, refrac, i_tot, cols, weights, params=LIF_PARAMS, interpret=True
+    )
+    # f32 accumulation in both engines: bf16 only rounds on output
+    tol = 1e-5 if dtype == np.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(v_f), np.asarray(v_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_f), np.asarray(r_r), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_r))
+    for a, b in zip(cur_f, cur_r):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=tol, atol=tol,
+        )
+
+
+@pytest.mark.parametrize("block_r", [1, 8, 64, 256])
+def test_fused_kernel_block_sweep(rng, block_r):
+    v, refrac, i_tot, cols, weights = _random_case(
+        rng, 96, 96, (16, 32), np.float32
+    )
+    v_r, r_r, s_r, cur_r = ref.fused_step_ref(
+        v, refrac, i_tot, cols, weights, params=LIF_PARAMS
+    )
+    v_f, r_f, s_f, cur_f = fused_lif_step_pallas(
+        v, refrac, i_tot, cols, weights, params=LIF_PARAMS,
+        block_r=block_r, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(v_f), np.asarray(v_r), atol=1e-5)
+    for a, b in zip(cur_f, cur_r):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_ops_fused_step_ref_backend_matches_interpret(rng):
+    v, refrac, i_tot, cols, weights = _random_case(
+        rng, 50, 56, (8,), np.float32
+    )
+    out_ref = ops.fused_step(
+        v, refrac, i_tot, cols, weights, params=LIF_PARAMS, backend="ref"
+    )
+    out_int = ops.fused_step(
+        v, refrac, i_tot, cols, weights, params=LIF_PARAMS,
+        backend="pallas_interpret",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out_ref[2]), np.asarray(out_int[2])
+    )
+
+
+# -- dispatcher -----------------------------------------------------------
+
+def test_registry_has_all_backends():
+    for op in ("spike_gather", "lif_step", "stdp_update", "fused_step"):
+        assert dispatch.backends_for(op) == (
+            "pallas", "pallas_interpret", "ref"
+        ), op
+
+
+def test_lookup_unknown_raises():
+    with pytest.raises(KeyError, match="no implementation"):
+        dispatch.lookup("no_such_op", "ref")
+    with pytest.raises(KeyError, match="available"):
+        dispatch.lookup("spike_gather", "tpu_v7")
+
+
+def test_resolve_backend_precedence(monkeypatch):
+    assert dispatch.resolve_backend("ref") == "ref"
+    monkeypatch.setenv("REPRO_BACKEND", "ref")
+    assert dispatch.resolve_backend() == "ref"
+    assert dispatch.resolve_backend("pallas") == "pallas"  # flag wins
+    monkeypatch.delenv("REPRO_BACKEND")
+    assert dispatch.resolve_backend() == dispatch._platform_default()
+
+
+ELIGIBLE = dict(
+    backend="pallas", models_present=("lif",), any_plastic=False,
+    identity_exchange=True, identity_rows=True, n_delay_buckets=2,
+    n_p=1024,
+)
+
+
+def test_select_step_engine_auto():
+    assert dispatch.select_step_engine(**ELIGIBLE).engine == "fused"
+    # ref backend: XLA fuses the oracles already
+    c = dispatch.select_step_engine(**{**ELIGIBLE, "backend": "ref"})
+    assert c.engine == "unfused"
+    # pallas_interpret validates the fused TPU path on CPU
+    c = dispatch.select_step_engine(
+        **{**ELIGIBLE, "backend": "pallas_interpret"}
+    )
+    assert c.engine == "fused"
+
+
+@pytest.mark.parametrize("override,reason_part", [
+    ({"models_present": ("lif", "alif")}, "heterogeneous"),
+    ({"any_plastic": True}, "STDP"),
+    ({"identity_exchange": False}, "collective"),
+    ({"identity_rows": False}, "segment-sum"),
+    ({"n_delay_buckets": 0}, "no synapses"),
+    ({"n_p": dispatch.FUSED_MAX_N_P + 1}, "too large"),
+])
+def test_select_step_engine_blockers(override, reason_part):
+    c = dispatch.select_step_engine(**{**ELIGIBLE, **override})
+    assert c.engine == "unfused"
+    assert reason_part in c.reason
+    # demanding fusion on an ineligible partition is an error, not silence
+    with pytest.raises(ValueError, match="fused step engine requested"):
+        dispatch.select_step_engine(**{**ELIGIBLE, **override}, fused=True)
+
+
+def test_select_step_engine_flags():
+    assert dispatch.select_step_engine(
+        **ELIGIBLE, fused=False
+    ).engine == "unfused"
+    assert dispatch.select_step_engine(
+        **{**ELIGIBLE, "backend": "ref"}, fused=True
+    ).engine == "fused"
+
+
+# -- end to end -----------------------------------------------------------
+
+def test_fused_sim_matches_ref_on_microcircuit():
+    """Acceptance: fused step == pure-JAX reference to <= 1e-5 on the
+    microcircuit config (interpret mode)."""
+    from repro.snn import SimConfig, Simulator, microcircuit, to_dcsr
+
+    def build():
+        return to_dcsr(microcircuit(scale=0.01, seed=0), k=1)
+
+    sim_r = Simulator(build(), SimConfig(
+        align_k=32, backend="ref", record_raster=True
+    ))
+    sim_f = Simulator(build(), SimConfig(
+        align_k=32, backend="pallas_interpret", fused=True,
+        record_raster=True,
+    ))
+    assert sim_r.engine_choice.engine == "unfused"
+    assert sim_f.engine_choice.engine == "fused"
+    st_r, out_r = sim_r.run(sim_r.init_state(), 50)
+    st_f, out_f = sim_f.run(sim_f.init_state(), 50)
+    np.testing.assert_array_equal(
+        np.asarray(out_r["raster"]), np.asarray(out_f["raster"])
+    )
+    np.testing.assert_allclose(
+        np.asarray(st_r["vtx_state"]), np.asarray(st_f["vtx_state"]),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_fused_demand_on_plastic_net_raises():
+    from repro.snn import SimConfig, Simulator, balanced_ei, to_dcsr
+
+    d = to_dcsr(balanced_ei(80, stdp=True, seed=3), k=1)
+    with pytest.raises(ValueError, match="STDP"):
+        Simulator(d, SimConfig(align_k=8, fused=True))
+
+
+def test_dist_index_exchange_never_fuses():
+    """k=1 compressed-index exchange truncates at its cap — it is NOT an
+    identity exchange, so the fused engine must not bypass it."""
+    from repro.snn import DistSimulator, SimConfig, spatial_random, to_dcsr
+    from repro.core import block_partition
+
+    def build():
+        net = spatial_random(64, avg_degree=6, seed=1)
+        return to_dcsr(net, assignment=block_partition(64, 1), uniform=True)
+
+    for exchange, want in (("index", "unfused"), ("dense", "fused")):
+        dist = DistSimulator(build(), SimConfig(
+            align_k=8, backend="pallas_interpret", exchange=exchange
+        ))
+        dist.run(dist.init_state(), 2)
+        assert dist.engine_choice.engine == want, (exchange, want)

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import cost_analysis
 from repro.launch.hlo_analysis import (
     analyze_hlo, _split_computations, _loop_multipliers, _parse_instr,
     roofline_terms, dominant_term,
@@ -88,7 +89,7 @@ def test_real_lowering_scan_flops_corrected():
     assert abs(s.flops - want) / want < 0.05, (s.flops, want)
     # XLA's own analysis undercounts by the trip count (the bug this
     # module exists to fix)
-    xla = comp.cost_analysis()["flops"]
+    xla = cost_analysis(comp)["flops"]
     assert xla < want / 4
 
 

@@ -4,7 +4,7 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import from_edges, rcb_partition
 from repro.core.events import EVENT_DTYPE, inflight_events, ring_from_events

@@ -5,8 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh
 from repro.configs import ARCHS, SHAPES, cells_for, get_config
 from repro.models import build_model
 from repro.sharding.policy import (
@@ -14,8 +15,8 @@ from repro.sharding.policy import (
 )
 
 MESHES = {
-    "single": AbstractMesh((16, 16), ("data", "model")),
-    "multi": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "single": abstract_mesh((16, 16), ("data", "model")),
+    "multi": abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 }
 
 
