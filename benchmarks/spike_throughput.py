@@ -16,9 +16,8 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
-from repro.snn import SimConfig, Simulator, microcircuit, to_dcsr
+from repro.snn import Session, SimConfig, microcircuit, to_dcsr
 
 
 def run(scale=0.02, steps=200, backend="ref", fused=None):
@@ -27,27 +26,27 @@ def run(scale=0.02, steps=200, backend="ref", fused=None):
     # compiled Pallas needs 128-lane-aligned panels; interpret/ref runs use
     # 32 to keep the CPU emulation panels small
     align_k = 128 if backend == "pallas" else 32
-    sim = Simulator(
+    ses = Session(
         d, SimConfig(align_k=align_k, backend=backend, fused=fused)
     )
-    st = sim.init_state()
-    # warmup + compile with the SAME static steps value: sim.run is jitted
-    # with steps static, so a different warmup length would leave the timed
-    # call to recompile inside the measured window
-    st2, outs = sim.run(st, steps)
-    jax.block_until_ready(st2["vtx_state"])
+    # warmup + compile with the SAME chunk length: the step program is
+    # jitted per chunk size, so a different warmup length would leave the
+    # timed call to recompile inside the measured window
+    ses.run(steps, chunk_size=steps)
+    jax.block_until_ready(ses.state["vtx_state"])
     t0 = time.perf_counter()
-    st3, outs = sim.run(st2, steps)
-    jax.block_until_ready(st3["vtx_state"])
+    res = ses.run(steps, chunk_size=steps)
+    jax.block_until_ready(ses.state["vtx_state"])
     dt = time.perf_counter() - t0
-    rate = float(np.asarray(outs["spike_count"]).mean()) / d.n
+    rate = float(res.spike_count.mean()) / d.n
+    info = ses.describe()
     return dict(
         n=d.n, m=d.m,
         us_per_step=dt / steps * 1e6,
         syn_events_per_s=d.m * rate * steps / dt,
         mean_activity=rate,
-        fill=sim.ell.fill_factor,
-        engine=sim.engine_choice.engine,
+        fill=info["ell_fill"],
+        engine=info["step_engine"],
     )
 
 

@@ -1,6 +1,6 @@
-"""The paper's own workload: the Potjans–Diesmann cortical microcircuit
-under dCSR — generate, partition, simulate, monitor per-population rates,
-snapshot (binary fast path) and restart.
+"""The paper's own workload through the ``Session`` API: the
+Potjans–Diesmann cortical microcircuit — generate, partition, simulate
+with streaming per-population monitoring, snapshot and restart.
 
     PYTHONPATH=src python examples/microcircuit_sim.py --scale 0.02
 """
@@ -11,11 +11,9 @@ import tempfile
 
 import numpy as np
 
-from repro.core import merge_to_single, rcb_partition
-from repro.io import load_binary, save_binary
-from repro.snn import (
-    PD14_SIZES, SimConfig, Simulator, microcircuit, to_dcsr,
-)
+from repro.core import rcb_partition
+from repro.snn import PD14_SIZES, Session, SimConfig, microcircuit, to_dcsr
+from repro.snn.monitors import PerNeuronRateMonitor
 from repro.snn.network import PD14_POPS
 
 
@@ -29,46 +27,38 @@ def main():
 
     net = microcircuit(scale=args.scale, seed=0)
     d = to_dcsr(net, assignment=rcb_partition(net.coords, args.k))
-    print(f"microcircuit scale={args.scale}: n={d.n} m={d.m} "
-          f"k={d.k} (full scale: 77,169 / ~0.3B)")
+    ses = Session(d, SimConfig())
+    print(f"microcircuit scale={args.scale}: n={ses.n} m={ses.m} "
+          f"k={d.k} engine={ses.engine_kind} "
+          f"(full scale: 77,169 / ~0.3B)")
 
-    sim = Simulator(merge_to_single(d), SimConfig(record_raster=True))
-    state = sim.init_state()
-    state, outs = sim.run(state, args.steps)
-    raster = np.asarray(outs["raster"])  # (steps, n)
-
-    # per-population firing rates (Hz)
+    # per-population rates via a streaming O(n)-memory monitor — no
+    # (steps, n) raster is ever materialized, on device or host
+    rates = PerNeuronRateMonitor()
+    ses.run(args.steps, monitors=[rates], chunk_size=100)
     sizes = np.maximum(
         (np.asarray(PD14_SIZES) * args.scale).astype(np.int64), 2
     )
     offs = np.concatenate([[0], np.cumsum(sizes)])
-    dur_s = args.steps * sim.dt * 1e-3
+    # monitor rates are in the session's labelling; map back to the
+    # permanent (population-ordered) ids for the report
+    r_perm = np.zeros(ses.n)
+    r_perm[ses.permanent_ids] = rates.rates
     print("population rates (Hz):")
     for i, pop in enumerate(PD14_POPS):
-        r = raster[:, offs[i]: offs[i + 1]].sum() / (
-            sizes[i] * dur_s
-        )
+        r = r_perm[offs[i]: offs[i + 1]].mean()
         print(f"  {pop:5s} n={sizes[i]:6d} rate={r:7.2f}")
 
-    # snapshot + restart
+    # one-call snapshot + restart
     snap = args.snapshot or tempfile.mkdtemp()
-    sim.state_to_dcsr(state)
-    save_binary(sim.net, snap, sim_state={0: dict(
-        ring=np.asarray(state["ring"]),
-        hist=np.asarray(state["hist"]),
-    )}, t_now=int(state["t"]))
+    ses.save(snap)
     print(f"snapshot -> {snap} "
           f"({sum(os.path.getsize(os.path.join(snap, f)) for f in os.listdir(snap))} bytes)")
-    net2, ss, t2 = load_binary(snap)
-    print(f"restored at t={t2}; continuing 50 steps...")
-    sim2 = Simulator(net2, SimConfig())
-    st2 = sim2.init_state(t0=t2)
-    import jax.numpy as jnp
-    st2 = dict(st2, ring=jnp.asarray(ss[0]["ring"]),
-               hist=jnp.asarray(ss[0]["hist"]))
-    st2, outs2 = sim2.run(st2, 50)
+    ses2 = Session.restore(snap)
+    print(f"restored at t={ses2.t}; continuing 50 steps...")
+    res = ses2.run(50, chunk_size=50)
     print("post-restart mean spikes/step:",
-          float(np.asarray(outs2["spike_count"]).mean()))
+          float(res.spike_count.mean()))
     if args.snapshot is None:
         shutil.rmtree(snap)
 

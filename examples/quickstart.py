@@ -1,76 +1,65 @@
-"""Quickstart: build a spatially-embedded SNN, partition it with RCB,
-simulate, serialize to the paper's text format, restore, and continue —
-bit-exactly.
+"""Quickstart: the unified ``Session`` API — build a spatially-embedded
+SNN, partition it with RCB, run it with streaming monitors, snapshot with
+one call, and restore **elastically at a different k** — bit-exactly.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
 import tempfile
 
 import numpy as np
 
 from repro.core import rcb_partition
-from repro.core.events import inflight_events
-from repro.io import load_text, save_text
-from repro.snn import SimConfig, Simulator, spatial_random, to_dcsr
-from repro.snn.monitors import summary
+from repro.snn import Session, SimConfig, spatial_random, to_dcsr
+from repro.snn.monitors import (
+    RasterMonitor, RateMonitor, permanent_order, summary,
+)
+
+
+def build():
+    net = spatial_random(500, avg_degree=20, seed=1)
+    return to_dcsr(net, assignment=rcb_partition(net.coords, 4))
 
 
 def main():
-    # 1. build + partition (4-way recursive coordinate bisection)
-    net = spatial_random(500, avg_degree=20, seed=1)
-    dcsr = to_dcsr(net, assignment=rcb_partition(net.coords, 4))
-    print(f"network: n={dcsr.n} m={dcsr.m} k={dcsr.k} "
-          f"dist={dcsr.dist.tolist()}")
+    # 1. build + partition (4-way recursive coordinate bisection); the
+    #    Session picks the engine: SPMD over 4 devices when available,
+    #    otherwise the merged single-partition view — same trajectory.
+    ses = Session(build(), SimConfig())
+    print(f"session: {ses.describe()}")
 
-    # 2. simulate 100 steps (merged single-device view of the partitions)
-    from repro.core import merge_to_single
-    sim = Simulator(merge_to_single(dcsr), SimConfig(record_raster=True))
-    state = sim.init_state()
-    state, outs = sim.run(state, 100)
-    print("activity:", summary(outs, dcsr.n, sim.dt))
+    # 2. run 100 steps; recordings stream to host-side monitors chunk by
+    #    chunk — the device never holds a (steps, n) buffer
+    raster = RasterMonitor()
+    res = ses.run(100, monitors=[raster, RateMonitor()], chunk_size=25)
+    print(f"activity: {summary(res, ses.n, ses.dt)} "
+          f"(chunks: {res.chunks})")
 
-    # 3. serialize mid-flight state: dCSR text files + in-flight events
-    sim.state_to_dcsr(state)
-    t_now = int(state["t"]) - 1
-    hist = np.asarray(state["hist"])
-    events = [
-        inflight_events(p, hist, t_now, sim.d_ring)
-        for p in sim.net.parts
-    ]
     with tempfile.TemporaryDirectory() as td:
-        sizes = save_text(sim.net, td, "quick", events_by_part=events,
-                          t_now=t_now)
-        print("serialized bytes by kind:", sizes)
+        # 3. one-call snapshot: dCSR network + in-flight ring/hist/traces,
+        #    atomic tmp+rename with a CRC32 manifest
+        snap = os.path.join(td, "snap")
+        ses.save(snap)
+        print(f"snapshot -> {snap} "
+              f"({sum(os.path.getsize(os.path.join(snap, f)) for f in os.listdir(snap))} bytes)")
 
-        # 4. restore and continue 50 more steps
-        net2, events2, t2 = load_text(td, "quick")
-    from repro.core.events import ring_from_events
-    sim2 = Simulator(net2, SimConfig(record_raster=True))
-    state2 = sim2.init_state(t0=t2 + 1)
-    ring = ring_from_events(
-        events2[0], net2.parts[0].row_start, net2.parts[0].n,
-        sim2.d_ring, t2,
-    )
-    state2 = dict(state2, vtx_state=state["vtx_state"],
-                  ring=np.asarray(ring))
-    import jax.numpy as jnp
-    state2 = {k: (jnp.asarray(v) if k != "weights" else v)
-              for k, v in state2.items()}
-    state2, outs2 = sim2.run(state2, 50)
+        # 4. ELASTIC restore: same snapshot, different k — noise is keyed
+        #    by permanent neuron id, so the trajectory cannot tell
+        restored = Session.restore(snap, k=2)
+        print(f"restored at t={restored.t} on k={restored.source_k}")
+        raster2 = RasterMonitor()
+        restored.run(50, monitors=[raster2], chunk_size=25)
 
-    # 5. prove bit-exact continuation vs an uninterrupted run
-    ref = Simulator(
-        merge_to_single(
-            to_dcsr(spatial_random(500, avg_degree=20, seed=1),
-                    assignment=rcb_partition(net.coords, 4))
-        ),
-        SimConfig(record_raster=True),
-    )
-    rstate, routs = ref.run(ref.init_state(), 150)
-    a = np.asarray(outs2["raster"])
-    b = np.asarray(routs["raster"])[100:]
-    assert np.array_equal(a, b), "restart diverged!"
-    print("restart continuation: BIT-EXACT over 50 post-restore steps")
+    # 5. prove bit-exact continuation vs an uninterrupted 150-step run
+    #    (labellings differ after resharding -> compare via permanent ids)
+    ref = Session(build(), SimConfig())
+    ref_raster = RasterMonitor()
+    ref.run(150, monitors=[ref_raster], chunk_size=50)
+    want = permanent_order(ref_raster.raster[100:], ref.permanent_ids)
+    got = permanent_order(raster2.raster, restored.permanent_ids)
+    assert np.array_equal(got, want), "restart diverged!"
+    print("elastic restart (k=4 -> k=2): BIT-EXACT over 50 "
+          "post-restore steps")
 
 
 if __name__ == "__main__":

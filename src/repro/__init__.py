@@ -4,7 +4,9 @@ rides on (model zoo, sharding policies, checkpointing, launchers).
 
 Subpackages:
   core      dCSR layout, partitioners, TPU ELL view, model registry, events
-  snn       neuron/synapse dynamics, network builders, (distributed) simulators
+  snn       neuron/synapse dynamics, network builders, the Session API
+            (single entry point: build/simulate/checkpoint/restart) +
+            internal step engines and streaming monitors
   kernels   Pallas TPU kernels (spike gather, LIF step, STDP) + jnp oracles
   io        paper-faithful text format, binary fast path, tensor checkpoints
   models    transformer/SSM/MoE/enc-dec/VLM zoo

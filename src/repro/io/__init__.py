@@ -1,8 +1,13 @@
 """Serialization: paper-faithful text format, binary fast path, tensor
 checkpoints, interop adapters."""
 from .dcsr_text import save_text, load_text  # noqa: F401
-from .dcsr_binary import save_binary, load_binary  # noqa: F401
-from .checkpoint import CheckpointManager  # noqa: F401
+from .dcsr_binary import (  # noqa: F401
+    save_binary,
+    load_binary,
+    load_latest_valid,
+    snapshot_steps,
+)
+from .checkpoint import CheckpointManager, atomic_dir  # noqa: F401
 from .interop import (  # noqa: F401
     to_adjacency_dict,
     from_adjacency_dict,

@@ -20,6 +20,7 @@ corrupt/incomplete steps.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import queue
@@ -27,7 +28,7 @@ import re
 import shutil
 import threading
 import zlib
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -35,6 +36,31 @@ import numpy as np
 
 def _crc_bytes(b: bytes) -> int:
     return zlib.crc32(b)
+
+
+@contextlib.contextmanager
+def atomic_dir(final: str) -> Iterator[str]:
+    """Write a directory atomically: yields a ``<final>.tmp`` staging dir,
+    then swaps it into place via rename — a crash mid-write never leaves a
+    partially-written ``final``, and at every instant a complete snapshot
+    exists on disk (the previous one is renamed aside to ``<final>.old``
+    before the swap, never deleted first; stale ``.tmp``/``.old`` dirs from
+    an earlier crash are cleared on the next write).  Shared by the tensor
+    checkpoints here and the dCSR snapshot writer (io/dcsr_binary,
+    snn/session)."""
+    tmp = final + ".tmp"
+    old = final + ".old"
+    for stale in (tmp, old):
+        if os.path.exists(stale):
+            shutil.rmtree(stale)
+    os.makedirs(tmp)
+    yield tmp
+    if os.path.exists(final):
+        os.replace(final, old)  # atomic aside, not rmtree: crash-safe
+        os.replace(tmp, final)
+        shutil.rmtree(old)
+    else:
+        os.replace(tmp, final)
 
 
 def _leaf_paths(tree: Any) -> List[str]:
@@ -108,45 +134,38 @@ class CheckpointManager:
 
     def _write(self, job):
         step, names, snap = job
-        final = self.step_dir(step)
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        manifest: Dict[str, Any] = dict(step=step, leaves=[])
-        for i, (name, (shape, dtype, shards)) in enumerate(
-            zip(names, snap)
-        ):
-            entry = dict(
-                name=name, shape=list(shape), dtype=dtype, shards=[]
-            )
-            for j, (index, data) in enumerate(shards):
-                fn = f"leaf{i}_s{j}.npy"
-                full = os.path.join(tmp, fn)
-                np.save(full, data)
-                with open(full, "rb") as f:
-                    crc = _crc_bytes(f.read())
-                entry["shards"].append(
-                    dict(
-                        file=fn,
-                        crc=crc,
-                        # dist-style offsets: start/stop per dim
-                        index=[
-                            [
-                                0 if s.start is None else int(s.start),
-                                (shape[d] if s.stop is None
-                                 else int(s.stop)),
-                            ]
-                            for d, s in enumerate(index)
-                        ] if shape else [],
-                    )
+        with atomic_dir(self.step_dir(step)) as tmp:
+            manifest: Dict[str, Any] = dict(step=step, leaves=[])
+            for i, (name, (shape, dtype, shards)) in enumerate(
+                zip(names, snap)
+            ):
+                entry = dict(
+                    name=name, shape=list(shape), dtype=dtype, shards=[]
                 )
-            manifest["leaves"].append(entry)
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)
+                for j, (index, data) in enumerate(shards):
+                    fn = f"leaf{i}_s{j}.npy"
+                    full = os.path.join(tmp, fn)
+                    np.save(full, data)
+                    with open(full, "rb") as f:
+                        crc = _crc_bytes(f.read())
+                    entry["shards"].append(
+                        dict(
+                            file=fn,
+                            crc=crc,
+                            # dist-style offsets: start/stop per dim
+                            index=[
+                                [
+                                    0 if s.start is None else int(s.start),
+                                    (shape[d] if s.stop is None
+                                     else int(s.stop)),
+                                ]
+                                for d, s in enumerate(index)
+                            ] if shape else [],
+                        )
+                    )
+                manifest["leaves"].append(entry)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
         self._gc()
 
     # ------------------------------------------------------------- restore

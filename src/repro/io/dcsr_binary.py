@@ -6,11 +6,21 @@ Same partition-per-file layout as the text format (each rank touches only
 dictionary, meta, the step counter and a CRC32 per file — corruption of any
 shard is detected at restore and surfaced so the driver can fall back to the
 previous complete checkpoint.
+
+``save_binary(..., atomic=True)`` stages the snapshot in a ``.tmp`` sibling
+and swaps it in with one ``os.replace`` (io/checkpoint's scheme), so a crash
+mid-write never clobbers the previous complete snapshot.
+:func:`load_latest_valid` is the fault-tolerant restore entry: it accepts
+either a single snapshot directory or a root of ``step_XXXXXXXX`` snapshot
+dirs (as written by ``Session.run(checkpoint_every=...)``) and walks
+newest-first past corrupt/truncated steps.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
+import zipfile
 import zlib
 from typing import Dict, List, Optional, Tuple
 
@@ -18,6 +28,7 @@ import numpy as np
 
 from ..core.dcsr import DCSRNetwork, DCSRPartition
 from ..core.state import ModelRegistry
+from .checkpoint import atomic_dir
 
 
 def _crc(path: str) -> int:
@@ -35,10 +46,22 @@ def save_binary(
     path: str,
     sim_state: Optional[Dict[int, Dict[str, np.ndarray]]] = None,
     t_now: int = 0,
+    atomic: bool = False,
 ) -> None:
     """``sim_state[p]`` may carry per-partition runtime arrays
-    (ring, hist, tr_plus, tr_minus) to make restarts exact."""
+    (ring, hist, tr_plus, tr_minus) to make restarts exact.
+
+    ``atomic=True`` writes through a tmp dir + ``os.replace`` so ``path``
+    only ever holds a complete snapshot."""
+    if atomic:
+        with atomic_dir(path) as tmp:
+            _write_snapshot(net, tmp, sim_state, t_now)
+        return
     os.makedirs(path, exist_ok=True)
+    _write_snapshot(net, path, sim_state, t_now)
+
+
+def _write_snapshot(net, path, sim_state, t_now):
     crcs = {}
     for part in net.parts:
         fn = os.path.join(path, f"part{part.part_id}.npz")
@@ -118,3 +141,41 @@ def load_binary(
     )
     net.validate()
     return net, sim_state, int(man["t_now"])
+
+
+def snapshot_steps(root: str) -> List[int]:
+    """Step numbers of ``step_XXXXXXXX`` snapshot dirs under ``root`` that
+    at least have a manifest (sorted ascending)."""
+    out = []
+    if not os.path.isdir(root):
+        return out
+    for fn in os.listdir(root):
+        m = re.fullmatch(r"step_(\d+)", fn)
+        if m and os.path.exists(os.path.join(root, fn, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def load_latest_valid(
+    path: str, verify: bool = True
+) -> Tuple[DCSRNetwork, Dict[int, Dict[str, np.ndarray]], int]:
+    """Fault-tolerant snapshot restore.
+
+    ``path`` is either one snapshot dir (has ``manifest.json``) or a root of
+    ``step_XXXXXXXX`` snapshot dirs; in the latter case steps are tried
+    newest-first and corrupt/truncated ones (CRC mismatch, torn manifest,
+    missing shard) are skipped — the dCSR analogue of
+    ``CheckpointManager.restore_latest_valid``.
+    """
+    if os.path.exists(os.path.join(path, "manifest.json")):
+        return load_binary(path, verify=verify)
+    steps = snapshot_steps(path)
+    for step in reversed(steps):
+        try:
+            return load_binary(
+                os.path.join(path, f"step_{step:08d}"), verify=verify
+            )
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile,
+                AssertionError):
+            continue
+    raise FileNotFoundError(f"no valid dCSR snapshot under {path!r}")

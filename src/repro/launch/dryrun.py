@@ -222,7 +222,8 @@ def lower_snn_cell(
     spike exchange (dense all-gather vs compressed index) visible in the
     collective term."""
     from ..core.partition import rcb_partition
-    from ..snn import DistSimulator, SimConfig, microcircuit, to_dcsr
+    from ..snn import SimConfig, microcircuit, to_dcsr
+    from ..snn.dist_sim import DistSimulator  # internal engine: lower()
     from .mesh import make_snn_mesh
 
     net = microcircuit(scale=scale, seed=0)

@@ -1,5 +1,6 @@
-"""Production SNN simulation launcher: build (or ingest) a dCSR network,
-partition it, simulate with periodic binary snapshots, auto-resume.
+"""Production SNN simulation launcher on the unified Session API: build
+(or resume) a dCSR network, partition it, simulate with periodic atomic
+snapshots, auto-resume past corrupt checkpoints.
 
     # k partitions on k devices (shard_map); on CPU test boxes use
     # XLA_FLAGS=--xla_force_host_platform_device_count=<k>
@@ -9,14 +10,10 @@ partition it, simulate with periodic binary snapshots, auto-resume.
 import argparse
 import os
 
-import numpy as np
-
-from ..configs.snn_microcircuit import SNNConfig
-from ..core import merge_to_single, rcb_partition, voxel_partition, \
-    block_partition, hash_partition
-from ..io import load_binary, save_binary
-from ..snn import DistSimulator, SimConfig, Simulator, microcircuit, \
-    to_dcsr
+from ..core import block_partition, hash_partition, rcb_partition, \
+    voxel_partition
+from ..io import snapshot_steps
+from ..snn import Session, SimConfig, microcircuit, to_dcsr
 from ..snn.monitors import summary
 
 PARTITIONERS = dict(
@@ -42,57 +39,32 @@ def main(argv=None):
                     help="shard_map over k devices (needs >= k devices)")
     args = ap.parse_args(argv)
 
-    resume_state = None
-    t0 = 0
-    if args.snapshot_dir and os.path.exists(
-        os.path.join(args.snapshot_dir, "manifest.json")
+    cfg = SimConfig(exchange=args.exchange)
+    engine = "spmd" if args.distributed else "auto"
+    if args.snapshot_dir and (
+        os.path.exists(os.path.join(args.snapshot_dir, "manifest.json"))
+        or snapshot_steps(args.snapshot_dir)
     ):
-        d, sim_state, t0 = load_binary(args.snapshot_dir)
-        print(f"[simulate] resumed at t={t0} from {args.snapshot_dir}")
-        resume_state = sim_state
+        # fault-tolerant resume: walks newest-first past corrupt steps
+        ses = Session.restore(args.snapshot_dir, cfg=cfg, engine=engine)
+        print(f"[simulate] resumed at t={ses.t} from {args.snapshot_dir}")
     else:
         net = microcircuit(scale=args.scale, seed=0)
         asn = PARTITIONERS[args.partitioner](net, args.k)
         d = to_dcsr(net, assignment=asn, uniform=args.distributed)
-    print(f"[simulate] n={d.n} m={d.m} k={d.k}")
-
-    cfg = SimConfig(exchange=args.exchange)
-    if args.distributed:
-        sim = DistSimulator(d, cfg)
-    else:
-        sim = Simulator(merge_to_single(d) if d.k > 1 else d, cfg)
-    state = sim.init_state(t0=t0)
-    if resume_state is not None and not args.distributed:
-        import jax.numpy as jnp
-        if 0 in resume_state:
-            state = dict(state, **{
-                k: jnp.asarray(v) for k, v in resume_state[0].items()
-                if k in state
-            })
+        ses = Session(d, cfg, engine=engine)
+    print(f"[simulate] {ses.describe()}")
 
     every = args.snapshot_every or args.steps
     done = 0
     while done < args.steps:
         chunk = min(every, args.steps - done)
-        state, outs = sim.run(state, chunk)
+        res = ses.run(chunk, chunk_size=chunk)
         done += chunk
-        print(f"[simulate] t={int(state['t'])} "
-              f"{summary(outs, d.n, sim.dt)}")
+        print(f"[simulate] t={ses.t} {summary(res, ses.n, ses.dt)}")
         if args.snapshot_dir:
-            sim.state_to_dcsr(state)
-            ss = {}
-            if args.distributed:
-                for p in range(d.k):
-                    ss[p] = dict(
-                        ring=np.asarray(state["ring"])[p],
-                        hist=np.asarray(state["hist"])[p],
-                    )
-            else:
-                ss[0] = dict(ring=np.asarray(state["ring"]),
-                             hist=np.asarray(state["hist"]))
-            save_binary(sim.net, args.snapshot_dir, sim_state=ss,
-                        t_now=int(state["t"]))
-            print(f"[simulate] snapshot @ t={int(state['t'])}")
+            ses.save(args.snapshot_dir)
+            print(f"[simulate] snapshot @ t={ses.t}")
 
 
 if __name__ == "__main__":

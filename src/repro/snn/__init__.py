@@ -1,4 +1,13 @@
-"""SNN layer: dynamics, builders, single-device and distributed simulators."""
+"""SNN layer: dynamics, builders, and the unified :class:`Session` API.
+
+``Session`` is the single supported entry point (build → run with
+streaming monitors → save → elastic restore); the legacy ``Simulator`` /
+``DistSimulator`` classes remain importable for one release as deprecated
+aliases of the internal engines.
+"""
+import importlib
+import warnings
+
 from .network import (  # noqa: F401
     NetworkDef,
     to_dcsr,
@@ -9,5 +18,44 @@ from .network import (  # noqa: F401
     PD14_SIZES,
     PD14_PROBS,
 )
-from .simulator import SimConfig, Simulator  # noqa: F401
-from .dist_sim import DistSimulator  # noqa: F401
+from .session import RunResult, Session, StepEngine  # noqa: F401
+from .simulator import SimConfig  # noqa: F401
+
+__all__ = [
+    "Session",
+    "SimConfig",
+    "RunResult",
+    "StepEngine",
+    "NetworkDef",
+    "to_dcsr",
+    "spatial_random",
+    "microcircuit",
+    "balanced_ei",
+    "mixed_population",
+    "PD14_SIZES",
+    "PD14_PROBS",
+    # deprecated (module __getattr__): internal engines kept importable
+    "Simulator",
+    "DistSimulator",
+]
+
+_DEPRECATED = {
+    "Simulator": "repro.snn.simulator",
+    "DistSimulator": "repro.snn.dist_sim",
+}
+_DEPRECATION_WARNED = set()
+
+
+def __getattr__(name):
+    if name in _DEPRECATED:
+        if name not in _DEPRECATION_WARNED:
+            _DEPRECATION_WARNED.add(name)
+            warnings.warn(
+                f"repro.snn.{name} is deprecated and will become private; "
+                "use repro.snn.Session, the single entry point for "
+                "build/simulate/checkpoint/restart at any k",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        return getattr(importlib.import_module(_DEPRECATED[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -122,10 +122,17 @@ def stack_partitions(net: DCSRNetwork, cfg: SimConfig) -> StackedNet:
 
 
 class DistSimulator:
-    """k partitions over k devices (mesh axis 'parts')."""
+    """k partitions over k devices (mesh axis 'parts').
+
+    .. deprecated::
+        ``DistSimulator`` is an internal engine behind
+        :class:`repro.snn.Session` (the single supported entry point);
+        importing it from ``repro.snn`` emits a ``DeprecationWarning``.
+    """
 
     def __init__(self, net: DCSRNetwork, cfg: SimConfig = SimConfig(),
                  mesh: Optional[Mesh] = None):
+        self._compiled: Dict[int, Tuple] = {}  # steps -> (jitted fn, args)
         self.net = net
         self.cfg = cfg
         self.dt = float(net.meta.get("dt", 0.1))
@@ -260,9 +267,14 @@ class DistSimulator:
 
     def run(self, state: Dict, steps: int):
         """scan(steps) entirely inside shard_map; returns (state, outs) with
-        outs['spike_count'] of shape (steps, k)."""
-        fn, args = self._build_run(steps)
-        return jax.jit(fn)(*args, state)
+        outs['spike_count'] of shape (steps, k).  The jitted program is
+        cached per ``steps`` so chunked callers (Session.run) compile each
+        chunk length once instead of on every call."""
+        if steps not in self._compiled:
+            fn, args = self._build_run(steps)
+            self._compiled[steps] = (jax.jit(fn), args)
+        fn, args = self._compiled[steps]
+        return fn(*args, state)
 
     def _build_run(self, steps: int):
         s = self.stacked
@@ -363,3 +375,10 @@ class DistSimulator:
                 new_w.append(weights[di][p_i, :R, :K])
             ell.update_bucket_weights(new_w)
             ell.scatter_weights_back(part)
+
+    def runtime_state(self, state: Dict) -> Dict[int, Dict[str, np.ndarray]]:
+        """In-flight runtime arrays (ring/hist/traces) keyed per partition —
+        the serialization side-channel next to the dCSR snapshot."""
+        from .reshard import stack_runtime
+
+        return stack_runtime(state, self.stacked.k)

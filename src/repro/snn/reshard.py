@@ -69,7 +69,7 @@ def reshard_sim_state(
 def stack_runtime(
     state: Dict, k: int
 ) -> Dict[int, Dict[str, np.ndarray]]:
-    """Split a DistSimulator carry into per-partition runtime dicts
+    """Split a distributed-engine carry into per-partition runtime dicts
     (inverse of the init_state stacking)."""
     out = {}
     for p in range(k):
@@ -79,3 +79,25 @@ def stack_runtime(
             if key in state
         }
     return out
+
+
+def concat_runtime(
+    sim_state: Dict[int, Dict[str, np.ndarray]]
+) -> Dict[str, np.ndarray]:
+    """Concatenate per-partition runtime arrays along the vertex axis, in
+    partition order — exactly the merged (k=1) labelling, because
+    ``merge_to_single`` relabels with a stable partition-major order.  Used
+    when a k>1 snapshot is restored onto a single-partition engine."""
+    if not sim_state:
+        return {}
+    parts = [sim_state[p] for p in sorted(sim_state)]
+    keys = set(RUNTIME_KEYS).intersection(*(set(p) for p in parts))
+    return {
+        key: (
+            parts[0][key]
+            if len(parts) == 1
+            else np.concatenate([p[key] for p in parts], axis=-1)
+        )
+        for key in RUNTIME_KEYS
+        if key in keys
+    }

@@ -1,0 +1,532 @@
+"""Unified ``Session`` API: one entry point for build → simulate →
+checkpoint → restart, elastic across k.
+
+``Session(net_or_path, cfg)`` is the single supported way to simulate a
+dCSR network.  It auto-selects a step engine (the legacy ``Simulator`` /
+``DistSimulator`` classes are demoted to internal engines behind the
+:class:`StepEngine` protocol), runs the scan **chunked** so recordings
+stream to host-side monitors instead of materializing ``(steps, n)`` on
+device, and makes the paper's partition-parallel serialization one call.
+
+Engine selection (``engine="auto"``):
+
+  * ``k == 1``                         → single-partition engine;
+  * ``k > 1``, uniform partitions and  → SPMD engine: one partition per
+    ``len(jax.devices()) >= k``          device via ``shard_map``;
+  * otherwise                          → single engine over
+    ``merge_to_single(net)`` (same global labelling, bit-identical
+    trajectory — asserted in tests), so a partitioned network runs
+    anywhere.
+
+Both engines share one output contract (see :mod:`repro.snn.monitors`):
+``spike_count`` ``(steps,)`` int32 summed over partitions, ``raster``
+``(steps, n)`` uint8 in the global labelling, ``v_mean`` ``(steps,)``
+float32.
+
+Serialization contract (``session.save`` / ``Session.restore``)
+---------------------------------------------------------------
+
+One simulation step ``t`` performs, in order: (1) deliver ``ring[t % D]``,
+(2) neuron update → spikes ``s_t``, (3) trace decay+bump, (4) exchange,
+(5) propagate into ``ring[(t + d) % D]``, (6) STDP, (7) record
+``hist[t % D] = s_t``, then ``t += 1``.  ``save`` captures the state
+*between* steps: after step ``t_now - 1`` completed and before ``t_now``
+begins.  It writes, atomically (staged in a ``.tmp`` dir, previous snapshot
+renamed aside before the swap, CRC32 per shard in the manifest — at every
+instant a complete snapshot exists on disk):
+
+  * the dCSR network itself with vertex state and synaptic weights synced
+    back from the device (``part<p>.npz`` per partition — each process
+    touches only its own rows, the paper's partition-parallel property);
+  * the in-flight runtime per partition: future-current ring buffer
+    (``ring``), recent spike history (``hist``, needed for event-level
+    interop), and STDP traces (``tr_plus``/``tr_minus``);
+  * ``t_now`` and the model dictionary in ``manifest.json``.
+
+``Session.restore(path, k=...)`` is **elastic**: because simulation noise
+is a pure function of ``(seed, t, permanent neuron id)`` and runtime arrays
+are row-aligned, a snapshot taken at one k restores onto any other k
+(routed through :mod:`repro.snn.reshard`) and continues **bit-identically**
+— the paper's "repartitioning ... to optimally fit different backends",
+asserted end-to-end in ``tests/test_session.py``.  ``restore`` also accepts
+a root of ``step_XXXXXXXX`` snapshots (as written by
+``session.run(checkpoint_every=...)``) and walks newest-first past
+corrupt/truncated steps.
+
+Typical use::
+
+    from repro.snn import Session, SimConfig, microcircuit, to_dcsr
+    from repro.snn.monitors import RasterMonitor
+
+    net = to_dcsr(microcircuit(scale=0.01), k=4)
+    ses = Session(net, SimConfig())
+    raster = RasterMonitor()
+    res = ses.run(1000, monitors=[raster], checkpoint_every=200,
+                  checkpoint_dir="ckpts")
+    ses.save("final")                       # one-call snapshot
+    ses2 = Session.restore("final", k=2)    # elastic restart on k=2
+"""
+from __future__ import annotations
+
+import collections.abc
+import dataclasses
+import os
+import shutil
+from typing import Dict, Iterable, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dcsr import DCSRNetwork, merge_to_single
+from ..core.partition import block_partition
+from ..io.dcsr_binary import load_latest_valid, save_binary, snapshot_steps
+from .dist_sim import DistSimulator
+from .reshard import RUNTIME_KEYS, concat_runtime, reshard_sim_state
+from .simulator import SimConfig, Simulator
+
+_DEFAULT_CHUNK = 128
+
+
+class StepEngine(Protocol):
+    """What the session needs from an engine: init/advance a carry, sync it
+    back to dCSR, and export/import the in-flight runtime per partition.
+    ``run_chunk`` returns host-side outputs in the unified contract."""
+
+    kind: str
+    net: DCSRNetwork
+
+    def init_state(self, t0: int = 0) -> Dict: ...
+
+    def run_chunk(self, state: Dict, steps: int) -> Tuple[Dict, Dict]: ...
+
+    def sync_to_dcsr(self, state: Dict) -> None: ...
+
+    def runtime_state(self, state: Dict) -> Dict[int, Dict]: ...
+
+    def load_runtime(self, state: Dict, sim_state: Dict[int, Dict]) -> Dict: ...
+
+
+class _SingleEngine:
+    """k=1 engine (wraps the legacy ``Simulator``).  Also serves k>1
+    networks through their merged single-partition view."""
+
+    kind = "single"
+
+    def __init__(self, net: DCSRNetwork, cfg: SimConfig):
+        self.net = net
+        self.sim = Simulator(net, cfg)
+
+    @property
+    def engine_choice(self):
+        return self.sim.engine_choice
+
+    @property
+    def dt(self) -> float:
+        return self.sim.dt
+
+    @property
+    def d_ring(self) -> int:
+        return self.sim.d_ring
+
+    def init_state(self, t0: int = 0) -> Dict:
+        return self.sim.init_state(t0)
+
+    def run_chunk(self, state: Dict, steps: int) -> Tuple[Dict, Dict]:
+        state, outs = self.sim.run(state, steps)
+        host = dict(
+            spike_count=np.asarray(outs["spike_count"]).astype(np.int32)
+        )
+        if "raster" in outs:
+            host["raster"] = np.asarray(outs["raster"])
+        if "v_mean" in outs:
+            host["v_mean"] = np.asarray(outs["v_mean"])
+        return state, host
+
+    def sync_to_dcsr(self, state: Dict) -> None:
+        self.sim.state_to_dcsr(state)
+
+    def runtime_state(self, state: Dict) -> Dict[int, Dict]:
+        return self.sim.runtime_state(state)
+
+    def load_runtime(self, state: Dict, sim_state: Dict[int, Dict]) -> Dict:
+        # a k>1 snapshot concatenates (partition order == merged labelling)
+        merged = concat_runtime(sim_state)
+        return dict(
+            state, **{k: jnp.asarray(v) for k, v in merged.items()}
+        )
+
+
+class _SPMDEngine:
+    """k>1 engine (wraps the legacy ``DistSimulator``): one partition per
+    device, single spike-exchange collective per step."""
+
+    kind = "spmd"
+
+    def __init__(self, net: DCSRNetwork, cfg: SimConfig, mesh=None):
+        self.net = net
+        self.sim = DistSimulator(net, cfg, mesh=mesh)
+
+    @property
+    def engine_choice(self):
+        return self.sim.engine_choice
+
+    @property
+    def dt(self) -> float:
+        return self.sim.dt
+
+    @property
+    def d_ring(self) -> int:
+        return self.sim.stacked.d_ring
+
+    def init_state(self, t0: int = 0) -> Dict:
+        return self.sim.init_state(t0)
+
+    def run_chunk(self, state: Dict, steps: int) -> Tuple[Dict, Dict]:
+        state, outs = self.sim.run(state, steps)
+        sc = np.asarray(outs["spike_count"])  # (steps, k)
+        host = dict(spike_count=sc.sum(axis=1).astype(np.int32))
+        if "raster" in outs:
+            r = np.asarray(outs["raster"])  # (steps, k, n_p)
+            host["raster"] = r.reshape(r.shape[0], -1)
+        if "v_mean" in outs:
+            host["v_mean"] = (
+                np.asarray(outs["v_mean"]).mean(axis=1).astype(np.float32)
+            )
+        return state, host
+
+    def sync_to_dcsr(self, state: Dict) -> None:
+        self.sim.state_to_dcsr(state)
+
+    def runtime_state(self, state: Dict) -> Dict[int, Dict]:
+        return self.sim.runtime_state(state)
+
+    def load_runtime(self, state: Dict, sim_state: Dict[int, Dict]) -> Dict:
+        if not sim_state:
+            return state
+        k = self.net.k
+        parts = [sim_state.get(p, {}) for p in range(k)]
+        keys = set(RUNTIME_KEYS).intersection(*(set(p) for p in parts))
+        upd = {
+            key: jnp.asarray(np.stack([p[key] for p in parts]))
+            for key in RUNTIME_KEYS
+            if key in keys
+        }
+        return dict(state, **upd)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RunResult(collections.abc.Mapping):
+    """Host-side result of ``Session.run``.  Mapping access exposes
+    ``result["spike_count"]`` so post-hoc helpers (``monitors.summary``)
+    accept it like legacy output dicts; richer recordings live on the
+    monitor objects passed to ``run``."""
+
+    spike_count: np.ndarray  # (steps,) int32, summed over partitions
+    t_final: int
+    chunks: Tuple[int, ...]  # chunk lengths actually executed
+
+    def __getitem__(self, key):
+        if key == "spike_count":
+            return self.spike_count
+        raise KeyError(key)
+
+    def __iter__(self):
+        return iter(("spike_count",))
+
+    def __len__(self):
+        return 1
+
+
+class Session:
+    """One object for the paper's whole workflow; see the module docstring
+    for the engine-selection rules and the serialization contract."""
+
+    def __init__(
+        self,
+        net_or_path,
+        cfg: Optional[SimConfig] = None,
+        *,
+        engine: str = "auto",
+        mesh=None,
+    ):
+        if isinstance(net_or_path, (str, os.PathLike)):
+            net, sim_state, t_now = load_latest_valid(
+                os.fspath(net_or_path)
+            )
+        elif isinstance(net_or_path, DCSRNetwork):
+            net, sim_state, t_now = net_or_path, None, 0
+        else:
+            raise TypeError(
+                "Session expects a DCSRNetwork or a snapshot path, got "
+                f"{type(net_or_path).__name__}"
+            )
+        self.cfg = cfg if cfg is not None else SimConfig()
+        self.source_k = net.k
+        self._mesh = mesh
+        self.engine_kind = self._select_engine_kind(net, engine, mesh)
+        self.net = (
+            merge_to_single(net)
+            if (self.engine_kind == "single" and net.k > 1)
+            else net
+        )
+        self._engine_obj: Optional[StepEngine] = None
+        self._engine_flags: Optional[Tuple[bool, bool]] = None
+        self._state: Optional[Dict] = None
+        self._t0 = int(t_now)
+        self._pending_runtime = sim_state if sim_state else None
+        self.last_run_chunks: Tuple[int, ...] = ()
+        # eager engine build: surfaces SimConfig/backend errors at
+        # construction and fixes dt/d_ring for save()
+        self._engine(self.cfg.record_raster, self.cfg.record_v)
+
+    # -- engine selection --------------------------------------------------
+    @staticmethod
+    def _select_engine_kind(net: DCSRNetwork, engine: str, mesh) -> str:
+        if engine not in ("auto", "single", "spmd"):
+            raise ValueError(
+                f"engine={engine!r}: expected 'auto', 'single' or 'spmd'"
+            )
+        uniform = len({p.n for p in net.parts}) == 1
+        enough = mesh is not None or len(jax.devices()) >= net.k
+        if engine == "spmd":
+            if net.k == 1:
+                raise ValueError("engine='spmd' needs a k>1 network")
+            if not uniform:
+                raise ValueError(
+                    "engine='spmd' needs uniform partitions; build with "
+                    "to_dcsr(..., uniform=True)"
+                )
+            if not enough:
+                raise ValueError(
+                    f"engine='spmd' needs >= {net.k} devices "
+                    f"(have {len(jax.devices())})"
+                )
+            return "spmd"
+        if engine == "single" or net.k == 1:
+            return "single"
+        return "spmd" if (uniform and enough) else "single"
+
+    def _engine(self, record_raster: bool, record_v: bool) -> StepEngine:
+        """Engine with exactly the requested recordings.  At most ONE
+        engine instance is kept (device-resident constants and jit caches
+        are not duplicated per flag combination); changing the recording
+        set replaces it — the carry pytree is engine-independent, so state
+        survives the swap, at the cost of a recompile when recordings
+        toggle."""
+        key = (bool(record_raster), bool(record_v))
+        if self._engine_obj is None or self._engine_flags != key:
+            cfg = dataclasses.replace(
+                self.cfg, record_raster=key[0], record_v=key[1]
+            )
+            if self.engine_kind == "spmd":
+                eng: StepEngine = _SPMDEngine(self.net, cfg, mesh=self._mesh)
+            else:
+                eng = _SingleEngine(self.net, cfg)
+            self._engine_obj = eng
+            self._engine_flags = key
+        return self._engine_obj
+
+    @property
+    def _current_engine(self) -> StepEngine:
+        if self._engine_obj is None:
+            self._engine(self.cfg.record_raster, self.cfg.record_v)
+        return self._engine_obj
+
+    def _ensure_state(self, engine: StepEngine) -> None:
+        if self._state is None:
+            st = engine.init_state(self._t0)
+            if self._pending_runtime is not None:
+                st = engine.load_runtime(st, self._pending_runtime)
+                self._pending_runtime = None
+            self._state = st
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.net.n
+
+    @property
+    def m(self) -> int:
+        return self.net.m
+
+    @property
+    def k(self) -> int:
+        """Partitions actually simulated (1 for the merged fallback)."""
+        return self.net.k
+
+    @property
+    def dt(self) -> float:
+        return self._current_engine.dt
+
+    @property
+    def d_ring(self) -> int:
+        return self._current_engine.d_ring
+
+    @property
+    def t(self) -> int:
+        """Next step index (steps completed since t=0)."""
+        return (
+            int(self._state["t"]) if self._state is not None else self._t0
+        )
+
+    @property
+    def state(self) -> Dict:
+        """The device-side carry, materialized on first access (restored
+        pending runtime included)."""
+        self._ensure_state(self._current_engine)
+        return self._state
+
+    @property
+    def engine_choice(self):
+        """Fused/unfused step-engine decision of the kernel layer."""
+        return self._current_engine.engine_choice
+
+    @property
+    def permanent_ids(self) -> np.ndarray:
+        """Permanent (pre-partitioning) neuron id per current global row —
+        the invariant labelling for cross-k trajectory comparison."""
+        return np.concatenate([p.global_ids for p in self.net.parts])
+
+    def describe(self) -> Dict:
+        d = dict(
+            n=self.n, m=self.m, k=self.k, source_k=self.source_k,
+            engine=self.engine_kind, t=self.t,
+            step_engine=self.engine_choice.engine,
+        )
+        if isinstance(self._current_engine, _SingleEngine):
+            d["backend"] = self._current_engine.sim.backend
+            d["ell_fill"] = self._current_engine.sim.ell.fill_factor
+        else:
+            d["backend"] = self._current_engine.sim.backend
+        return d
+
+    # -- simulate ----------------------------------------------------------
+    def run(
+        self,
+        steps: int,
+        monitors: Iterable = (),
+        *,
+        chunk_size: Optional[int] = None,
+        checkpoint_every: Optional[int] = None,
+        checkpoint_dir: Optional[str] = None,
+        max_to_keep: Optional[int] = None,
+    ) -> RunResult:
+        """Advance the simulation ``steps`` steps as a chunked scan.
+
+        ``monitors`` are streaming accumulators (see
+        :mod:`repro.snn.monitors`); the needed recordings (raster, v_mean)
+        are enabled automatically from their ``requires`` sets.
+        ``checkpoint_every`` writes an atomic snapshot under
+        ``checkpoint_dir/step_XXXXXXXX`` every that-many steps (chunks are
+        aligned to checkpoint boundaries); ``max_to_keep`` garbage-collects
+        older step snapshots.  Chunking is bit-transparent: the trajectory
+        is identical for any ``chunk_size``.
+        """
+        if steps <= 0:
+            raise ValueError(f"steps must be positive, got {steps}")
+        if checkpoint_every is not None:
+            if checkpoint_every <= 0:
+                raise ValueError("checkpoint_every must be positive")
+            if checkpoint_dir is None:
+                raise ValueError("checkpoint_every requires checkpoint_dir")
+        monitors = tuple(monitors)
+        need = set()
+        for mon in monitors:
+            need |= set(getattr(mon, "requires", ()))
+        engine = self._engine(
+            self.cfg.record_raster or "raster" in need,
+            self.cfg.record_v or "v_mean" in need,
+        )
+        self._ensure_state(engine)
+        if chunk_size is None:
+            chunk_size = min(steps, _DEFAULT_CHUNK)
+        chunk_size = max(1, int(chunk_size))
+
+        t_run0 = self.t
+        for mon in monitors:
+            mon.begin(self)
+        counts, chunks = [], []
+        done = 0
+        next_ckpt = checkpoint_every
+        while done < steps:
+            c = min(chunk_size, steps - done)
+            if next_ckpt is not None:
+                c = min(c, next_ckpt - done)
+            state, outs = engine.run_chunk(self._state, c)
+            self._state = state
+            for mon in monitors:
+                mon.on_chunk(t_run0 + done, outs)
+            counts.append(outs["spike_count"])
+            chunks.append(c)
+            done += c
+            if next_ckpt is not None and done == next_ckpt:
+                self.save(
+                    os.path.join(
+                        checkpoint_dir, f"step_{t_run0 + done:08d}"
+                    )
+                )
+                if max_to_keep:
+                    self._gc_checkpoints(checkpoint_dir, max_to_keep)
+                next_ckpt += checkpoint_every
+        for mon in monitors:
+            mon.finalize()
+        self.last_run_chunks = tuple(chunks)
+        return RunResult(
+            spike_count=np.concatenate(counts),
+            t_final=t_run0 + done,
+            chunks=tuple(chunks),
+        )
+
+    # -- checkpoint / restart ----------------------------------------------
+    def save(self, path: str) -> str:
+        """One-call snapshot: sync device state back into the dCSR
+        partitions and write network + in-flight runtime + ``t`` atomically
+        (see the module docstring for exactly what is captured)."""
+        eng = self._current_engine
+        self._ensure_state(eng)
+        eng.sync_to_dcsr(self._state)
+        save_binary(
+            self.net, path,
+            sim_state=eng.runtime_state(self._state),
+            t_now=self.t, atomic=True,
+        )
+        return path
+
+    @classmethod
+    def restore(
+        cls,
+        path: str,
+        *,
+        k: Optional[int] = None,
+        cfg: Optional[SimConfig] = None,
+        assignment: Optional[np.ndarray] = None,
+        engine: str = "auto",
+        mesh=None,
+    ) -> "Session":
+        """Restore a session from ``session.save`` output (or a
+        ``checkpoint_every`` root, walking past corrupt steps).
+
+        ``k``/``assignment`` trigger **elastic** restore: the network and
+        its in-flight runtime are re-partitioned (``snn/reshard.py``) before
+        the engine is built, and the continued trajectory is bit-identical
+        to an uninterrupted run."""
+        net, sim_state, t_now = load_latest_valid(os.fspath(path))
+        if assignment is not None or (k is not None and k != net.k):
+            asn = (
+                np.asarray(assignment, np.int64)
+                if assignment is not None
+                else block_partition(net.n, k)
+            )
+            net, sim_state = reshard_sim_state(net, sim_state, asn)
+        ses = cls(net, cfg, engine=engine, mesh=mesh)
+        ses._t0 = int(t_now)
+        ses._pending_runtime = sim_state if sim_state else None
+        return ses
+
+    @staticmethod
+    def _gc_checkpoints(root: str, keep: int) -> None:
+        for step in snapshot_steps(root)[:-keep]:
+            shutil.rmtree(
+                os.path.join(root, f"step_{step:08d}"), ignore_errors=True
+            )

@@ -31,7 +31,7 @@ from ..core.ell import DelayELL, build_delay_ell
 from ..core.state import EDGE_WEIGHT
 from ..kernels import ops
 from ..kernels.dispatch import (
-    StepEngineChoice, resolve_sim_backend, select_step_engine,
+    BACKENDS, StepEngineChoice, resolve_sim_backend, select_step_engine,
 )
 from .neurons import (
     LIF_BIAS, LIF_PARAM_KEYS, LIF_REF, LIF_V, make_neuron_step,
@@ -50,6 +50,33 @@ class SimConfig:
     exchange: str = "dense"  # 'dense' | 'index' (distributed only)
     index_cap_frac: float = 0.25  # K cap for compressed exchange, frac of n_p
     seed: int = 42
+
+    def __post_init__(self):
+        # fail at construction with an actionable message, not deep inside
+        # resolve_sim_backend / the exchange builder
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(
+                f"SimConfig(backend={self.backend!r}): unknown backend; "
+                f"expected one of {BACKENDS} or None for platform "
+                "auto-detection (REPRO_BACKEND env also applies)"
+            )
+        if self.exchange not in ("dense", "index"):
+            raise ValueError(
+                f"SimConfig(exchange={self.exchange!r}): expected 'dense' "
+                "(all-gathered activity vector, paper-faithful) or 'index' "
+                "(compressed fixed-capacity spike-id lists)"
+            )
+        if not 0.0 < self.index_cap_frac <= 1.0:
+            raise ValueError(
+                f"SimConfig(index_cap_frac={self.index_cap_frac}): the "
+                "compressed-exchange capacity is a fraction of the "
+                "partition size and must lie in (0, 1]"
+            )
+        if self.align_k < 1 or self.align_rows < 1:
+            raise ValueError(
+                f"SimConfig(align_k={self.align_k}, "
+                f"align_rows={self.align_rows}): ELL alignments must be >= 1"
+            )
 
 
 @dataclasses.dataclass
@@ -281,8 +308,14 @@ def make_core_step(
 
 
 class Simulator:
-    """Single-partition (k = 1) simulator — also the bit-exact oracle the
-    distributed simulator is tested against."""
+    """Single-partition (k = 1) step engine — also the bit-exact oracle the
+    distributed engine is tested against.
+
+    .. deprecated::
+        ``Simulator`` is an internal engine behind :class:`repro.snn.Session`
+        (the single supported entry point); importing it from ``repro.snn``
+        emits a ``DeprecationWarning``.
+    """
 
     def __init__(self, net: DCSRNetwork, cfg: SimConfig = SimConfig()):
         assert net.k == 1, "Simulator takes k=1 nets; see dist_sim for k>1"
@@ -348,3 +381,12 @@ class Simulator:
             [np.asarray(w) for w in state["weights"]]
         )
         self.ell.scatter_weights_back(part)
+
+    def runtime_state(self, state: Dict) -> Dict[int, Dict[str, np.ndarray]]:
+        """In-flight runtime arrays (ring/hist/traces) keyed per partition —
+        the serialization side-channel next to the dCSR snapshot."""
+        from .reshard import RUNTIME_KEYS
+
+        return {
+            0: {k: np.asarray(state[k]) for k in RUNTIME_KEYS if k in state}
+        }

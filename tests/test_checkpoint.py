@@ -59,6 +59,37 @@ def test_corruption_falls_back(tmp_path):
     assert step == 1
 
 
+def test_restore_latest_valid_walks_past_truncated_step(tmp_path):
+    """A shard truncated mid-write (disk full / node failure) fails its CRC
+    and the restore walks back to the previous complete step."""
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    t = tree()
+    cm.save(1, t, wait=True)
+    cm.save(2, t, wait=True)
+    cm.save(3, t, wait=True)
+    for step in (2, 3):
+        d = cm.step_dir(step)
+        npy = sorted(f for f in os.listdir(d) if f.endswith(".npy"))[0]
+        p = os.path.join(d, npy)
+        with open(p, "r+b") as f:
+            f.truncate(max(os.path.getsize(p) // 2, 1))
+    out, step = cm.restore_latest_valid(like=t)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_latest_valid_all_corrupt_raises(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    t = tree()
+    cm.save(1, t, wait=True)
+    man = os.path.join(cm.step_dir(1), "manifest.json")
+    with open(man, "w") as f:
+        f.write("{not json")
+    with pytest.raises(FileNotFoundError):
+        cm.restore_latest_valid(like=t)
+
+
 def test_node_failure_partial_write(tmp_path):
     """A step dir missing its manifest (crash mid-write before the atomic
     rename would normally prevent this; simulate a torn directory) is
