@@ -3,8 +3,19 @@ per-step wall time for the microcircuit under the jitted scan loop.
 
 Modes (``--mode``):
   * ``ref``   — the pure-jnp oracle path (CPU production path; default)
-  * ``fused`` — fused single-kernel step vs. unfused three-kernel step,
-                both through the Pallas engine, reported side by side.
+  * ``fused`` — k=1 fused single-kernel step vs. unfused three-kernel
+                step, both through the Pallas engine, side by side
+  * ``dist``  — k>1 split-fused step (pre-exchange kernel, collective,
+                post-exchange kernel) vs. the unfused SPMD step, run in a
+                subprocess with ``k`` (fake, off-TPU) devices
+  * ``all``   — fused + dist (+ ref), the full fused-vs-unfused ×
+                k=1-vs-distributed grid
+
+Every invocation also records its results into
+``BENCH_spike_throughput.json`` (``--json`` to relocate), merging with any
+modes already present, so the perf trajectory accumulates across runs:
+per-mode us/step, synaptic events/s, engine and backend, plus
+fused-vs-unfused speedups.
 
 On CPU the Pallas engines run in interpret mode, so the fused-vs-unfused
 numbers are an emulation proxy; the kernels compile natively on TPU where
@@ -13,14 +24,48 @@ the real comparison)."""
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
 
 from repro.snn import Session, SimConfig, microcircuit, to_dcsr
 
+DEFAULT_JSON = "BENCH_spike_throughput.json"
+
+
+def _time_session(ses, steps, n, m):
+    """Warmup + compile with the SAME chunk length (the step program is
+    jitted per chunk size), then time one chunked run."""
+    ses.run(steps, chunk_size=steps)
+    jax.block_until_ready(ses.state["vtx_state"])
+    t0 = time.perf_counter()
+    res = ses.run(steps, chunk_size=steps)
+    jax.block_until_ready(ses.state["vtx_state"])
+    dt = time.perf_counter() - t0
+    rate = float(res.spike_count.mean()) / n
+    info = ses.describe()
+    out = dict(
+        n=n, m=m,
+        us_per_step=dt / steps * 1e6,
+        syn_events_per_s=m * rate * steps / dt,
+        mean_activity=rate,
+        engine=info["step_engine"],
+        backend=info["backend"],
+        k=info["k"],
+    )
+    if "ell_fill" in info:
+        out["fill"] = info["ell_fill"]
+    if "exchange" in info:
+        out["exchange"] = info["exchange"]
+    return out
+
 
 def run(scale=0.02, steps=200, backend="ref", fused=None):
+    """k=1 measurement in-process."""
     net = microcircuit(scale=scale, seed=0)
     d = to_dcsr(net, k=1)
     # compiled Pallas needs 128-lane-aligned panels; interpret/ref runs use
@@ -29,38 +74,103 @@ def run(scale=0.02, steps=200, backend="ref", fused=None):
     ses = Session(
         d, SimConfig(align_k=align_k, backend=backend, fused=fused)
     )
-    # warmup + compile with the SAME chunk length: the step program is
-    # jitted per chunk size, so a different warmup length would leave the
-    # timed call to recompile inside the measured window
-    ses.run(steps, chunk_size=steps)
-    jax.block_until_ready(ses.state["vtx_state"])
-    t0 = time.perf_counter()
-    res = ses.run(steps, chunk_size=steps)
-    jax.block_until_ready(ses.state["vtx_state"])
-    dt = time.perf_counter() - t0
-    rate = float(res.spike_count.mean()) / d.n
-    info = ses.describe()
-    return dict(
-        n=d.n, m=d.m,
-        us_per_step=dt / steps * 1e6,
-        syn_events_per_s=d.m * rate * steps / dt,
-        mean_activity=rate,
-        fill=info["ell_fill"],
-        engine=info["step_engine"],
+    return _time_session(ses, steps, d.n, d.m)
+
+
+def run_dist(scale, steps, k, backend, fused, exchange="auto"):
+    """k>1 measurement in THIS process (caller provides >= k devices)."""
+    from repro.core import block_partition
+
+    net = microcircuit(scale=scale, seed=0)
+    d = to_dcsr(net, assignment=block_partition(net.n, k), uniform=True)
+    align_k = 128 if backend == "pallas" else 32
+    ses = Session(d, SimConfig(
+        align_k=align_k, backend=backend, fused=fused, exchange=exchange,
+    ))
+    assert ses.describe()["engine"] == "spmd"
+    return _time_session(ses, steps, d.n, d.m)
+
+
+def _dist_worker_main(argv):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, required=True)
+    ap.add_argument("--steps", type=int, required=True)
+    ap.add_argument("--k", type=int, required=True)
+    ap.add_argument("--backend", required=True)
+    ap.add_argument("--fused", type=int, required=True)
+    args = ap.parse_args(argv)
+    r = run_dist(
+        args.scale, args.steps, args.k, args.backend, bool(args.fused)
     )
+    print("RESULT " + json.dumps(r))
 
 
-def main_ref(scale, steps):
+def _run_dist_subprocess(scale, steps, k, backend, fused):
+    """Run one distributed measurement in a subprocess with k fake host
+    devices (off-TPU the host platform must be forced BEFORE jax
+    initializes, so the parent process stays clean)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={k}"
+    ).strip()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--_dist-worker",
+         "--scale", str(scale), "--steps", str(steps), "--k", str(k),
+         "--backend", backend, "--fused", str(int(fused))],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"dist benchmark worker failed:\n{out.stdout}\n{out.stderr[-2000:]}"
+        )
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    return json.loads(line[-1][len("RESULT "):])
+
+
+def _record(json_path, entries):
+    """Merge per-mode entries into the JSON report (accumulates across
+    invocations; fused/unfused pairs gain a speedup entry)."""
+    data = {}
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    modes = data.setdefault("modes", {})
+    modes.update(entries)
+    speedups = data.setdefault("speedup_unfused_over_fused", {})
+    for name in list(modes):
+        if name.endswith("_fused"):
+            pair = name[: -len("_fused")] + "_unfused"
+            if pair in modes:
+                speedups[name[: -len("_fused")]] = round(
+                    modes[pair]["us_per_step"]
+                    / max(modes[name]["us_per_step"], 1e-9), 3
+                )
+    data["backend_default"] = jax.default_backend()
+    with open(json_path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    return json_path
+
+
+def main_ref(scale, steps, json_path):
     r = run(scale=scale, steps=steps)
     print(
         f"spike_throughput,{r['us_per_step']:.0f},"
         f"m={r['m']};events/s={r['syn_events_per_s']:.2e};"
         f"ell_fill={r['fill']:.2f}"
     )
+    _record(json_path, {"ref": r})
 
 
-def main_fused(scale, steps):
-    """Fused vs unfused step latency through the Pallas engine."""
+def main_fused(scale, steps, json_path):
+    """k=1: fused single-kernel vs unfused step latency (Pallas engine)."""
     from repro.kernels.dispatch import platform_default
 
     backend = platform_default()
@@ -74,34 +184,72 @@ def main_fused(scale, steps):
         f"speedup={speedup:.2f}x;backend={backend};"
         f"n={fused['n']};m={fused['m']}"
     )
+    _record(json_path, {"k1_fused": fused, "k1_unfused": unfused})
+
+
+def main_dist(scale, steps, k, json_path):
+    """k>1: split-fused (pre kernel, collective, post kernel) vs unfused
+    SPMD step latency."""
+    from repro.kernels.dispatch import platform_default
+
+    backend = platform_default()
+    fused = _run_dist_subprocess(scale, steps, k, backend, True)
+    unfused = _run_dist_subprocess(scale, steps, k, backend, False)
+    assert fused["engine"] == "fused_split", fused["engine"]
+    assert unfused["engine"] == "unfused", unfused["engine"]
+    speedup = unfused["us_per_step"] / max(fused["us_per_step"], 1e-9)
+    print(
+        f"spike_throughput_dist_k{k},{fused['us_per_step']:.0f},"
+        f"unfused_us={unfused['us_per_step']:.0f};"
+        f"speedup={speedup:.2f}x;backend={backend};"
+        f"exchange={fused.get('exchange')};n={fused['n']};m={fused['m']}"
+    )
+    _record(json_path, {
+        f"dist_k{k}_fused": fused, f"dist_k{k}_unfused": unfused,
+    })
 
 
 def main(argv=None, quick=None):
     if quick is not None and argv is None:  # benchmarks/run.py entry
         argv = ["--quick"] if quick else []
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "--_dist-worker":
+        _dist_worker_main(argv[1:])
+        return
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--mode", choices=("ref", "fused"), default="ref")
+    ap.add_argument("--mode", choices=("ref", "fused", "dist", "all"),
+                    default="ref")
     ap.add_argument("--scale", type=float, default=None,
                     help="microcircuit scale (default per mode)")
     ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--k", type=int, default=None,
+                    help="partitions for --mode dist/all")
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help="perf-report path (merged across invocations)")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args(argv)
-    if args.mode == "fused":
-        scale = args.scale if args.scale is not None else (
-            0.005 if args.quick else 0.01
-        )
-        steps = args.steps if args.steps is not None else (
-            30 if args.quick else 100
-        )
-        main_fused(scale, steps)
-    else:
+    # fused and dist share one workload so the k=1 vs distributed columns
+    # of the JSON grid measure the same net
+    pallas_scale = args.scale if args.scale is not None else (
+        0.005 if args.quick else 0.01
+    )
+    pallas_steps = args.steps if args.steps is not None else (
+        30 if args.quick else 100
+    )
+    if args.mode in ("fused", "all"):
+        main_fused(pallas_scale, pallas_steps, args.json)
+    if args.mode in ("dist", "all"):
+        k = args.k if args.k is not None else (2 if args.quick else 4)
+        main_dist(pallas_scale, pallas_steps, k, args.json)
+    if args.mode in ("ref", "all"):
         scale = args.scale if args.scale is not None else (
             0.01 if args.quick else 0.03
         )
         steps = args.steps if args.steps is not None else (
             100 if args.quick else 300
         )
-        main_ref(scale, steps)
+        main_ref(scale, steps, args.json)
 
 
 if __name__ == "__main__":

@@ -16,11 +16,27 @@ environment variable > platform default (``pallas`` on TPU, otherwise
 ``ref`` off-TPU, where XLA fusion of the oracles is already optimal).
 
 Separately from the *kernel* backend, ``select_step_engine`` decides the
-*step engine*: the fused single-``pallas_call`` step (kernels/fused_step.py)
-vs the unfused three-kernel sequence.  Fusion is only sound for a
-homogeneous non-plastic LIF partition with identity exchange and identity
-ELL rows; the selector encodes those rules so both simulators and the
-benchmarks share one policy.
+*step engine*:
+
+  * ``fused``       — single ``pallas_call`` for the whole local step
+                      (kernels/fused_step.py); only when the exchange is an
+                      identity (k = 1 dense), so the spike vector never
+                      leaves VMEM between emission and propagation;
+  * ``fused_split`` — the same fusion *split at the exchange boundary*:
+                      a fused pre-exchange kernel (LIF advance + spike
+                      emission), the ``parts``-axis collective, then a fused
+                      post-exchange kernel (ring-buffer rotate + every
+                      delay-bucket gather in one pass).  This is the
+                      distributed hot path;
+  * ``unfused``     — the three-kernel sequence (one launch per op and per
+                      delay bucket); the fallback for plastic /
+                      heterogeneous / heavy-row-split partitions.
+
+Fusion (either variant) is only sound for a homogeneous non-plastic LIF
+partition with identity ELL rows; the *identity of the exchange* is no
+longer a fusion gate — it only decides the *placement* of the split.  The
+selector encodes those rules so both simulators and the benchmarks share
+one policy.
 """
 from __future__ import annotations
 
@@ -113,14 +129,22 @@ def lookup(op: str, backend: Optional[str] = None) -> Callable:
 # -- step-engine selection (fused vs unfused) -----------------------------
 
 
+STEP_ENGINES = ("fused", "fused_split", "unfused")
+
+
 @dataclasses.dataclass(frozen=True)
 class StepEngineChoice:
-    engine: str  # 'fused' | 'unfused'
+    engine: str  # 'fused' | 'fused_split' | 'unfused'
     reason: str
 
     @property
     def fused(self) -> bool:
-        return self.engine == "fused"
+        """True for either fused variant (single-kernel or split)."""
+        return self.engine in ("fused", "fused_split")
+
+    @property
+    def split(self) -> bool:
+        return self.engine == "fused_split"
 
 
 # the fused kernel keeps six full-length f32 state vectors (v/refrac/i_tot
@@ -129,6 +153,9 @@ class StepEngineChoice:
 # engine, which tiles state into (rows, 128) panels
 _FUSED_VECTOR_VMEM_BUDGET = 6 * 1024 * 1024
 FUSED_MAX_N_P = _FUSED_VECTOR_VMEM_BUDGET // (6 * 4)
+# the split post-exchange kernel pins the *global* activity vector
+# (n_global f32) whole in VMEM, like spike_gather; larger nets fall back
+FUSED_SPLIT_MAX_N_GLOBAL = _FUSED_VECTOR_VMEM_BUDGET // 4
 
 
 def _fusion_blocker(
@@ -138,6 +165,7 @@ def _fusion_blocker(
     identity_rows: bool,
     n_delay_buckets: int,
     n_p: int,
+    n_global: Optional[int],
 ) -> Optional[str]:
     if tuple(models_present) != ("lif",):
         return (
@@ -146,11 +174,6 @@ def _fusion_blocker(
         )
     if any_plastic:
         return "plastic synapses need the separate STDP pass"
-    if not identity_exchange:
-        return (
-            "distributed exchange: the collective sits between spike "
-            "emission and propagation"
-        )
     if not identity_rows:
         return "heavy-row-split ELL needs the segment-sum re-reduction"
     if n_delay_buckets < 1:
@@ -159,6 +182,16 @@ def _fusion_blocker(
         return (
             f"partition too large ({n_p} > {FUSED_MAX_N_P} neurons) for "
             "VMEM-resident fused state vectors"
+        )
+    if (
+        not identity_exchange
+        and n_global is not None
+        and n_global > FUSED_SPLIT_MAX_N_GLOBAL
+    ):
+        return (
+            f"network too large ({n_global} > {FUSED_SPLIT_MAX_N_GLOBAL} "
+            "neurons) for the VMEM-resident exchanged activity vector of "
+            "the split post-exchange kernel"
         )
     return None
 
@@ -172,9 +205,16 @@ def select_step_engine(
     identity_rows: bool,
     n_delay_buckets: int,
     n_p: int,
+    n_global: Optional[int] = None,
     fused: Optional[bool] = None,
 ) -> StepEngineChoice:
-    """Pick 'fused' or 'unfused' for a partition's step.
+    """Pick 'fused', 'fused_split' or 'unfused' for a partition's step.
+
+    ``identity_exchange`` is a *placement* input, not an eligibility gate:
+    identity exchanges (k = 1 dense) take the single-kernel ``fused``
+    engine, every other exchange (distributed dense/index collectives, a
+    k = 1 capacity-truncating index exchange) takes ``fused_split`` — the
+    same fusion split at the exchange so the collective stays in place.
 
     ``fused=None`` (auto) fuses whenever the partition is eligible and the
     backend runs Pallas kernels; ``fused=True`` demands fusion (raises if
@@ -184,16 +224,23 @@ def select_step_engine(
         return StepEngineChoice("unfused", "disabled by config")
     blocker = _fusion_blocker(
         models_present, any_plastic, identity_exchange, identity_rows,
-        n_delay_buckets, n_p,
+        n_delay_buckets, n_p, n_global,
     )
     if blocker is not None:
         if fused is True:
             raise ValueError(f"fused step engine requested but: {blocker}")
         return StepEngineChoice("unfused", blocker)
+    target = "fused" if identity_exchange else "fused_split"
+    placement = (
+        "identity exchange" if identity_exchange
+        else "split at the exchange collective"
+    )
     if fused is True:
-        return StepEngineChoice("fused", "forced by config")
+        return StepEngineChoice(target, f"forced by config ({placement})")
     if backend in ("pallas", "pallas_interpret"):
-        return StepEngineChoice("fused", f"auto: {backend} backend")
+        return StepEngineChoice(
+            target, f"auto: {backend} backend ({placement})"
+        )
     return StepEngineChoice(
         "unfused",
         "auto: 'ref' backend composes pure-jnp oracles (XLA-fused)",

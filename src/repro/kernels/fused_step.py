@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused per-partition SNN step.
+"""Pallas TPU kernels: fused per-partition SNN step (single and split).
 
 One ``pallas_call`` performs the whole local step for a non-plastic LIF
 partition: membrane state advance + spike emission + blocked-ELL
@@ -9,6 +9,16 @@ exactly once, and the freshly emitted spike vector is consumed as the gather
 activity directly out of VMEM — it never hits HBM between emission and
 propagation.  Pronold et al. (2021) measure exactly this loop as the
 cache/memory-bound core of neuromorphic-scale simulation.
+
+For distributed partitions the spike exchange sits between emission and
+propagation, so the same fusion is **split at the exchange boundary** into
+two kernels (``fused_pre_exchange_pallas`` / ``fused_post_exchange_pallas``
+below): pre-exchange fuses the LIF advance + spike emission (+ optional
+trace decay) into one elementwise pass — one HBM read/write per state
+array — and post-exchange fuses the ring-buffer rotate with *every* delay
+bucket's ELL gather-accumulate in one pass, so the exchanged activity
+vector is read from HBM once instead of once per bucket and the per-bucket
+kernel launches collapse into one.
 
 Grid/Block layout:
   * 1D grid over panel row blocks (``R // block_r`` steps);
@@ -39,6 +49,7 @@ from jax.experimental import pallas as pl
 from ..core.ell import _align_up
 from . import ref
 from .blocks import pick_block
+from .lif_step import lif_step_pallas
 
 _LANES = 128
 # panel bytes resident per grid step (cols + weights, all buckets); VMEM is
@@ -187,3 +198,227 @@ def fused_lif_step_pallas(
         s2[:n_p],
         [c[:, 0] for c in curs],  # f32, like the oracle
     )
+
+
+# -- split engine: pre-exchange kernel ------------------------------------
+
+
+def _make_pre_kernel(params: dict, taus):
+    def kernel(v_ref, ref_ref, i_ref, tp_ref, tm_ref,
+               v_out, ref_out, s_out, tp_out, tm_out):
+        # ONE definition of the LIF math (the elementwise ref oracle traces
+        # inside the kernel), shared with lif_step and the single-kernel
+        # fused step
+        v_new, ref_new, spike = ref.lif_step_ref(
+            v_ref[...], ref_ref[...], i_ref[...], **params
+        )
+        v_out[...] = v_new
+        ref_out[...] = ref_new
+        s_out[...] = spike
+        dt = params["dt"]
+        tp_out[...] = ref.trace_decay_ref(
+            tp_ref[...], spike, dt=dt, tau=taus[0]
+        )
+        tm_out[...] = ref.trace_decay_ref(
+            tm_ref[...], spike, dt=dt, tau=taus[1]
+        )
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_rows", "interpret", "params_tuple", "taus"),
+)
+def _pre_call(*arrays, block_rows, interpret, params_tuple, taus):
+    params = dict(params_tuple)
+    rows, lanes = arrays[0].shape
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, lanes), lambda r: (r, 0))
+    return pl.pallas_call(
+        _make_pre_kernel(params, taus),
+        grid=grid,
+        in_specs=[spec] * len(arrays),
+        out_specs=[spec] * 5,
+        out_shape=[
+            jax.ShapeDtypeStruct(arrays[0].shape, arrays[0].dtype)
+        ] * 5,
+        interpret=interpret,
+    )(*arrays)
+
+
+def fused_pre_exchange_pallas(
+    v: jnp.ndarray,  # (n_p,) membrane potential
+    refrac: jnp.ndarray,  # (n_p,) refractory counters
+    i_tot: jnp.ndarray,  # (n_p,) total input current (syn + bias + noise)
+    tr_plus: jnp.ndarray = None,  # (n_p,) optional pre-synaptic e-trace
+    tr_minus: jnp.ndarray = None,  # (n_p,) optional post-synaptic e-trace
+    *,
+    params: dict,
+    taus=None,  # (tau_plus, tau_minus), required with traces
+    block_rows: int = 8,
+    interpret: bool = False,
+):
+    """Fused pre-exchange half of the split step: LIF advance + spike
+    emission (+ trace decay when traces are passed) in ONE elementwise
+    VPU pass — each state array is read and written exactly once before
+    the exchange collective.  Returns ``(v', refrac', spikes)`` or
+    ``(v', refrac', spikes, tr_plus', tr_minus')``.
+
+    Without traces the kernel IS the fused LIF step, so that case
+    delegates to ``lif_step_pallas`` (one copy of the panel plumbing);
+    the trace-carrying variant below is the hook for fusing the STDP
+    pass into the split engine later.
+    """
+    with_traces = tr_plus is not None
+    assert (tr_minus is None) == (tr_plus is None)
+    if not with_traces:
+        return lif_step_pallas(
+            v, refrac, i_tot, params=params, block_rows=block_rows,
+            interpret=interpret,
+        )
+    assert taus is not None, "traces need taus"
+    (R,) = v.shape
+    rows = -(-R // _LANES)
+    rows_pad = -(-rows // block_rows) * block_rows
+    pad = rows_pad * _LANES - R
+
+    def to2d(x):
+        return jnp.pad(x, (0, pad)).reshape(rows_pad, _LANES)
+
+    outs = _pre_call(
+        to2d(v), to2d(refrac), to2d(i_tot), to2d(tr_plus), to2d(tr_minus),
+        block_rows=block_rows, interpret=interpret,
+        params_tuple=tuple(sorted(params.items())),
+        taus=tuple(taus),
+    )
+    return tuple(o.reshape(-1)[:R] for o in outs)
+
+
+# -- split engine: post-exchange kernel -----------------------------------
+
+
+def _make_post_kernel(nd: int):
+    def kernel(*refs):
+        act_ref, ring_ref, clear_ref, oh_ref = refs[:4]
+        cols_refs = refs[4: 4 + nd]
+        w_refs = refs[4 + nd: 4 + 2 * nd]
+        ring_out = refs[4 + 2 * nd]
+        act = act_ref[...]  # (n,) f32, VMEM-resident, revisited
+        # rotate: the just-delivered slot is cleared, every other slot
+        # carries over — then each bucket's gathered current lands on its
+        # (t + d) % D row via the precomputed one-hot (no dynamic indexing)
+        acc = ring_ref[...] * clear_ref[...][:, None]
+        for i in range(nd):
+            cols = cols_refs[i][...]  # (block_r, K_d)
+            w = w_refs[i][...]
+            vals = jnp.take(act, cols, axis=0)
+            cur = jnp.sum(w.astype(jnp.float32) * vals, axis=1)
+            acc += oh_ref[i, :][:, None] * cur[None, :]
+        ring_out[...] = acc
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nd", "block_r", "interpret")
+)
+def _post_call(act, ring, clear, onehot, *panels, nd, block_r, interpret):
+    cols = panels[:nd]
+    weights = panels[nd:]
+    n_act = act.shape[0]
+    D_pad, R = ring.shape
+    grid = (R // block_r,)
+    nd_, D = onehot.shape
+    outs = pl.pallas_call(
+        _make_post_kernel(nd),
+        grid=grid,
+        in_specs=(
+            [pl.BlockSpec((n_act,), lambda r: (0,))]  # whole, revisited
+            + [pl.BlockSpec((D_pad, block_r), lambda r: (0, r))]
+            + [pl.BlockSpec((D_pad,), lambda r: (0,))]
+            + [pl.BlockSpec((nd_, D), lambda r: (0, 0))]
+            + [
+                pl.BlockSpec((block_r, c.shape[1]), lambda r: (r, 0))
+                for c in cols
+            ]
+            + [
+                pl.BlockSpec((block_r, w.shape[1]), lambda r: (r, 0))
+                for w in weights
+            ]
+        ),
+        out_specs=pl.BlockSpec((D_pad, block_r), lambda r: (0, r)),
+        out_shape=jax.ShapeDtypeStruct((D_pad, R), jnp.float32),
+        interpret=interpret,
+    )(act, ring, clear, onehot, *cols, *weights)
+    return outs
+
+
+def fused_post_exchange_pallas(
+    act: jnp.ndarray,  # (n,) exchanged global activity
+    ring: jnp.ndarray,  # (D, n_p) ring buffer, slot NOT yet cleared
+    clear_mask: jnp.ndarray,  # (D,) 0 at the delivered slot, 1 elsewhere
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    cols: Sequence[jnp.ndarray],  # per delay bucket (R, K_d) int32 global
+    weights: Sequence[jnp.ndarray],  # per delay bucket (R, K_d)
+    *,
+    block_r: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:  # (D, n_p) new ring
+    """Fused post-exchange half of the split step: ring-buffer rotate +
+    ALL delay-bucket ELL gather-accumulates in ONE pass.
+
+    The exchanged activity vector is pinned whole in VMEM and read from
+    HBM once (vs once per bucket unfused); the (R, K_d) col/weight panels
+    of every bucket stream through VMEM per row-block grid step; the ring
+    is read and written exactly once, column-blocked alongside the panel
+    rows.  Slot arithmetic ((t + d) % D and the clear of the delivered
+    slot) is precomputed by the caller into ``clear_mask``/``write_onehot``
+    so the kernel needs no dynamic indexing — the write rows are data, not
+    control flow.
+
+    Identity-row buckets only (row r is neuron r; the dispatcher enforces
+    this); padded panel rows carry zero weights, so their currents vanish.
+    """
+    nd = len(cols)
+    assert nd >= 1, "post-exchange step needs at least one delay bucket"
+    assert len(weights) == nd
+    assert write_onehot.shape[0] == nd, (write_onehot.shape, nd)
+    D, n_p = ring.shape
+    R = cols[0].shape[0]
+    assert all(c.shape[0] == R for c in cols), (
+        "post-exchange step needs a common R across delay buckets: "
+        f"{[c.shape for c in cols]}"
+    )
+    assert R >= n_p, (R, n_p)
+
+    # lane-pad the activity vector (gathered ids stay < n <= padded len)
+    n_act = _align_up(max(act.shape[0], _LANES), _LANES)
+    act_p = jnp.pad(
+        act.astype(jnp.float32), (0, n_act - act.shape[0])
+    )
+    # pad ring columns up to R (panel rows) so ring blocks ride the same
+    # row-block grid as the panels, and ring rows up to the f32 sublane
+    # tile; padded rows/cols are sliced away (their mask rows are zero)
+    D_pad = _align_up(max(D, 8), 8)
+    ring_p = jnp.pad(ring, ((0, D_pad - D), (0, R - n_p)))
+    clear_p = jnp.pad(clear_mask.astype(jnp.float32), (0, D_pad - D))
+    oh_p = jnp.pad(
+        write_onehot.astype(jnp.float32), ((0, 0), (0, D_pad - D))
+    )
+
+    # VMEM budget: per grid step the resident panels are (block_r, K_d)
+    # cols+weights for every bucket plus the (D_pad, block_r) ring in/out
+    # blocks; the whole-vector activity is accounted like spike_gather's
+    bytes_per_row = sum(
+        c.shape[1] * (c.dtype.itemsize + w.dtype.itemsize)
+        for c, w in zip(cols, weights)
+    ) + 2 * D_pad * 4
+    max_rows = max(_PANEL_VMEM_BUDGET // max(bytes_per_row, 1), 1)
+    block_r = pick_block(R, min(block_r, max_rows), interpret=interpret,
+                         what="fused_post_exchange rows")
+    new_ring = _post_call(
+        act_p, ring_p, clear_p, oh_p, *cols, *weights,
+        nd=nd, block_r=block_r, interpret=interpret,
+    )
+    return new_ring[:D, :n_p]

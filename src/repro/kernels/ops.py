@@ -16,7 +16,11 @@ from typing import Callable, Optional
 
 from . import ref
 from .dispatch import lookup, register
-from .fused_step import fused_lif_step_pallas
+from .fused_step import (
+    fused_lif_step_pallas,
+    fused_post_exchange_pallas,
+    fused_pre_exchange_pallas,
+)
 from .lif_step import lif_step_pallas
 from .spike_gather import spike_gather_pallas
 from .stdp_update import stdp_update_pallas
@@ -129,4 +133,56 @@ def fused_step(
     """
     return lookup("fused_step", backend)(
         v, refrac, i_tot, tuple(cols), tuple(weights), params=params, **kw
+    )
+
+
+# -- split engine halves (fused step for non-identity exchanges) ----------
+
+@register("fused_pre_exchange", "ref")
+def _fused_pre_exchange_ref(
+    v, refrac, i_tot, tr_plus=None, tr_minus=None, *, params, taus=None,
+    **kw
+):
+    return ref.fused_pre_exchange_ref(
+        v, refrac, i_tot, tr_plus, tr_minus, params=params, taus=taus
+    )
+
+
+_register_pallas("fused_pre_exchange")(fused_pre_exchange_pallas)
+
+
+def fused_pre_exchange(
+    v, refrac, i_tot, tr_plus=None, tr_minus=None, *, params, taus=None,
+    backend: Optional[str] = None, **kw
+):
+    """Pre-exchange half of the split step: LIF advance + spike emission
+    (+ trace decay when traces are passed).  Returns
+    ``(v', refrac', spikes[, tr_plus', tr_minus'])``."""
+    return lookup("fused_pre_exchange", backend)(
+        v, refrac, i_tot, tr_plus, tr_minus, params=params, taus=taus, **kw
+    )
+
+
+@register("fused_post_exchange", "ref")
+def _fused_post_exchange_ref(
+    act, ring, clear_mask, write_onehot, cols, weights, **kw
+):
+    return ref.fused_post_exchange_ref(
+        act, ring, clear_mask, write_onehot, cols, weights
+    )
+
+
+_register_pallas("fused_post_exchange")(fused_post_exchange_pallas)
+
+
+def fused_post_exchange(
+    act, ring, clear_mask, write_onehot, cols, weights, *,
+    backend: Optional[str] = None, **kw
+):
+    """Post-exchange half of the split step: ring-buffer rotate + every
+    delay bucket's ELL gather-accumulate in one pass.  Returns the new
+    ``(D, n_p)`` ring."""
+    return lookup("fused_post_exchange", backend)(
+        act, ring, clear_mask, write_onehot, tuple(cols), tuple(weights),
+        **kw
     )

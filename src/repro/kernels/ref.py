@@ -125,6 +125,55 @@ def trace_decay_ref(trace, spike, *, dt, tau):
     return trace * jnp.exp(-dt / tau).astype(trace.dtype) + spike
 
 
+def fused_pre_exchange_ref(
+    v: jnp.ndarray,  # (n_p,)
+    refrac: jnp.ndarray,  # (n_p,)
+    i_tot: jnp.ndarray,  # (n_p,) total input current (syn + bias + noise)
+    tr_plus: jnp.ndarray = None,  # (n_p,) pre-synaptic e-trace (optional)
+    tr_minus: jnp.ndarray = None,  # (n_p,) post-synaptic e-trace (optional)
+    *,
+    params: Dict[str, float],
+    taus: Tuple[float, float] = None,  # (tau_plus, tau_minus) with traces
+):
+    """Oracle for the fused pre-exchange kernel: everything that happens
+    *before* the spike exchange — LIF state advance + spike emission, plus
+    the trace decay+bump when traces are passed (the hook for fusing the
+    STDP pass later).  Returns ``(v', refrac', spikes)`` or
+    ``(v', refrac', spikes, tr_plus', tr_minus')``.
+    """
+    v2, r2, s = lif_step_ref(v, refrac, i_tot, **params)
+    if tr_plus is None:
+        return v2, r2, s
+    dt = params["dt"]
+    return (
+        v2, r2, s,
+        trace_decay_ref(tr_plus, s, dt=dt, tau=taus[0]),
+        trace_decay_ref(tr_minus, s, dt=dt, tau=taus[1]),
+    )
+
+
+def fused_post_exchange_ref(
+    act: jnp.ndarray,  # (n,) exchanged global activity
+    ring: jnp.ndarray,  # (D, n_p) future-current ring buffer (uncleared)
+    clear_mask: jnp.ndarray,  # (D,) 0 at the just-delivered slot, 1 else
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    cols,  # per delay bucket (R, K_d) int32, global ids
+    weights,  # per delay bucket (R, K_d)
+) -> jnp.ndarray:
+    """Oracle for the fused post-exchange kernel: everything *after* the
+    spike exchange — ring-buffer rotate (clear the delivered slot) + every
+    delay bucket's ELL gather-accumulate in one pass over the activity
+    vector.  Slot arithmetic is precomputed by the caller into masks so the
+    kernel stays free of dynamic indexing.  Returns the new ring.
+    """
+    n_p = ring.shape[1]
+    new_ring = ring * clear_mask[:, None]
+    for i, (c, w) in enumerate(zip(cols, weights)):
+        cur = spike_gather_ref(act, c, w)[:n_p]
+        new_ring = new_ring + write_onehot[i][:, None] * cur[None, :]
+    return new_ring
+
+
 def fused_step_ref(
     v: jnp.ndarray,  # (n_p,)
     refrac: jnp.ndarray,  # (n_p,)

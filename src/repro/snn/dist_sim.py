@@ -5,8 +5,18 @@ partition p's rows (vertex state, incoming edges, ring buffer, history), the
 per-step spike exchange is a single ``all_gather`` over the ``parts`` mesh
 axis (dense activity vector — paper-faithful bulk-synchronous), or the
 beyond-paper **compressed index exchange** (fixed-capacity spike-id lists,
-~8-30x fewer collective bytes at biological activity levels; overflow is
-counted and surfaced, never silent).
+~8-30x fewer collective bytes at biological activity levels; spikes dropped
+past the capacity are counted per step in ``outs['overflow']`` and surfaced
+through ``Session.run`` — never silent).  ``SimConfig(exchange='auto')``
+resolves to the index exchange for non-plastic nets (collective bytes stay
+at spike-count scale — the fused-split default) and dense otherwise.
+
+Eligible partitions (homogeneous non-plastic LIF, identity ELL rows) run
+the **fused split** step engine: a fused pre-exchange kernel (LIF advance +
+spike emission, one HBM read/write per state array), the collective, then a
+fused post-exchange kernel (ring-buffer rotate + every delay bucket's ELL
+gather-accumulate in one pass over the exchanged activity vector).  Others
+fall back to the unfused three-kernel sequence.
 
 Requires uniform partitions (``to_dcsr(..., uniform=True)``): SPMD needs
 equal shard shapes, so deficient partitions are padded with inert dummy
@@ -18,7 +28,6 @@ asserted bit-for-bit in tests.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -151,25 +160,45 @@ class DistSimulator:
             dict(net.registry.spec("syn_stdp").params)
             if s.any_plastic else None
         )
-        if cfg.exchange == "index":
+        # 'auto' resolves here: compressed index lists whenever sound (the
+        # fused-split default — collective bytes scale with spike counts,
+        # not partition width), dense when plastic traces must travel or
+        # k == 1 makes the all-gather an identity
+        self.exchange = cfg.exchange
+        if self.exchange == "auto":
+            self.exchange = (
+                "index" if (k > 1 and not s.any_plastic) else "dense"
+            )
+        if self.exchange == "index":
             assert not s.any_plastic, (
                 "compressed index exchange requires dense traces; "
                 "use exchange='dense' for plastic nets"
             )
+        # effective per-partition id capacity of the index exchange (the
+        # single source of the formula; Session's overflow warning reads
+        # it back rather than re-deriving it)
+        self.index_cap = (
+            max(int(cfg.index_cap_frac * s.n_p), 8)
+            if self.exchange == "index" else 0
+        )
         self.n_global = k * s.n_p
         self.models_present = _models_present(net)
         self._base_key = jax.random.PRNGKey(cfg.seed)
         # engine selection is deterministic from construction-time facts;
         # computing it once here surfaces SimConfig(fused=True) eligibility
-        # errors immediately, and _build_step reuses the same choice
+        # errors immediately, and _build_step reuses the same choice.
+        # identity_exchange is a *placement* input: k == 1 dense is a true
+        # identity (single fused kernel); anything else splits the fused
+        # step at the collective
         self.engine_choice = select_step_engine(
             backend=self.backend,
             models_present=self.models_present,
             any_plastic=s.any_plastic and self.stdp_params is not None,
-            identity_exchange=(k == 1 and cfg.exchange == "dense"),
+            identity_exchange=(k == 1 and self.exchange == "dense"),
             identity_rows=s.identity_rows,
             n_delay_buckets=len(s.delays),
             n_p=s.n_p,
+            n_global=k * s.n_p,
             fused=cfg.fused,
         )
 
@@ -203,7 +232,7 @@ class DistSimulator:
     def _exchange(self):
         s = self.stacked
         n_p, n = s.n_p, self.n_global
-        if self.cfg.exchange == "dense":
+        if self.exchange == "dense":
             def ex(spikes, tr_plus):
                 act = jax.lax.all_gather(
                     spikes, "parts", tiled=True
@@ -212,9 +241,9 @@ class DistSimulator:
                     pre = jax.lax.all_gather(tr_plus, "parts", tiled=True)
                 else:
                     pre = act
-                return act, pre
+                return act, pre, jnp.zeros((), jnp.int32)
             return ex, 0
-        cap = max(int(self.cfg.index_cap_frac * n_p), 8)
+        cap = self.index_cap
 
         def ex(spikes, tr_plus):
             idx = jnp.nonzero(spikes, size=cap, fill_value=-1)[0]
@@ -226,7 +255,13 @@ class DistSimulator:
             act = jnp.zeros((n,), jnp.float32).at[all_idx].set(
                 1.0, mode="drop"
             )
-            return act, act
+            # local spikes past the capacity never made it into gidx —
+            # count them so the lossy exchange is surfaced, not silent
+            overflow = (
+                jnp.sum(spikes > 0).astype(jnp.int32)
+                - jnp.sum(idx >= 0).astype(jnp.int32)
+            )
+            return act, act, overflow
         return ex, cap
 
     def _build_step(self, dev_template, noise_ids):
@@ -255,9 +290,6 @@ class DistSimulator:
         """Dry-run path: lower+compile the distributed step without
         touching device memory (ShapeDtypeStruct arguments) — the SNN
         analogue of launch/dryrun.py's transformer cells."""
-        import jax.numpy as jnp
-
-        s = self.stacked
         sds = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
         state_sds = jax.eval_shape(self.init_state)
         fn, args = self._build_run(steps)
@@ -280,7 +312,9 @@ class DistSimulator:
         s = self.stacked
         specs = self._specs()
         out_carry_specs = specs
-        out_specs = dict(spike_count=P(None, "parts"))
+        out_specs = dict(
+            spike_count=P(None, "parts"), overflow=P(None, "parts")
+        )
         if self.cfg.record_raster:
             out_specs["raster"] = P(None, "parts")
         if self.cfg.record_v:
@@ -326,6 +360,7 @@ class DistSimulator:
             )
             new_outs = dict(
                 spike_count=outs["spike_count"][:, None],
+                overflow=outs["overflow"][:, None],
             )
             if self.cfg.record_raster:
                 new_outs["raster"] = outs["raster"][:, None]

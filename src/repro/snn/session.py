@@ -48,7 +48,13 @@ is a pure function of ``(seed, t, permanent neuron id)`` and runtime arrays
 are row-aligned, a snapshot taken at one k restores onto any other k
 (routed through :mod:`repro.snn.reshard`) and continues **bit-identically**
 — the paper's "repartitioning ... to optimally fit different backends",
-asserted end-to-end in ``tests/test_session.py``.  ``restore`` also accepts
+asserted end-to-end in ``tests/test_session.py``.  One caveat: the
+compressed index exchange (the ``exchange='auto'`` default for non-plastic
+k > 1) has a per-partition capacity, which is k-dependent — a *lossy* run
+(``RunResult.overflow`` nonzero, always accompanied by a ``UserWarning``)
+is therefore only bit-reproducible at the same k.  Lossless runs (dense,
+or index with zero overflow — the designed operating point) keep the
+cross-k guarantee.  ``restore`` also accepts
 a root of ``step_XXXXXXXX`` snapshots (as written by
 ``session.run(checkpoint_every=...)``) and walks newest-first past
 corrupt/truncated steps.
@@ -72,6 +78,7 @@ import collections.abc
 import dataclasses
 import os
 import shutil
+import warnings
 from typing import Dict, Iterable, Optional, Protocol, Tuple
 
 import jax
@@ -135,7 +142,8 @@ class _SingleEngine:
     def run_chunk(self, state: Dict, steps: int) -> Tuple[Dict, Dict]:
         state, outs = self.sim.run(state, steps)
         host = dict(
-            spike_count=np.asarray(outs["spike_count"]).astype(np.int32)
+            spike_count=np.asarray(outs["spike_count"]).astype(np.int32),
+            overflow=np.asarray(outs["overflow"]).astype(np.int32),
         )
         if "raster" in outs:
             host["raster"] = np.asarray(outs["raster"])
@@ -185,7 +193,12 @@ class _SPMDEngine:
     def run_chunk(self, state: Dict, steps: int) -> Tuple[Dict, Dict]:
         state, outs = self.sim.run(state, steps)
         sc = np.asarray(outs["spike_count"])  # (steps, k)
-        host = dict(spike_count=sc.sum(axis=1).astype(np.int32))
+        host = dict(
+            spike_count=sc.sum(axis=1).astype(np.int32),
+            overflow=np.asarray(outs["overflow"]).sum(axis=1).astype(
+                np.int32
+            ),
+        )
         if "raster" in outs:
             r = np.asarray(outs["raster"])  # (steps, k, n_p)
             host["raster"] = r.reshape(r.shape[0], -1)
@@ -220,22 +233,30 @@ class RunResult(collections.abc.Mapping):
     """Host-side result of ``Session.run``.  Mapping access exposes
     ``result["spike_count"]`` so post-hoc helpers (``monitors.summary``)
     accept it like legacy output dicts; richer recordings live on the
-    monitor objects passed to ``run``."""
+    monitor objects passed to ``run``.
+
+    ``overflow`` counts spikes DROPPED per step by a lossy exchange
+    (compressed index lists past ``SimConfig.index_cap_frac``), summed over
+    partitions; all-zero for dense/identity exchanges.  A nonzero total
+    also emits a ``UserWarning`` from ``Session.run``."""
 
     spike_count: np.ndarray  # (steps,) int32, summed over partitions
     t_final: int
     chunks: Tuple[int, ...]  # chunk lengths actually executed
+    overflow: np.ndarray = None  # (steps,) int32, summed over partitions
 
     def __getitem__(self, key):
         if key == "spike_count":
             return self.spike_count
+        if key == "overflow":
+            return self.overflow
         raise KeyError(key)
 
     def __iter__(self):
-        return iter(("spike_count",))
+        return iter(("spike_count", "overflow"))
 
     def __len__(self):
-        return 1
+        return 2
 
 
 class Session:
@@ -399,6 +420,7 @@ class Session:
             d["ell_fill"] = self._current_engine.sim.ell.fill_factor
         else:
             d["backend"] = self._current_engine.sim.backend
+            d["exchange"] = self._current_engine.sim.exchange
         return d
 
     # -- simulate ----------------------------------------------------------
@@ -446,7 +468,7 @@ class Session:
         t_run0 = self.t
         for mon in monitors:
             mon.begin(self)
-        counts, chunks = [], []
+        counts, overflows, chunks = [], [], []
         done = 0
         next_ckpt = checkpoint_every
         while done < steps:
@@ -458,6 +480,7 @@ class Session:
             for mon in monitors:
                 mon.on_chunk(t_run0 + done, outs)
             counts.append(outs["spike_count"])
+            overflows.append(outs["overflow"])
             chunks.append(c)
             done += c
             if next_ckpt is not None and done == next_ckpt:
@@ -472,10 +495,24 @@ class Session:
         for mon in monitors:
             mon.finalize()
         self.last_run_chunks = tuple(chunks)
+        overflow = np.concatenate(overflows)
+        dropped = int(overflow.sum())
+        if dropped:
+            # the engine owns the effective-cap formula (incl. its floor)
+            cap = getattr(engine.sim, "index_cap", None)
+            warnings.warn(
+                f"compressed index exchange dropped {dropped} spikes over "
+                f"{done} steps (effective cap: {cap} spike ids per "
+                "partition per step); raise SimConfig(index_cap_frac=...) "
+                "or use exchange='dense' for a lossless run",
+                UserWarning,
+                stacklevel=2,
+            )
         return RunResult(
             spike_count=np.concatenate(counts),
             t_final=t_run0 + done,
             chunks=tuple(chunks),
+            overflow=overflow,
         )
 
     # -- checkpoint / restart ----------------------------------------------

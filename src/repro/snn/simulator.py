@@ -47,7 +47,11 @@ class SimConfig:
     max_k: Optional[int] = None  # heavy-row split cap (single-partition only)
     record_raster: bool = False
     record_v: bool = False
-    exchange: str = "dense"  # 'dense' | 'index' (distributed only)
+    # 'auto' | 'dense' | 'index' (distributed only): 'auto' resolves to the
+    # compressed index exchange for non-plastic multi-partition nets (the
+    # fused-split hot path — collective bytes stay at spike-count scale)
+    # and the paper-faithful dense all-gather otherwise
+    exchange: str = "auto"
     index_cap_frac: float = 0.25  # K cap for compressed exchange, frac of n_p
     seed: int = 42
 
@@ -60,9 +64,10 @@ class SimConfig:
                 f"expected one of {BACKENDS} or None for platform "
                 "auto-detection (REPRO_BACKEND env also applies)"
             )
-        if self.exchange not in ("dense", "index"):
+        if self.exchange not in ("auto", "dense", "index"):
             raise ValueError(
-                f"SimConfig(exchange={self.exchange!r}): expected 'dense' "
+                f"SimConfig(exchange={self.exchange!r}): expected 'auto' "
+                "(index for non-plastic k>1, dense otherwise), 'dense' "
                 "(all-gathered activity vector, paper-faithful) or 'index' "
                 "(compressed fixed-capacity spike-id lists)"
             )
@@ -158,14 +163,21 @@ def make_core_step(
 ) -> Callable:
     """The shared per-partition step; ``exchange`` injects the collective.
 
+    ``exchange(spikes, tr_plus)`` returns ``(act, pre_trace, overflow)``
+    where ``overflow`` is the number of local spikes the collective
+    *dropped* (compressed index exchange past its capacity; 0 for dense /
+    identity exchanges) — every step emits it in ``outs['overflow']`` so
+    lossy exchanges are counted and surfaced, never silent.
+
     ``noise_ids`` are the *permanent* (pre-partitioning) neuron ids of the
     local rows: noise is a pure function of (seed, t, permanent id), so a
     trajectory is invariant under any partitioning/relabelling — the
     property that makes elastic resharding (snn/reshard.py) bit-exact.
 
-    The step engine (fused single-kernel vs unfused three-kernel) is chosen
-    by ``kernels.dispatch.select_step_engine``; the choice is attached to
-    the returned step as ``step.engine_choice``."""
+    The step engine (fused single-kernel vs fused-split-at-the-exchange vs
+    unfused three-kernel) is chosen by
+    ``kernels.dispatch.select_step_engine``; the choice is attached to the
+    returned step as ``step.engine_choice``."""
     D = d_ring
     n_p = dev.n_p
     any_plastic = dev.any_plastic and stdp_params is not None
@@ -188,6 +200,7 @@ def make_core_step(
             identity_rows=all(dev.identity_rows),
             n_delay_buckets=len(dev.delays),
             n_p=n_p,
+            n_global=n_global,
             fused=fused,
         )
     if choice.fused:
@@ -205,11 +218,14 @@ def make_core_step(
         i_syn = jax.lax.dynamic_index_in_dim(
             carry["ring"], slot, axis=0, keepdims=False
         )
-        ring = jax.lax.dynamic_update_index_in_dim(
-            carry["ring"], jnp.zeros((carry["ring"].shape[1],),
-                                     carry["ring"].dtype),
-            slot, axis=0,
-        )
+        if choice.engine != "fused_split":
+            # the split post-exchange kernel rotates the ring itself; the
+            # other engines clear the delivered slot here
+            ring = jax.lax.dynamic_update_index_in_dim(
+                carry["ring"], jnp.zeros((carry["ring"].shape[1],),
+                                         carry["ring"].dtype),
+                slot, axis=0,
+            )
         # deterministic noise keyed by (seed, t, permanent neuron id)
         if noise_sigma > 0:
             key_t = jax.random.fold_in(base_key, t)
@@ -220,7 +236,8 @@ def make_core_step(
         else:
             noise = jnp.zeros((n_p,), jnp.float32)
 
-        if choice.fused:
+        overflow = jnp.zeros((), jnp.int32)
+        if choice.engine == "fused":
             # one Pallas launch: LIF advance + spike emission + per-bucket
             # gather; the spike vector never round-trips through HBM
             # between emission and propagation (identity exchange)
@@ -236,6 +253,37 @@ def make_core_step(
             )
             for i, d in enumerate(dev.delays):
                 ring = ring.at[jnp.mod(t + d, D)].add(currents[i][:n_p])
+            new_weights = carry["weights"]
+            tr_plus, tr_minus = carry["tr_plus"], carry["tr_minus"]
+        elif choice.engine == "fused_split":
+            # the same fusion split at the exchange: fused {LIF + emit}
+            # kernel, the collective, then a fused {ring rotate + every
+            # delay-bucket gather} kernel — state arrays and the exchanged
+            # activity vector each cross HBM exactly once per step
+            vtx = carry["vtx_state"]
+            i_tot = i_syn + noise + vtx[:, LIF_BIAS]
+            v2, r2, spikes = ops.fused_pre_exchange(
+                vtx[:, LIF_V], vtx[:, LIF_REF], i_tot,
+                params=lif_params, backend=backend,
+            )
+            vtx_state = (
+                vtx.at[:, LIF_V].set(v2).at[:, LIF_REF].set(r2)
+            )
+            act, _, overflow = exchange(spikes, carry["tr_plus"])
+            # slot arithmetic becomes data (masks), not indexing, so the
+            # post kernel's write rows are static
+            d_rows = jnp.arange(D)
+            clear_mask = (d_rows != slot).astype(jnp.float32)
+            write_slots = jnp.stack(
+                [jnp.mod(t + d, D) for d in dev.delays]
+            )
+            write_onehot = (
+                write_slots[:, None] == d_rows[None, :]
+            ).astype(jnp.float32)
+            ring = ops.fused_post_exchange(
+                act, carry["ring"], clear_mask, write_onehot,
+                dev.cols, carry["weights"], backend=backend,
+            )
             new_weights = carry["weights"]
             tr_plus, tr_minus = carry["tr_plus"], carry["tr_minus"]
         else:
@@ -254,7 +302,7 @@ def make_core_step(
                 tr_plus = carry["tr_plus"]
                 tr_minus = carry["tr_minus"]
 
-            act, pre_trace = exchange(spikes, tr_plus)
+            act, pre_trace, overflow = exchange(spikes, tr_plus)
 
             weights = carry["weights"]
             new_weights = []
@@ -296,7 +344,7 @@ def make_core_step(
             t=t + 1, vtx_state=vtx_state, ring=ring, hist=hist,
             weights=new_weights, tr_plus=tr_plus, tr_minus=tr_minus,
         )
-        out = dict(spike_count=jnp.sum(spikes))
+        out = dict(spike_count=jnp.sum(spikes), overflow=overflow)
         if record_raster:
             out["raster"] = spikes.astype(jnp.uint8)
         if record_v:
@@ -347,7 +395,7 @@ class Simulator:
             dev=self.dev,
             backend=self.backend,
             stdp_params=stdp,
-            exchange=lambda s, tr: (s, tr),
+            exchange=lambda s, tr: (s, tr, jnp.zeros((), jnp.int32)),
             noise_ids=jnp.asarray(part.global_ids, jnp.int32),
             record_raster=cfg.record_raster,
             record_v=cfg.record_v,

@@ -1,6 +1,7 @@
 """Distributed simulator (shard_map over k fake host devices, subprocess)
 vs the single-device oracle: bit-level raster equality, compressed
-exchange equivalence, plus the distributed checkpoint-restart path."""
+exchange equivalence, split-fused vs unfused engine parity, index-exchange
+overflow accounting, plus the distributed checkpoint-restart path."""
 import pytest
 
 from helpers import run_with_devices
@@ -45,6 +46,124 @@ def test_dist_sim_matches_oracle_dense():
 def test_dist_sim_matches_oracle_compressed_index():
     out = run_with_devices(EQUIV.format(exchange="index"), n_devices=8)
     assert "DIST EQUIV OK" in out
+
+
+FUSED_EQUIV = """
+import numpy as np
+from repro.snn import spatial_random, to_dcsr, Simulator, DistSimulator, SimConfig
+from repro.core import merge_to_single, block_partition
+
+k, exchange = {k}, "{exchange}"
+
+def build():
+    net = spatial_random(240, avg_degree=10, seed=4)
+    net.vtx_state[:, 2] += 50.0  # drive real activity through the exchange
+    return to_dcsr(net, assignment=block_partition(240, k), uniform=True)
+
+dist_f = DistSimulator(build(), SimConfig(
+    align_k=8, record_raster=True, exchange=exchange,
+    backend="pallas_interpret", fused=True))
+assert dist_f.engine_choice.engine == "fused_split", dist_f.engine_choice
+st_f, outs_f = dist_f.run(dist_f.init_state(), 50)
+
+dist_u = DistSimulator(build(), SimConfig(
+    align_k=8, record_raster=True, exchange=exchange,
+    backend="ref", fused=False))
+assert dist_u.engine_choice.engine == "unfused"
+st_u, outs_u = dist_u.run(dist_u.init_state(), 50)
+
+rf = np.asarray(outs_f["raster"]).reshape(50, -1)
+ru = np.asarray(outs_u["raster"]).reshape(50, -1)
+assert np.array_equal(rf, ru), "fused_split vs unfused raster diverged"
+np.testing.assert_array_equal(
+    np.asarray(outs_f["spike_count"]), np.asarray(outs_u["spike_count"]))
+np.testing.assert_array_equal(
+    np.asarray(outs_f["overflow"]), np.asarray(outs_u["overflow"]))
+
+oracle = Simulator(merge_to_single(build()), SimConfig(
+    align_k=8, record_raster=True, backend="ref"))
+st_o, outs_o = oracle.run(oracle.init_state(), 50)
+assert np.array_equal(rf, np.asarray(outs_o["raster"])), \\
+    "fused_split vs k=1 oracle raster diverged"
+vf = np.asarray(st_f["vtx_state"]).reshape(-1, st_f["vtx_state"].shape[-1])
+np.testing.assert_allclose(vf, np.asarray(st_o["vtx_state"]),
+                           rtol=1e-4, atol=1e-4)
+sp = int(np.asarray(outs_f["spike_count"]).sum())
+assert sp > 100, f"test net too quiet for a meaningful parity check: {{sp}}"
+print("FUSED DIST EQUIV OK", sp)
+"""
+
+
+@pytest.mark.parametrize("k", [2, 4])
+@pytest.mark.parametrize("exchange", ["dense", "index"])
+def test_dist_fused_split_matches_unfused_and_oracle(k, exchange):
+    """The split-fused engine is bit-exact vs the unfused SPMD engine AND
+    the k=1 single-device oracle, for both exchange flavours."""
+    out = run_with_devices(
+        FUSED_EQUIV.format(k=k, exchange=exchange), n_devices=k
+    )
+    assert "FUSED DIST EQUIV OK" in out
+
+
+FUSED_PLASTIC_ERR = """
+from repro.snn import balanced_ei, to_dcsr, DistSimulator, SimConfig
+from repro.core import block_partition
+
+net = balanced_ei(160, stdp=True, seed=7)
+d = to_dcsr(net, assignment=block_partition(net.n, 2), uniform=True)
+try:
+    DistSimulator(d, SimConfig(align_k=8, fused=True))
+except ValueError as e:
+    assert "STDP" in str(e), e
+    print("PLASTIC FUSED ERR OK")
+else:
+    raise AssertionError("fused=True on a plastic net must raise")
+"""
+
+
+def test_dist_fused_demand_on_plastic_net_raises_loudly():
+    out = run_with_devices(FUSED_PLASTIC_ERR, n_devices=2)
+    assert "PLASTIC FUSED ERR OK" in out
+
+
+OVERFLOW = """
+import warnings
+import numpy as np
+from repro.snn import Session, SimConfig, spatial_random, to_dcsr
+from repro.core import block_partition
+
+net = spatial_random(240, avg_degree=10, seed=4)
+net.vtx_state[:, 2] += 500.0  # synchronized wave >> cap
+d = to_dcsr(net, assignment=block_partition(240, 2), uniform=True)
+# cap = max(0.05 * 120, 8) = 8 spike ids per partition per step:
+# deliberately undersized
+ses = Session(d, SimConfig(align_k=8, exchange="index",
+                           index_cap_frac=0.05))
+assert ses.describe()["engine"] == "spmd"
+with warnings.catch_warnings(record=True) as caught:
+    warnings.simplefilter("always")
+    res = ses.run(30)
+dropped = int(res.overflow.sum())
+assert dropped > 0, "undersized cap must report dropped spikes"
+assert res.overflow.shape == res.spike_count.shape
+assert res["overflow"] is res.overflow  # mapping surface
+assert any("dropped" in str(w.message) for w in caught), \\
+    "Session.run must warn about a lossy run"
+
+# a comfortable cap on the same net reports zero overflow
+ses2 = Session(d, SimConfig(align_k=8, exchange="index",
+                            index_cap_frac=1.0))
+res2 = ses2.run(30)
+assert int(res2.overflow.sum()) == 0
+print("OVERFLOW SURFACED OK", dropped)
+"""
+
+
+def test_index_exchange_overflow_counted_and_surfaced():
+    """Spikes dropped past index_cap_frac are counted per step in
+    outs['overflow'] and surfaced through Session.run — never silent."""
+    out = run_with_devices(OVERFLOW, n_devices=2)
+    assert "OVERFLOW SURFACED OK" in out
 
 
 STDP_DIST = """

@@ -95,10 +95,79 @@ def test_ops_fused_step_ref_backend_matches_interpret(rng):
     )
 
 
+# -- split-engine kernels (pre/post exchange) ------------------------------
+
+@pytest.mark.parametrize("n_p", [64, 100, 37])
+@pytest.mark.parametrize("with_traces", [False, True])
+def test_fused_pre_exchange_matches_ref(rng, n_p, with_traces):
+    v = jnp.asarray((-65.0 + 20.0 * rng.random(n_p)).astype(np.float32))
+    refrac = jnp.asarray(rng.integers(0, 3, n_p).astype(np.float32))
+    i_tot = jnp.asarray((8.0 * rng.random(n_p)).astype(np.float32))
+    args, kw = (v, refrac, i_tot), dict(params=LIF_PARAMS)
+    if with_traces:
+        args += (
+            jnp.asarray(rng.random(n_p).astype(np.float32)),
+            jnp.asarray(rng.random(n_p).astype(np.float32)),
+        )
+        kw["taus"] = (20.0, 15.0)
+    out_r = ops.fused_pre_exchange(*args, backend="ref", **kw)
+    out_p = ops.fused_pre_exchange(*args, backend="pallas_interpret", **kw)
+    assert len(out_r) == len(out_p) == (5 if with_traces else 3)
+    for a, b in zip(out_r, out_p):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-6
+        )
+
+
+@pytest.mark.parametrize("slot,delays", [
+    (0, (1,)),  # D = 1: clear and re-add the same slot
+    (2, (1, 3)),
+    (3, (1, 2, 4)),  # d == D wraps onto the cleared slot
+])
+def test_fused_post_exchange_matches_unfused_composition(rng, slot, delays):
+    """ring rotate + all-bucket gathers in one pass == clear slot, then
+    spike_gather + ring.at[(slot+d) % D].add per bucket."""
+    n_global, n_p, R, K = 240, 60, 64, 16
+    D = max(delays)
+    slot = slot % D
+    act = jnp.asarray((rng.random(n_global) < 0.2).astype(np.float32))
+    ring = jnp.asarray(rng.normal(size=(D, n_p)).astype(np.float32))
+    clear = (jnp.arange(D) != slot).astype(jnp.float32)
+    onehot = (
+        jnp.asarray([[(slot + d) % D] for d in delays])
+        == jnp.arange(D)[None, :]
+    ).astype(jnp.float32)
+    cols, weights = [], []
+    for _ in delays:
+        c = rng.integers(0, n_global, (R, K)).astype(np.int32)
+        w = rng.normal(size=(R, K)).astype(np.float32)
+        w[n_p:] = 0  # padded rows carry no synapses
+        cols.append(jnp.asarray(c))
+        weights.append(jnp.asarray(w))
+
+    expect = np.asarray(ring).copy()
+    expect[slot] = 0.0
+    for c, w, d in zip(cols, weights, delays):
+        cur = np.asarray(ref.spike_gather_ref(act, c, w))[:n_p]
+        expect[(slot + d) % D] += cur
+
+    for backend in ("ref", "pallas_interpret"):
+        got = ops.fused_post_exchange(
+            act, ring, clear, onehot, cols, weights, backend=backend
+        )
+        assert got.shape == (D, n_p)
+        np.testing.assert_allclose(
+            np.asarray(got), expect, rtol=1e-5, atol=1e-5
+        )
+
+
 # -- dispatcher -----------------------------------------------------------
 
 def test_registry_has_all_backends():
-    for op in ("spike_gather", "lif_step", "stdp_update", "fused_step"):
+    for op in (
+        "spike_gather", "lif_step", "stdp_update", "fused_step",
+        "fused_pre_exchange", "fused_post_exchange",
+    ):
         assert dispatch.backends_for(op) == (
             "pallas", "pallas_interpret", "ref"
         ), op
@@ -139,13 +208,29 @@ def test_select_step_engine_auto():
     assert c.engine == "fused"
 
 
+def test_select_step_engine_exchange_is_placement_not_gate():
+    """A non-identity exchange no longer blocks fusion — it selects the
+    split engine (pre kernel, collective, post kernel)."""
+    c = dispatch.select_step_engine(
+        **{**ELIGIBLE, "identity_exchange": False}, n_global=4096
+    )
+    assert c.engine == "fused_split"
+    assert c.fused and c.split
+    assert "split at the exchange" in c.reason
+    # identity exchange keeps the single-kernel engine
+    one = dispatch.select_step_engine(**ELIGIBLE)
+    assert one.engine == "fused" and one.fused and not one.split
+
+
 @pytest.mark.parametrize("override,reason_part", [
     ({"models_present": ("lif", "alif")}, "heterogeneous"),
     ({"any_plastic": True}, "STDP"),
-    ({"identity_exchange": False}, "collective"),
     ({"identity_rows": False}, "segment-sum"),
     ({"n_delay_buckets": 0}, "no synapses"),
     ({"n_p": dispatch.FUSED_MAX_N_P + 1}, "too large"),
+    ({"identity_exchange": False,
+      "n_global": dispatch.FUSED_SPLIT_MAX_N_GLOBAL + 1},
+     "activity vector"),
 ])
 def test_select_step_engine_blockers(override, reason_part):
     c = dispatch.select_step_engine(**{**ELIGIBLE, **override})
@@ -163,6 +248,11 @@ def test_select_step_engine_flags():
     assert dispatch.select_step_engine(
         **{**ELIGIBLE, "backend": "ref"}, fused=True
     ).engine == "fused"
+    # fused=True on a ref-backend distributed partition forces the split
+    assert dispatch.select_step_engine(
+        **{**ELIGIBLE, "backend": "ref", "identity_exchange": False},
+        fused=True,
+    ).engine == "fused_split"
 
 
 # -- end to end -----------------------------------------------------------
@@ -203,19 +293,48 @@ def test_fused_demand_on_plastic_net_raises():
         Simulator(d, SimConfig(align_k=8, fused=True))
 
 
-def test_dist_index_exchange_never_fuses():
+def test_dist_index_exchange_splits_instead_of_bypassing():
     """k=1 compressed-index exchange truncates at its cap — it is NOT an
-    identity exchange, so the fused engine must not bypass it."""
+    identity exchange, so the single-kernel engine (which bypasses the
+    exchange entirely) must not be picked.  It IS eligible for the SPLIT
+    engine, where the exchange stays in place between the two kernels —
+    and the truncating exchange must still truncate."""
+    import numpy as np
     from repro.snn import DistSimulator, SimConfig, spatial_random, to_dcsr
     from repro.core import block_partition
 
     def build():
         net = spatial_random(64, avg_degree=6, seed=1)
+        # drive hard enough that the whole net fires within a couple of
+        # steps of each other — the synchronized wave overruns the cap
+        net.vtx_state[:, 2] += 500.0
         return to_dcsr(net, assignment=block_partition(64, 1), uniform=True)
 
-    for exchange, want in (("index", "unfused"), ("dense", "fused")):
+    outs_by_engine = {}
+    for exchange, want in (("index", "fused_split"), ("dense", "fused")):
         dist = DistSimulator(build(), SimConfig(
-            align_k=8, backend="pallas_interpret", exchange=exchange
+            align_k=8, backend="pallas_interpret", exchange=exchange,
+            index_cap_frac=0.1,
         ))
-        dist.run(dist.init_state(), 2)
+        _, outs = dist.run(dist.init_state(), 30)
         assert dist.engine_choice.engine == want, (exchange, want)
+        outs_by_engine[exchange] = outs
+    # the split engine routed spikes through the lossy exchange: the cap
+    # (max(0.1 * 64, 8) = 8 ids/step) dropped spikes, and said so
+    assert int(np.asarray(
+        outs_by_engine["index"]["overflow"]
+    ).sum()) > 0
+    # the unfused index run agrees bit-for-bit with the split one
+    dist_u = DistSimulator(build(), SimConfig(
+        align_k=8, backend="ref", fused=False, exchange="index",
+        index_cap_frac=0.1,
+    ))
+    _, outs_u = dist_u.run(dist_u.init_state(), 30)
+    np.testing.assert_array_equal(
+        np.asarray(outs_u["spike_count"]),
+        np.asarray(outs_by_engine["index"]["spike_count"]),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(outs_u["overflow"]),
+        np.asarray(outs_by_engine["index"]["overflow"]),
+    )

@@ -279,6 +279,22 @@ def test_simconfig_rejects_bad_index_cap_frac(frac):
 
 def test_simconfig_valid_values_ok():
     SimConfig(backend="ref", exchange="index", index_cap_frac=1.0)
+    # 'auto' (the default) resolves per-net inside the engines
+    assert SimConfig().exchange == "auto"
+
+
+def test_run_result_surfaces_overflow():
+    """Every run reports the lossy-exchange drop counter; identity / dense
+    exchanges report all-zero (k=1 here — the distributed undersized-cap
+    case lives in test_dist_sim.py)."""
+    ses = Session(mc_net(), SimConfig(align_k=8))
+    res = ses.run(12, chunk_size=5)
+    assert res.overflow.shape == res.spike_count.shape
+    assert res.overflow.dtype == np.int32
+    assert int(res.overflow.sum()) == 0
+    # mapping surface exposes both series
+    assert set(res) == {"spike_count", "overflow"}
+    assert res["overflow"] is res.overflow
 
 
 def test_session_rejects_bad_engine_and_type():
