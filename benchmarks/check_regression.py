@@ -1,0 +1,146 @@
+"""CI benchmark-regression gate for ``spike_throughput``.
+
+Compares per-mode ``us_per_step`` of a fresh benchmark report (the CI
+smoke run's ``BENCH_spike_throughput.json``) against the committed
+``benchmarks/baseline.json`` and exits non-zero if any shared mode
+regressed by more than ``--threshold`` (default 1.35x).  A per-mode delta
+table is printed either way, so the perf trajectory is visible in every
+CI log, green or red.
+
+Because absolute step latency depends on the machine, ``--normalize MODE``
+divides every ``us_per_step`` (in both files) by that mode's own
+``us_per_step`` before comparing — machine speed cancels and the gate
+tracks the *relative* cost of each engine instead.  CI uses
+``--normalize ref``.
+
+Modes present on only one side are reported and skipped (new benchmark
+modes must land together with a refreshed baseline to become gated).
+
+Refreshing the baseline (after an intentional perf change or when adding
+a mode)::
+
+    PYTHONPATH=src python benchmarks/spike_throughput.py --mode all --quick
+    cp BENCH_spike_throughput.json benchmarks/baseline.json
+
+and commit the copy with the change that explains it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "baseline.json"
+)
+DEFAULT_CURRENT = "BENCH_spike_throughput.json"
+DEFAULT_THRESHOLD = 1.35
+
+
+def load_modes(path: str) -> dict:
+    """{mode_name: us_per_step} from a spike_throughput JSON report."""
+    with open(path) as f:
+        data = json.load(f)
+    modes = data.get("modes", {})
+    out = {}
+    for name, entry in modes.items():
+        us = entry.get("us_per_step")
+        if isinstance(us, (int, float)) and us > 0:
+            out[name] = float(us)
+    return out
+
+
+def normalize(modes: dict, mode: str) -> dict:
+    """Divide every mode's us_per_step by ``mode``'s own — machine speed
+    cancels, leaving the relative engine cost."""
+    if mode not in modes:
+        raise KeyError(
+            f"--normalize {mode!r}: mode not present ({sorted(modes)})"
+        )
+    ref = modes[mode]
+    return {name: us / ref for name, us in modes.items()}
+
+
+def compare(
+    baseline: dict,
+    current: dict,
+    threshold: float = DEFAULT_THRESHOLD,
+):
+    """Returns ``(rows, regressions, only_baseline, only_current)`` where
+    ``rows`` is a list of ``(mode, base, cur, ratio, flag)`` for the
+    shared modes and ``regressions`` the subset with ratio > threshold."""
+    shared = sorted(set(baseline) & set(current))
+    rows, regressions = [], []
+    for mode in shared:
+        base, cur = baseline[mode], current[mode]
+        ratio = cur / base
+        flag = "REGRESSION" if ratio > threshold else "ok"
+        rows.append((mode, base, cur, ratio, flag))
+        if ratio > threshold:
+            regressions.append(mode)
+    only_baseline = sorted(set(baseline) - set(current))
+    only_current = sorted(set(current) - set(baseline))
+    return rows, regressions, only_baseline, only_current
+
+
+def print_table(rows, threshold, unit):
+    w = max([len(r[0]) for r in rows] + [len("mode")])
+    print(f"{'mode':<{w}}  {'baseline':>12}  {'current':>12}  "
+          f"{'ratio':>7}  gate(>{threshold}x)")
+    for mode, base, cur, ratio, flag in rows:
+        print(f"{mode:<{w}}  {base:>12.3f}  {cur:>12.3f}  "
+              f"{ratio:>6.2f}x  {flag}")
+    print(f"(units: {unit})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed reference report")
+    ap.add_argument("--current", default=DEFAULT_CURRENT,
+                    help="fresh report from the benchmark smoke run")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max allowed current/baseline us_per_step ratio")
+    ap.add_argument("--normalize", default=None, metavar="MODE",
+                    help="divide both reports by MODE's us_per_step first "
+                         "(cancels machine speed; CI uses 'ref')")
+    args = ap.parse_args(argv)
+
+    baseline = load_modes(args.baseline)
+    current = load_modes(args.current)
+    if not baseline:
+        print(f"error: no benchmark modes in baseline {args.baseline}")
+        return 2
+    if not current:
+        print(f"error: no benchmark modes in current {args.current}")
+        return 2
+    unit = "us/step"
+    if args.normalize:
+        baseline = normalize(baseline, args.normalize)
+        current = normalize(current, args.normalize)
+        unit = f"us/step relative to mode {args.normalize!r}"
+
+    rows, regressions, only_base, only_cur = compare(
+        baseline, current, args.threshold
+    )
+    if not rows:
+        print("error: baseline and current share no benchmark modes")
+        return 2
+    print_table(rows, args.threshold, unit)
+    if only_base:
+        print(f"note: modes only in baseline (skipped): {only_base}")
+    if only_cur:
+        print(f"note: modes only in current (not yet gated — refresh "
+              f"benchmarks/baseline.json to gate them): {only_cur}")
+    if regressions:
+        print(f"FAIL: {len(regressions)} mode(s) regressed past "
+              f"{args.threshold}x: {regressions}")
+        return 1
+    print(f"OK: all {len(rows)} shared modes within {args.threshold}x "
+          "of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,14 +2,19 @@
 per-step wall time for the microcircuit under the jitted scan loop.
 
 Modes (``--mode``):
-  * ``ref``   — the pure-jnp oracle path (CPU production path; default)
-  * ``fused`` — k=1 fused single-kernel step vs. unfused three-kernel
-                step, both through the Pallas engine, side by side
-  * ``dist``  — k>1 split-fused step (pre-exchange kernel, collective,
-                post-exchange kernel) vs. the unfused SPMD step, run in a
-                subprocess with ``k`` (fake, off-TPU) devices
-  * ``all``   — fused + dist (+ ref), the full fused-vs-unfused ×
-                k=1-vs-distributed grid
+  * ``ref``     — the pure-jnp oracle path (CPU production path; default)
+  * ``fused``   — k=1 fused single-kernel step vs. unfused three-kernel
+                  step, both through the Pallas engine, side by side
+  * ``dist``    — k>1 split-fused step (pre-exchange kernel, collective,
+                  post-exchange kernel) vs. the unfused SPMD step, run in
+                  a subprocess with ``k`` (fake, off-TPU) devices
+  * ``plastic`` — STDP workload (balanced E/I net): the plastic fused
+                  engines (STDP folded into the same panel pass as the
+                  gathers) vs. the unfused three-kernel + ``stdp_update``
+                  sequence, at k=1 (in-process) and k=2 (subprocess)
+  * ``all``     — fused + dist + plastic (+ ref), the full
+                  fused-vs-unfused × k=1-vs-distributed × plain-vs-plastic
+                  grid
 
 Every invocation also records its results into
 ``BENCH_spike_throughput.json`` (``--json`` to relocate), merging with any
@@ -77,11 +82,38 @@ def run(scale=0.02, steps=200, backend="ref", fused=None):
     return _time_session(ses, steps, d.n, d.m)
 
 
-def run_dist(scale, steps, k, backend, fused, exchange="auto"):
-    """k>1 measurement in THIS process (caller provides >= k devices)."""
+def _plastic_net(n):
+    """The STDP benchmark workload: balanced E/I net with E->E plasticity,
+    driven hard enough that the STDP pass does real work every step."""
+    from repro.snn import balanced_ei
+
+    net = balanced_ei(n, stdp=True, seed=0, delay_steps=5)
+    net.vtx_state[:, 2] += 6.0
+    return net
+
+
+def run_plastic(n=200, steps=100, backend="ref", fused=None):
+    """k=1 plastic measurement in-process (fused_plastic vs unfused)."""
+    net = _plastic_net(n)
+    d = to_dcsr(net, k=1)
+    align_k = 128 if backend == "pallas" else 32
+    ses = Session(
+        d, SimConfig(align_k=align_k, backend=backend, fused=fused)
+    )
+    return _time_session(ses, steps, d.n, d.m)
+
+
+def run_dist(scale, steps, k, backend, fused, exchange="auto",
+             plastic=False):
+    """k>1 measurement in THIS process (caller provides >= k devices).
+    ``plastic`` swaps the microcircuit for the STDP workload (``scale``
+    is then the neuron count)."""
     from repro.core import block_partition
 
-    net = microcircuit(scale=scale, seed=0)
+    if plastic:
+        net = _plastic_net(int(scale))
+    else:
+        net = microcircuit(scale=scale, seed=0)
     d = to_dcsr(net, assignment=block_partition(net.n, k), uniform=True)
     align_k = 128 if backend == "pallas" else 32
     ses = Session(d, SimConfig(
@@ -98,14 +130,16 @@ def _dist_worker_main(argv):
     ap.add_argument("--k", type=int, required=True)
     ap.add_argument("--backend", required=True)
     ap.add_argument("--fused", type=int, required=True)
+    ap.add_argument("--plastic", type=int, default=0)
     args = ap.parse_args(argv)
     r = run_dist(
-        args.scale, args.steps, args.k, args.backend, bool(args.fused)
+        args.scale, args.steps, args.k, args.backend, bool(args.fused),
+        plastic=bool(args.plastic),
     )
     print("RESULT " + json.dumps(r))
 
 
-def _run_dist_subprocess(scale, steps, k, backend, fused):
+def _run_dist_subprocess(scale, steps, k, backend, fused, plastic=False):
     """Run one distributed measurement in a subprocess with k fake host
     devices (off-TPU the host platform must be forced BEFORE jax
     initializes, so the parent process stays clean)."""
@@ -121,7 +155,8 @@ def _run_dist_subprocess(scale, steps, k, backend, fused):
     out = subprocess.run(
         [sys.executable, os.path.abspath(__file__), "--_dist-worker",
          "--scale", str(scale), "--steps", str(steps), "--k", str(k),
-         "--backend", backend, "--fused", str(int(fused))],
+         "--backend", backend, "--fused", str(int(fused)),
+         "--plastic", str(int(plastic))],
         env=env, capture_output=True, text=True, timeout=1800,
     )
     if out.returncode != 0:
@@ -209,6 +244,41 @@ def main_dist(scale, steps, k, json_path):
     })
 
 
+def main_plastic(n, steps, k, json_path):
+    """STDP workload: the plastic fused engines (one pass per synapse
+    panel, STDP folded in) vs the unfused three-kernel + stdp_update
+    sequence, at k=1 and distributed k."""
+    from repro.kernels.dispatch import platform_default
+
+    backend = platform_default()
+    fused = run_plastic(n=n, steps=steps, backend=backend, fused=True)
+    unfused = run_plastic(n=n, steps=steps, backend=backend, fused=False)
+    assert fused["engine"] == "fused_plastic", fused["engine"]
+    assert unfused["engine"] == "unfused", unfused["engine"]
+    speedup = unfused["us_per_step"] / max(fused["us_per_step"], 1e-9)
+    print(
+        f"spike_throughput_plastic_k1,{fused['us_per_step']:.0f},"
+        f"unfused_us={unfused['us_per_step']:.0f};"
+        f"speedup={speedup:.2f}x;backend={backend};"
+        f"n={fused['n']};m={fused['m']}"
+    )
+    entries = {"plastic_k1_fused": fused, "plastic_k1_unfused": unfused}
+    dist_f = _run_dist_subprocess(n, steps, k, backend, True, plastic=True)
+    dist_u = _run_dist_subprocess(n, steps, k, backend, False, plastic=True)
+    assert dist_f["engine"] == "fused_split_plastic", dist_f["engine"]
+    assert dist_u["engine"] == "unfused", dist_u["engine"]
+    speedup_d = dist_u["us_per_step"] / max(dist_f["us_per_step"], 1e-9)
+    print(
+        f"spike_throughput_plastic_dist_k{k},{dist_f['us_per_step']:.0f},"
+        f"unfused_us={dist_u['us_per_step']:.0f};"
+        f"speedup={speedup_d:.2f}x;backend={backend};"
+        f"exchange={dist_f.get('exchange')};n={dist_f['n']};m={dist_f['m']}"
+    )
+    entries[f"plastic_dist_k{k}_fused"] = dist_f
+    entries[f"plastic_dist_k{k}_unfused"] = dist_u
+    _record(json_path, entries)
+
+
 def main(argv=None, quick=None):
     if quick is not None and argv is None:  # benchmarks/run.py entry
         argv = ["--quick"] if quick else []
@@ -218,7 +288,8 @@ def main(argv=None, quick=None):
         _dist_worker_main(argv[1:])
         return
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--mode", choices=("ref", "fused", "dist", "all"),
+    ap.add_argument("--mode",
+                    choices=("ref", "fused", "dist", "plastic", "all"),
                     default="ref")
     ap.add_argument("--scale", type=float, default=None,
                     help="microcircuit scale (default per mode)")
@@ -242,6 +313,10 @@ def main(argv=None, quick=None):
     if args.mode in ("dist", "all"):
         k = args.k if args.k is not None else (2 if args.quick else 4)
         main_dist(pallas_scale, pallas_steps, k, args.json)
+    if args.mode in ("plastic", "all"):
+        n_plastic = 160 if args.quick else 400
+        k = args.k if args.k is not None else 2
+        main_plastic(n_plastic, pallas_steps, k, args.json)
     if args.mode in ("ref", "all"):
         scale = args.scale if args.scale is not None else (
             0.01 if args.quick else 0.03

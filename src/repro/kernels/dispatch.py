@@ -18,25 +18,36 @@ environment variable > platform default (``pallas`` on TPU, otherwise
 Separately from the *kernel* backend, ``select_step_engine`` decides the
 *step engine*:
 
-  * ``fused``       — single ``pallas_call`` for the whole local step
-                      (kernels/fused_step.py); only when the exchange is an
-                      identity (k = 1 dense), so the spike vector never
-                      leaves VMEM between emission and propagation;
-  * ``fused_split`` — the same fusion *split at the exchange boundary*:
-                      a fused pre-exchange kernel (LIF advance + spike
-                      emission), the ``parts``-axis collective, then a fused
-                      post-exchange kernel (ring-buffer rotate + every
-                      delay-bucket gather in one pass).  This is the
-                      distributed hot path;
-  * ``unfused``     — the three-kernel sequence (one launch per op and per
-                      delay bucket); the fallback for plastic /
-                      heterogeneous / heavy-row-split partitions.
+  * ``fused``         — single ``pallas_call`` for the whole local step
+                        (kernels/fused_step.py); only when the exchange is
+                        an identity (k = 1 dense), so the spike vector
+                        never leaves VMEM between emission and propagation;
+  * ``fused_plastic`` — the same single-kernel step grown by the STDP
+                        pass: trace decay rides the LIF advance, and the
+                        per-bucket gather-accumulate applies the plastic
+                        weight update in the same pass over each synapse
+                        panel (one VMEM crossing per panel per step);
+  * ``fused_split``   — the fusion *split at the exchange boundary*:
+                        a fused pre-exchange kernel (LIF advance + spike
+                        emission), the ``parts``-axis collective, then a
+                        fused post-exchange kernel (ring-buffer rotate +
+                        every delay-bucket gather in one pass).  This is
+                        the distributed hot path;
+  * ``fused_split_plastic`` — the split engine for plastic partitions:
+                        pre-exchange additionally decays+bumps the traces,
+                        the exchange carries the pre-trace vector, and the
+                        post-exchange kernel folds the STDP weight update
+                        into the same panel pass as the gathers;
+  * ``unfused``       — the three-kernel sequence (one launch per op and
+                        per delay bucket, plus a separate ``stdp_update``
+                        pass for plastic nets); the fallback for
+                        heterogeneous / heavy-row-split partitions.
 
-Fusion (either variant) is only sound for a homogeneous non-plastic LIF
-partition with identity ELL rows; the *identity of the exchange* is no
-longer a fusion gate — it only decides the *placement* of the split.  The
-selector encodes those rules so both simulators and the benchmarks share
-one policy.
+Fusion (any variant) is only sound for a homogeneous LIF partition with
+identity ELL rows; neither the *identity of the exchange* (placement of
+the split) nor *plasticity* (selection of the ``*_plastic`` variant) is an
+eligibility gate.  The selector encodes those rules so both simulators and
+the benchmarks share one policy.
 """
 from __future__ import annotations
 
@@ -129,22 +140,32 @@ def lookup(op: str, backend: Optional[str] = None) -> Callable:
 # -- step-engine selection (fused vs unfused) -----------------------------
 
 
-STEP_ENGINES = ("fused", "fused_split", "unfused")
+STEP_ENGINES = (
+    "fused", "fused_plastic", "fused_split", "fused_split_plastic",
+    "unfused",
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class StepEngineChoice:
-    engine: str  # 'fused' | 'fused_split' | 'unfused'
+    engine: str  # one of STEP_ENGINES
     reason: str
 
     @property
     def fused(self) -> bool:
-        """True for either fused variant (single-kernel or split)."""
-        return self.engine in ("fused", "fused_split")
+        """True for any fused variant (single-kernel or split, plastic or
+        not)."""
+        return self.engine != "unfused"
 
     @property
     def split(self) -> bool:
-        return self.engine == "fused_split"
+        return self.engine in ("fused_split", "fused_split_plastic")
+
+    @property
+    def plastic(self) -> bool:
+        """True for the variants that fold the STDP pass into the fused
+        step."""
+        return self.engine in ("fused_plastic", "fused_split_plastic")
 
 
 # the fused kernel keeps six full-length f32 state vectors (v/refrac/i_tot
@@ -153,9 +174,16 @@ class StepEngineChoice:
 # engine, which tiles state into (rows, 128) panels
 _FUSED_VECTOR_VMEM_BUDGET = 6 * 1024 * 1024
 FUSED_MAX_N_P = _FUSED_VECTOR_VMEM_BUDGET // (6 * 4)
+# the plastic single-kernel variant additionally keeps the two e-trace
+# vectors resident, in and out (ten vectors total), so its n_p cap is
+# proportionally tighter
+FUSED_PLASTIC_MAX_N_P = _FUSED_VECTOR_VMEM_BUDGET // (10 * 4)
 # the split post-exchange kernel pins the *global* activity vector
 # (n_global f32) whole in VMEM, like spike_gather; larger nets fall back
 FUSED_SPLIT_MAX_N_GLOBAL = _FUSED_VECTOR_VMEM_BUDGET // 4
+# the plastic split variant pins the exchanged pre-trace vector alongside
+# the activity vector (two n_global f32 panels), halving the budget
+FUSED_SPLIT_PLASTIC_MAX_N_GLOBAL = _FUSED_VECTOR_VMEM_BUDGET // (2 * 4)
 
 
 def _fusion_blocker(
@@ -172,25 +200,33 @@ def _fusion_blocker(
             f"heterogeneous vertex models {tuple(models_present)} "
             "(fused step is LIF-only)"
         )
-    if any_plastic:
-        return "plastic synapses need the separate STDP pass"
     if not identity_rows:
         return "heavy-row-split ELL needs the segment-sum re-reduction"
     if n_delay_buckets < 1:
         return "no synapses to propagate"
-    if n_p > FUSED_MAX_N_P:
+    max_n_p = FUSED_PLASTIC_MAX_N_P if any_plastic else FUSED_MAX_N_P
+    if n_p > max_n_p:
+        what = "state+trace" if any_plastic else "state"
         return (
-            f"partition too large ({n_p} > {FUSED_MAX_N_P} neurons) for "
-            "VMEM-resident fused state vectors"
+            f"partition too large ({n_p} > {max_n_p} neurons) for "
+            f"VMEM-resident fused {what} vectors"
         )
+    max_n_global = (
+        FUSED_SPLIT_PLASTIC_MAX_N_GLOBAL if any_plastic
+        else FUSED_SPLIT_MAX_N_GLOBAL
+    )
     if (
         not identity_exchange
         and n_global is not None
-        and n_global > FUSED_SPLIT_MAX_N_GLOBAL
+        and n_global > max_n_global
     ):
+        what = (
+            "activity + pre-trace vectors" if any_plastic
+            else "activity vector"
+        )
         return (
-            f"network too large ({n_global} > {FUSED_SPLIT_MAX_N_GLOBAL} "
-            "neurons) for the VMEM-resident exchanged activity vector of "
+            f"network too large ({n_global} > {max_n_global} "
+            f"neurons) for the VMEM-resident exchanged {what} of "
             "the split post-exchange kernel"
         )
     return None
@@ -208,13 +244,17 @@ def select_step_engine(
     n_global: Optional[int] = None,
     fused: Optional[bool] = None,
 ) -> StepEngineChoice:
-    """Pick 'fused', 'fused_split' or 'unfused' for a partition's step.
+    """Pick one of ``STEP_ENGINES`` for a partition's step.
 
     ``identity_exchange`` is a *placement* input, not an eligibility gate:
     identity exchanges (k = 1 dense) take the single-kernel ``fused``
     engine, every other exchange (distributed dense/index collectives, a
     k = 1 capacity-truncating index exchange) takes ``fused_split`` — the
     same fusion split at the exchange so the collective stays in place.
+    ``any_plastic`` likewise only selects the ``*_plastic`` variant (which
+    folds the STDP pass into the same panel traversal); it is no longer an
+    unfused gate — only the tighter trace-vector VMEM budgets can block a
+    plastic partition.
 
     ``fused=None`` (auto) fuses whenever the partition is eligible and the
     backend runs Pallas kernels; ``fused=True`` demands fusion (raises if
@@ -231,10 +271,14 @@ def select_step_engine(
             raise ValueError(f"fused step engine requested but: {blocker}")
         return StepEngineChoice("unfused", blocker)
     target = "fused" if identity_exchange else "fused_split"
+    if any_plastic:
+        target += "_plastic"
     placement = (
         "identity exchange" if identity_exchange
         else "split at the exchange collective"
     )
+    if any_plastic:
+        placement += ", STDP fused into the panel pass"
     if fused is True:
         return StepEngineChoice(target, f"forced by config ({placement})")
     if backend in ("pallas", "pallas_interpret"):

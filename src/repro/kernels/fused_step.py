@@ -32,10 +32,23 @@ Grid/Block layout:
   * per delay bucket, the (block_r, K_d) col/weight panels stream through
     VMEM and emit a (block_r, 1) current block.
 
+Plastic (STDP) partitions fuse too — the dCSR layout aligns synapse state
+(weights, plasticity masks) with adjacency precisely so one pass over each
+synapse panel can both gather and learn: ``fused_plastic_step_pallas``
+(k = 1) and ``fused_post_exchange_plastic_pallas`` (split) stream each
+(R, K_d) col/weight/plastic panel through VMEM ONCE per step, computing the
+delay-bucket gather-accumulate from the pre-update weights and writing the
+STDP-updated weights back in the same grid step, instead of the unfused
+engine's second full pass over the panels for the separate ``stdp_update``
+launch.  The pre-synaptic trace panel is gathered from the exchanged
+global pre-trace vector (the dense exchange already carries it for plastic
+nets); post-trace/post-spike are the trace outputs of the same kernel
+(k = 1) or of ``fused_pre_exchange_pallas`` (split).
+
 Applicability (the dispatcher enforces this): homogeneous LIF partition,
-no plasticity, identity exchange (activity == local spikes, i.e. the
-single-partition simulator or k == 1), identity ELL rows.  Heterogeneous /
-plastic / distributed steps use the unfused kernels.
+identity ELL rows; the exchange *placement* (identity vs collective) picks
+single-kernel vs split, and plasticity picks the ``*_plastic`` variant.
+Heterogeneous / heavy-row-split partitions use the unfused kernels.
 """
 from __future__ import annotations
 
@@ -197,6 +210,205 @@ def fused_lif_step_pallas(
         r2[:n_p],
         s2[:n_p],
         [c[:, 0] for c in curs],  # f32, like the oracle
+    )
+
+
+# -- plastic single-kernel engine (k = 1, identity exchange) --------------
+
+
+def _stdp_tuple(stdp: dict):
+    return (
+        float(stdp["a_plus"]), float(stdp["a_minus"]),
+        float(stdp["w_min"]), float(stdp["w_max"]),
+    )
+
+
+def _make_plastic_kernel(nd: int, params: dict, taus, stdp):
+    a_plus, a_minus, w_min, w_max = stdp
+
+    def kernel(*refs):
+        v_ref, ref_ref, i_ref, tp_ref, tm_ref = refs[:5]
+        cols_refs = refs[5: 5 + nd]
+        w_refs = refs[5 + nd: 5 + 2 * nd]
+        pl_refs = refs[5 + 2 * nd: 5 + 3 * nd]
+        v_out, ref_out, s_out, tp_out, tm_out = refs[5 + 3 * nd: 10 + 3 * nd]
+        cur_refs = refs[10 + 3 * nd: 10 + 4 * nd]
+        w_out_refs = refs[10 + 4 * nd: 10 + 5 * nd]
+        r = pl.program_id(0)
+
+        @pl.when(r == 0)
+        def _advance():
+            # same single definition of the LIF math as the non-plastic
+            # kernel, plus the trace decay+bump in the same elementwise pass
+            v_new, ref_new, spike = ref.lif_step_ref(
+                v_ref[...], ref_ref[...], i_ref[...], **params
+            )
+            v_out[...] = v_new
+            ref_out[...] = ref_new
+            s_out[...] = spike
+            dt = params["dt"]
+            tp_out[...] = ref.trace_decay_ref(
+                tp_ref[...], spike, dt=dt, tau=taus[0]
+            )
+            tm_out[...] = ref.trace_decay_ref(
+                tm_ref[...], spike, dt=dt, tau=taus[1]
+            )
+
+        # identity exchange: the VMEM-resident spike vector IS the gather
+        # activity and the pre-spike, the fresh tr_plus IS the pre-trace
+        act = s_out[...].astype(jnp.float32)
+        pre_t_vec = tp_out[...]
+        block_rows = cur_refs[0].shape[0]
+        # postsynaptic terms of this row block, sliced from the trace
+        # vectors computed above (row r of an identity-row panel is
+        # neuron r, so the slice offset is just the grid position)
+        post_t = tm_out[pl.ds(r * block_rows, block_rows)]
+        post_s = s_out[pl.ds(r * block_rows, block_rows)]
+        for i in range(nd):
+            cols = cols_refs[i][...]
+            w = w_refs[i][...]
+            vals = jnp.take(act, cols, axis=0)
+            # gather-accumulate from the PRE-update weights...
+            cur_refs[i][...] = jnp.sum(
+                w.astype(jnp.float32) * vals, axis=1, keepdims=True
+            )
+            # ...then depress-on-pre / potentiate-on-post on the
+            # plastic-masked slots of the same panel, written back once
+            pre_t = jnp.take(pre_t_vec, cols, axis=0)
+            dw = (
+                a_plus * pre_t * post_s[:, None]
+                - a_minus * post_t[:, None] * vals
+            )
+            w_out_refs[i][...] = jnp.where(
+                pl_refs[i][...] > 0, jnp.clip(w + dw, w_min, w_max), w
+            )
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "nd", "block_r", "interpret", "params_tuple", "taus", "stdp",
+    ),
+)
+def _plastic_call(
+    v, refrac, i_tot, tp, tm, *panels,
+    nd, block_r, interpret, params_tuple, taus, stdp,
+):
+    params = dict(params_tuple)
+    cols = panels[:nd]
+    weights = panels[nd: 2 * nd]
+    plastic = panels[2 * nd:]
+    n_vec = v.shape[0]
+    R = cols[0].shape[0]
+    grid = (R // block_r,)
+    vec_spec = pl.BlockSpec((n_vec,), lambda r: (0,))
+
+    def panel_spec(p):
+        return pl.BlockSpec((block_r, p.shape[1]), lambda r: (r, 0))
+
+    in_specs = (
+        [vec_spec] * 5
+        + [panel_spec(c) for c in cols]
+        + [panel_spec(w) for w in weights]
+        + [panel_spec(p) for p in plastic]
+    )
+    out_shapes = (
+        [jax.ShapeDtypeStruct((n_vec,), v.dtype)] * 5
+        + [jax.ShapeDtypeStruct((R, 1), jnp.float32) for _ in weights]
+        + [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in weights]
+    )
+    out_specs = (
+        [vec_spec] * 5
+        + [pl.BlockSpec((block_r, 1), lambda r: (r, 0))] * nd
+        + [panel_spec(w) for w in weights]
+    )
+    outs = pl.pallas_call(
+        _make_plastic_kernel(nd, params, taus, stdp),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(v, refrac, i_tot, tp, tm, *cols, *weights, *plastic)
+    return outs[:5], outs[5: 5 + nd], outs[5 + nd:]
+
+
+def fused_plastic_step_pallas(
+    v: jnp.ndarray,  # (n_p,) membrane potential
+    refrac: jnp.ndarray,  # (n_p,) refractory counters
+    i_tot: jnp.ndarray,  # (n_p,) total input current (syn + bias + noise)
+    tr_plus: jnp.ndarray,  # (n_p,) pre-synaptic e-trace
+    tr_minus: jnp.ndarray,  # (n_p,) post-synaptic e-trace
+    cols: Sequence[jnp.ndarray],  # per delay bucket (R, K_d) int32
+    weights: Sequence[jnp.ndarray],  # per delay bucket (R, K_d)
+    plastic: Sequence[jnp.ndarray],  # per delay bucket (R, K_d) 0/1 mask
+    *,
+    params: dict,
+    taus,  # (tau_plus, tau_minus)
+    stdp: dict,  # a_plus / a_minus / w_min / w_max
+    block_r: int = 256,
+    interpret: bool = False,
+):
+    """Plastic fused step for identity-exchange LIF partitions: LIF advance
+    + spike emission + trace decay + per-bucket gather-accumulate + STDP
+    weight update in ONE ``pallas_call`` — each synapse panel crosses VMEM
+    once per step (gather reads the pre-update weights, the plastic-masked
+    update writes back in the same grid step), vs the unfused engine's
+    second full pass for the separate ``stdp_update`` launch.
+
+    Returns ``(v', refrac', spikes, tr_plus', tr_minus', currents,
+    new_weights)`` with state/trace vectors trimmed back to ``n_p``,
+    ``currents[i]`` of shape ``(R,)`` and ``new_weights[i]`` of shape
+    ``(R, K_d)``.  Identity-row buckets only, local column ids.
+    """
+    nd = len(cols)
+    assert nd >= 1, "fused step needs at least one delay bucket"
+    assert len(weights) == nd and len(plastic) == nd
+    (n_p,) = v.shape
+    R = cols[0].shape[0]
+    assert all(c.shape[0] == R for c in cols), (
+        "fused step needs a common R across delay buckets: "
+        f"{[c.shape for c in cols]}"
+    )
+    assert R >= n_p, (R, n_p)
+
+    # lane-pad the state/trace vectors; padded neurons sit at v_reset with
+    # no input (never spike, traces stay 0) and padded panel rows carry a
+    # zero plastic mask, so the padding is inert for both halves.  The
+    # vectors are padded up to >= R so the per-row-block trace slices in
+    # the kernel stay in bounds for any align_rows.
+    n_vec = _align_up(max(n_p, R, _LANES), _LANES)
+    pad = n_vec - n_p
+    v_p = jnp.pad(v, (0, pad), constant_values=params["v_reset"])
+    r_p = jnp.pad(refrac, (0, pad))
+    i_p = jnp.pad(i_tot, (0, pad))
+    tp_p = jnp.pad(tr_plus, (0, pad))
+    tm_p = jnp.pad(tr_minus, (0, pad))
+
+    # VMEM budget: per grid step the resident panels are cols (int32) +
+    # weights in/out + plastic mask per bucket; the ten state/trace
+    # vectors ride the caller's VMEM-resident assumption (see
+    # dispatch.FUSED_PLASTIC_MAX_N_P)
+    bytes_per_row = sum(
+        c.shape[1] * (c.dtype.itemsize + 3 * w.dtype.itemsize)
+        for c, w in zip(cols, weights)
+    )
+    max_rows = max(_PANEL_VMEM_BUDGET // max(bytes_per_row, 1), 1)
+    block_r = pick_block(R, min(block_r, max_rows), interpret=interpret,
+                         what="fused_plastic_step rows")
+    vecs, curs, new_w = _plastic_call(
+        v_p, r_p, i_p, tp_p, tm_p, *cols, *weights, *plastic,
+        nd=nd, block_r=block_r, interpret=interpret,
+        params_tuple=tuple(sorted(params.items())),
+        taus=tuple(taus), stdp=_stdp_tuple(stdp),
+    )
+    return (
+        vecs[0][:n_p], vecs[1][:n_p], vecs[2][:n_p],
+        vecs[3][:n_p], vecs[4][:n_p],
+        [c[:, 0] for c in curs],
+        list(new_w),
     )
 
 
@@ -422,3 +634,167 @@ def fused_post_exchange_pallas(
         nd=nd, block_r=block_r, interpret=interpret,
     )
     return new_ring[:D, :n_p]
+
+
+# -- split engine: plastic post-exchange kernel ---------------------------
+
+
+def _make_post_plastic_kernel(nd: int, stdp):
+    a_plus, a_minus, w_min, w_max = stdp
+
+    def kernel(*refs):
+        (act_ref, pre_ref, ring_ref, clear_ref, oh_ref,
+         post_t_ref, post_s_ref) = refs[:7]
+        cols_refs = refs[7: 7 + nd]
+        w_refs = refs[7 + nd: 7 + 2 * nd]
+        pl_refs = refs[7 + 2 * nd: 7 + 3 * nd]
+        ring_out = refs[7 + 3 * nd]
+        w_out_refs = refs[8 + 3 * nd: 8 + 4 * nd]
+        act = act_ref[...]  # (n,) f32, VMEM-resident, revisited
+        pre_t_vec = pre_ref[...]  # (n,) exchanged pre-trace, likewise
+        post_t = post_t_ref[...]  # (block_r, 1)
+        post_s = post_s_ref[...]  # (block_r, 1)
+        acc = ring_ref[...] * clear_ref[...][:, None]
+        for i in range(nd):
+            cols = cols_refs[i][...]  # (block_r, K_d)
+            w = w_refs[i][...]
+            vals = jnp.take(act, cols, axis=0)
+            # gather-accumulate from the PRE-update weights...
+            cur = jnp.sum(w.astype(jnp.float32) * vals, axis=1)
+            acc += oh_ref[i, :][:, None] * cur[None, :]
+            # ...then the STDP update on the same VMEM-resident panel:
+            # potentiate on post spikes by the gathered pre-trace, depress
+            # on pre spikes (``vals``) by the broadcast post-trace
+            pre_t = jnp.take(pre_t_vec, cols, axis=0)
+            dw = a_plus * pre_t * post_s - a_minus * post_t * vals
+            w_out_refs[i][...] = jnp.where(
+                pl_refs[i][...] > 0, jnp.clip(w + dw, w_min, w_max), w
+            )
+        ring_out[...] = acc
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nd", "block_r", "interpret", "stdp")
+)
+def _post_plastic_call(
+    act, pre_trace, ring, clear, onehot, post_t, post_s, *panels,
+    nd, block_r, interpret, stdp,
+):
+    cols = panels[:nd]
+    weights = panels[nd: 2 * nd]
+    plastic = panels[2 * nd:]
+    n_act = act.shape[0]
+    D_pad, R = ring.shape
+    grid = (R // block_r,)
+    nd_, D = onehot.shape
+
+    def panel_spec(p):
+        return pl.BlockSpec((block_r, p.shape[1]), lambda r: (r, 0))
+
+    col_spec = pl.BlockSpec((block_r, 1), lambda r: (r, 0))
+    ring_spec = pl.BlockSpec((D_pad, block_r), lambda r: (0, r))
+    outs = pl.pallas_call(
+        _make_post_plastic_kernel(nd, stdp),
+        grid=grid,
+        in_specs=(
+            [pl.BlockSpec((n_act,), lambda r: (0,))] * 2  # act + pre-trace
+            + [ring_spec]
+            + [pl.BlockSpec((D_pad,), lambda r: (0,))]
+            + [pl.BlockSpec((nd_, D), lambda r: (0, 0))]
+            + [col_spec, col_spec]  # post-trace / post-spike row blocks
+            + [panel_spec(c) for c in cols]
+            + [panel_spec(w) for w in weights]
+            + [panel_spec(p) for p in plastic]
+        ),
+        out_specs=[ring_spec] + [panel_spec(w) for w in weights],
+        out_shape=(
+            [jax.ShapeDtypeStruct((D_pad, R), jnp.float32)]
+            + [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in weights]
+        ),
+        interpret=interpret,
+    )(act, pre_trace, ring, clear, onehot, post_t, post_s,
+      *cols, *weights, *plastic)
+    return outs[0], outs[1:]
+
+
+def fused_post_exchange_plastic_pallas(
+    act: jnp.ndarray,  # (n,) exchanged global activity
+    pre_trace: jnp.ndarray,  # (n,) exchanged global pre-synaptic traces
+    ring: jnp.ndarray,  # (D, n_p) ring buffer, slot NOT yet cleared
+    clear_mask: jnp.ndarray,  # (D,) 0 at the delivered slot, 1 elsewhere
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    post_trace: jnp.ndarray,  # (n_p,) local post-traces (already updated)
+    post_spike: jnp.ndarray,  # (n_p,) local spikes this step
+    cols: Sequence[jnp.ndarray],  # per delay bucket (R, K_d) int32 global
+    weights: Sequence[jnp.ndarray],  # per delay bucket (R, K_d)
+    plastic: Sequence[jnp.ndarray],  # per delay bucket (R, K_d) 0/1 mask
+    *,
+    stdp: dict,  # a_plus / a_minus / w_min / w_max
+    block_r: int = 256,
+    interpret: bool = False,
+):
+    """Plastic fused post-exchange half of the split step: ring rotate +
+    ALL delay-bucket ELL gather-accumulates + the STDP weight update in
+    ONE pass over the synapse panels.
+
+    Each (R, K_d) col/weight/plastic panel streams through VMEM once per
+    step: the gather reads the pre-update weights, the plastic-masked
+    depress-on-pre/potentiate-on-post update writes the new weights back
+    in the same grid step (the unfused engine re-reads every panel a
+    second time for the separate ``stdp_update`` launch).  The exchanged
+    activity AND pre-trace vectors are pinned whole in VMEM; the
+    postsynaptic trace/spike terms (outputs of ``fused_pre_exchange``)
+    ride the row-block grid as (block_r, 1) columns.
+
+    Identity-row buckets only; padded panel rows carry zero weights and a
+    zero plastic mask, so their currents vanish and their weights freeze.
+    Returns ``(new_ring (D, n_p), new_weights [(R, K_d)])``.
+    """
+    nd = len(cols)
+    assert nd >= 1, "post-exchange step needs at least one delay bucket"
+    assert len(weights) == nd and len(plastic) == nd
+    assert write_onehot.shape[0] == nd, (write_onehot.shape, nd)
+    assert act.shape == pre_trace.shape, (act.shape, pre_trace.shape)
+    D, n_p = ring.shape
+    R = cols[0].shape[0]
+    assert all(c.shape[0] == R for c in cols), (
+        "post-exchange step needs a common R across delay buckets: "
+        f"{[c.shape for c in cols]}"
+    )
+    assert R >= n_p, (R, n_p)
+
+    # lane-pad the two exchanged vectors (gathered ids stay < n)
+    n_act = _align_up(max(act.shape[0], _LANES), _LANES)
+    pad_n = n_act - act.shape[0]
+    act_p = jnp.pad(act.astype(jnp.float32), (0, pad_n))
+    pre_p = jnp.pad(pre_trace.astype(jnp.float32), (0, pad_n))
+    # same ring/mask padding as the non-plastic post kernel
+    D_pad = _align_up(max(D, 8), 8)
+    ring_p = jnp.pad(ring, ((0, D_pad - D), (0, R - n_p)))
+    clear_p = jnp.pad(clear_mask.astype(jnp.float32), (0, D_pad - D))
+    oh_p = jnp.pad(
+        write_onehot.astype(jnp.float32), ((0, 0), (0, D_pad - D))
+    )
+    # postsynaptic terms padded to the panel rows (identity rows: row r is
+    # neuron r; padded rows are masked off by the zero plastic mask)
+    post_t = jnp.pad(post_trace, (0, R - n_p))[:, None]
+    post_s = jnp.pad(post_spike, (0, R - n_p))[:, None]
+
+    # VMEM budget: cols + weights in/out + plastic mask per bucket, the
+    # ring in/out blocks, and the (block_r, 1) post columns per grid step
+    bytes_per_row = sum(
+        c.shape[1] * (c.dtype.itemsize + 3 * w.dtype.itemsize)
+        for c, w in zip(cols, weights)
+    ) + 2 * D_pad * 4 + 8
+    max_rows = max(_PANEL_VMEM_BUDGET // max(bytes_per_row, 1), 1)
+    block_r = pick_block(R, min(block_r, max_rows), interpret=interpret,
+                         what="fused_post_exchange_plastic rows")
+    new_ring, new_w = _post_plastic_call(
+        act_p, pre_p, ring_p, clear_p, oh_p, post_t, post_s,
+        *cols, *weights, *plastic,
+        nd=nd, block_r=block_r, interpret=interpret,
+        stdp=_stdp_tuple(stdp),
+    )
+    return new_ring[:D, :n_p], list(new_w)

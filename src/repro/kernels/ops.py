@@ -18,7 +18,9 @@ from . import ref
 from .dispatch import lookup, register
 from .fused_step import (
     fused_lif_step_pallas,
+    fused_plastic_step_pallas,
     fused_post_exchange_pallas,
+    fused_post_exchange_plastic_pallas,
     fused_pre_exchange_pallas,
 )
 from .lif_step import lif_step_pallas
@@ -136,6 +138,38 @@ def fused_step(
     )
 
 
+# -- fused_step_plastic (the same, + trace decay + STDP write-back) -------
+
+@register("fused_step_plastic", "ref")
+def _fused_step_plastic_ref(
+    v, refrac, i_tot, tr_plus, tr_minus, cols, weights, plastic,
+    *, params, taus, stdp, **kw
+):
+    return ref.fused_step_plastic_ref(
+        v, refrac, i_tot, tr_plus, tr_minus, cols, weights, plastic,
+        params=params, taus=taus, stdp=_stdp_args(stdp),
+    )
+
+
+_register_pallas("fused_step_plastic")(fused_plastic_step_pallas)
+
+
+def fused_step_plastic(
+    v, refrac, i_tot, tr_plus, tr_minus, cols, weights, plastic, *,
+    params, taus, stdp, backend: Optional[str] = None, **kw
+):
+    """Plastic fused LIF step (identity exchange): LIF advance + spike
+    emission + trace decay + per-bucket gather + STDP weight update in one
+    launch.  Returns ``(v', refrac', spikes, tr_plus', tr_minus',
+    currents, new_weights)``.  ``stdp`` carries a_plus/a_minus/w_min/w_max
+    (extra keys like the taus are ignored)."""
+    return lookup("fused_step_plastic", backend)(
+        v, refrac, i_tot, tr_plus, tr_minus,
+        tuple(cols), tuple(weights), tuple(plastic),
+        params=params, taus=tuple(taus), stdp=stdp, **kw
+    )
+
+
 # -- split engine halves (fused step for non-identity exchanges) ----------
 
 @register("fused_pre_exchange", "ref")
@@ -185,4 +219,37 @@ def fused_post_exchange(
     return lookup("fused_post_exchange", backend)(
         act, ring, clear_mask, write_onehot, tuple(cols), tuple(weights),
         **kw
+    )
+
+
+@register("fused_post_exchange_plastic", "ref")
+def _fused_post_exchange_plastic_ref(
+    act, pre_trace, ring, clear_mask, write_onehot, post_trace,
+    post_spike, cols, weights, plastic, *, stdp, **kw
+):
+    return ref.fused_post_exchange_plastic_ref(
+        act, pre_trace, ring, clear_mask, write_onehot, post_trace,
+        post_spike, cols, weights, plastic, stdp=_stdp_args(stdp),
+    )
+
+
+_register_pallas("fused_post_exchange_plastic")(
+    fused_post_exchange_plastic_pallas
+)
+
+
+def fused_post_exchange_plastic(
+    act, pre_trace, ring, clear_mask, write_onehot, post_trace,
+    post_spike, cols, weights, plastic, *, stdp,
+    backend: Optional[str] = None, **kw
+):
+    """Plastic post-exchange half of the split step: ring-buffer rotate +
+    every delay bucket's gather-accumulate (pre-update weights) + the STDP
+    weight update, one pass over the synapse panels.  Returns
+    ``(new_ring, new_weights)``.  ``stdp`` carries
+    a_plus/a_minus/w_min/w_max (extra keys like the taus are ignored)."""
+    return lookup("fused_post_exchange_plastic", backend)(
+        act, pre_trace, ring, clear_mask, write_onehot, post_trace,
+        post_spike, tuple(cols), tuple(weights), tuple(plastic),
+        stdp=stdp, **kw
     )

@@ -190,3 +190,76 @@ def fused_step_ref(
     v2, r2, s = lif_step_ref(v, refrac, i_tot, **params)
     currents = [spike_gather_ref(s, c, w) for c, w in zip(cols, weights)]
     return v2, r2, s, currents
+
+
+def fused_step_plastic_ref(
+    v: jnp.ndarray,  # (n_p,)
+    refrac: jnp.ndarray,  # (n_p,)
+    i_tot: jnp.ndarray,  # (n_p,) total input current
+    tr_plus: jnp.ndarray,  # (n_p,) pre-synaptic e-trace
+    tr_minus: jnp.ndarray,  # (n_p,) post-synaptic e-trace
+    cols,  # per delay bucket (R, K_d) int32, local ids
+    weights,  # per delay bucket (R, K_d)
+    plastic,  # per delay bucket (R, K_d) 0/1 mask of STDP slots
+    *,
+    params: Dict[str, float],
+    taus: Tuple[float, float],  # (tau_plus, tau_minus)
+    stdp: Dict[str, float],  # a_plus / a_minus / w_min / w_max
+):
+    """Oracle for the plastic fused per-partition step: LIF advance + spike
+    emission + trace decay + per-bucket gather-accumulate + STDP weight
+    update, composed from the individual oracles in the documented step
+    order (gather uses *pre-update* weights; the identity exchange means
+    ``act == spikes`` and ``pre_trace == tr_plus'``).  Returns
+    ``(v', refrac', spikes, tr_plus', tr_minus', currents, new_weights)``.
+    """
+    v2, r2, s = lif_step_ref(v, refrac, i_tot, **params)
+    dt = params["dt"]
+    tp = trace_decay_ref(tr_plus, s, dt=dt, tau=taus[0])
+    tm = trace_decay_ref(tr_minus, s, dt=dt, tau=taus[1])
+    n_p = v.shape[0]
+    currents, new_weights = [], []
+    for c, w, pm in zip(cols, weights, plastic):
+        currents.append(spike_gather_ref(s, c, w))
+        pad_r = c.shape[0] - n_p
+        post_t = jnp.pad(tm, (0, pad_r)) if pad_r else tm
+        post_s = jnp.pad(s, (0, pad_r)) if pad_r else s
+        new_weights.append(
+            stdp_update_ref(w, pm, c, tp, s, post_t, post_s, **stdp)
+        )
+    return v2, r2, s, tp, tm, currents, new_weights
+
+
+def fused_post_exchange_plastic_ref(
+    act: jnp.ndarray,  # (n,) exchanged global activity
+    pre_trace: jnp.ndarray,  # (n,) exchanged global pre-synaptic traces
+    ring: jnp.ndarray,  # (D, n_p) future-current ring buffer (uncleared)
+    clear_mask: jnp.ndarray,  # (D,) 0 at the just-delivered slot, 1 else
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    post_trace: jnp.ndarray,  # (n_p,) local post-synaptic traces (updated)
+    post_spike: jnp.ndarray,  # (n_p,) local spikes this step
+    cols,  # per delay bucket (R, K_d) int32, global ids
+    weights,  # per delay bucket (R, K_d)
+    plastic,  # per delay bucket (R, K_d) 0/1 mask of STDP slots
+    *,
+    stdp: Dict[str, float],  # a_plus / a_minus / w_min / w_max
+):
+    """Oracle for the plastic fused post-exchange kernel: everything after
+    the spike exchange — ring rotate + every delay bucket's ELL
+    gather-accumulate (pre-update weights) + the STDP weight update on the
+    plastic-masked slots, in one pass over the panels.  Returns
+    ``(new_ring, new_weights)``.
+    """
+    n_p = ring.shape[1]
+    new_ring = ring * clear_mask[:, None]
+    new_weights = []
+    for i, (c, w, pm) in enumerate(zip(cols, weights, plastic)):
+        cur = spike_gather_ref(act, c, w)[:n_p]
+        new_ring = new_ring + write_onehot[i][:, None] * cur[None, :]
+        pad_r = c.shape[0] - n_p
+        post_t = jnp.pad(post_trace, (0, pad_r)) if pad_r else post_trace
+        post_s = jnp.pad(post_spike, (0, pad_r)) if pad_r else post_spike
+        new_weights.append(
+            stdp_update_ref(w, pm, c, pre_trace, act, post_t, post_s, **stdp)
+        )
+    return new_ring, new_weights

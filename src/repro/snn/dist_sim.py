@@ -11,12 +11,17 @@ through ``Session.run`` — never silent).  ``SimConfig(exchange='auto')``
 resolves to the index exchange for non-plastic nets (collective bytes stay
 at spike-count scale — the fused-split default) and dense otherwise.
 
-Eligible partitions (homogeneous non-plastic LIF, identity ELL rows) run
-the **fused split** step engine: a fused pre-exchange kernel (LIF advance +
-spike emission, one HBM read/write per state array), the collective, then a
+Eligible partitions (homogeneous LIF, identity ELL rows) run the **fused
+split** step engine: a fused pre-exchange kernel (LIF advance + spike
+emission, one HBM read/write per state array), the collective, then a
 fused post-exchange kernel (ring-buffer rotate + every delay bucket's ELL
-gather-accumulate in one pass over the exchanged activity vector).  Others
-fall back to the unfused three-kernel sequence.
+gather-accumulate in one pass over the exchanged activity vector).
+Plastic partitions take the ``fused_split_plastic`` variant: the
+pre-exchange kernel also decays+bumps the e-traces, the dense exchange
+carries the global pre-trace vector, and the post-exchange kernel folds
+the STDP weight update into the same pass over the synapse panels (each
+ELL panel crosses VMEM once per step, not twice).  Others fall back to
+the unfused three-kernel sequence.
 
 Requires uniform partitions (``to_dcsr(..., uniform=True)``): SPMD needs
 equal shard shapes, so deficient partitions are padded with inert dummy
@@ -160,19 +165,15 @@ class DistSimulator:
             dict(net.registry.spec("syn_stdp").params)
             if s.any_plastic else None
         )
-        # 'auto' resolves here: compressed index lists whenever sound (the
-        # fused-split default — collective bytes scale with spike counts,
-        # not partition width), dense when plastic traces must travel or
-        # k == 1 makes the all-gather an identity
+        # 'auto' resolves here: compressed index lists for non-plastic
+        # k > 1 (collective bytes scale with spike counts, not partition
+        # width), dense otherwise — plastic nets gather the real-valued
+        # pre-trace vector densely anyway, so compressing only the spike
+        # ids buys little (exchange='index' remains a supported override)
         self.exchange = cfg.exchange
         if self.exchange == "auto":
             self.exchange = (
                 "index" if (k > 1 and not s.any_plastic) else "dense"
-            )
-        if self.exchange == "index":
-            assert not s.any_plastic, (
-                "compressed index exchange requires dense traces; "
-                "use exchange='dense' for plastic nets"
             )
         # effective per-partition id capacity of the index exchange (the
         # single source of the formula; Session's overflow warning reads
@@ -234,14 +235,18 @@ class DistSimulator:
         n_p, n = s.n_p, self.n_global
         if self.exchange == "dense":
             def ex(spikes, tr_plus):
+                if self.stdp_params is not None:
+                    # one collective, not two: spikes and pre-traces ride
+                    # the same all_gather as a (2, n_p) stack
+                    both = jax.lax.all_gather(
+                        jnp.stack([spikes, tr_plus]), "parts",
+                        tiled=True, axis=1,
+                    )
+                    return both[0], both[1], jnp.zeros((), jnp.int32)
                 act = jax.lax.all_gather(
                     spikes, "parts", tiled=True
                 )
-                if self.stdp_params is not None:
-                    pre = jax.lax.all_gather(tr_plus, "parts", tiled=True)
-                else:
-                    pre = act
-                return act, pre, jnp.zeros((), jnp.int32)
+                return act, act, jnp.zeros((), jnp.int32)
             return ex, 0
         cap = self.index_cap
 
@@ -261,7 +266,15 @@ class DistSimulator:
                 jnp.sum(spikes > 0).astype(jnp.int32)
                 - jnp.sum(idx >= 0).astype(jnp.int32)
             )
-            return act, act, overflow
+            if self.stdp_params is not None:
+                # plastic nets: the pre-trace vector is real-valued and
+                # needed densely, so it all-gathers alongside the
+                # compressed spike ids (STDP sees the same truncated
+                # activity as propagation — fused and unfused agree)
+                pre = jax.lax.all_gather(tr_plus, "parts", tiled=True)
+            else:
+                pre = act
+            return act, pre, overflow
         return ex, cap
 
     def _build_step(self, dev_template, noise_ids):

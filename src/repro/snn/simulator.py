@@ -174,8 +174,9 @@ def make_core_step(
     trajectory is invariant under any partitioning/relabelling — the
     property that makes elastic resharding (snn/reshard.py) bit-exact.
 
-    The step engine (fused single-kernel vs fused-split-at-the-exchange vs
-    unfused three-kernel) is chosen by
+    The step engine (fused single-kernel vs fused-split-at-the-exchange —
+    each with a ``*_plastic`` variant that folds the STDP pass into the
+    same panel traversal — vs unfused three-kernel) is chosen by
     ``kernels.dispatch.select_step_engine``; the choice is attached to the
     returned step as ``step.engine_choice``."""
     D = d_ring
@@ -218,9 +219,9 @@ def make_core_step(
         i_syn = jax.lax.dynamic_index_in_dim(
             carry["ring"], slot, axis=0, keepdims=False
         )
-        if choice.engine != "fused_split":
-            # the split post-exchange kernel rotates the ring itself; the
-            # other engines clear the delivered slot here
+        if not choice.split:
+            # the split post-exchange kernels rotate the ring themselves;
+            # the other engines clear the delivered slot here
             ring = jax.lax.dynamic_update_index_in_dim(
                 carry["ring"], jnp.zeros((carry["ring"].shape[1],),
                                          carry["ring"].dtype),
@@ -237,6 +238,18 @@ def make_core_step(
             noise = jnp.zeros((n_p,), jnp.float32)
 
         overflow = jnp.zeros((), jnp.int32)
+        if choice.split:
+            # both split engines precompute the slot arithmetic into masks
+            # so their post-exchange kernel needs no dynamic indexing —
+            # the write rows are data, not control flow
+            d_rows = jnp.arange(D)
+            clear_mask = (d_rows != slot).astype(jnp.float32)
+            write_slots = jnp.stack(
+                [jnp.mod(t + d, D) for d in dev.delays]
+            )
+            write_onehot = (
+                write_slots[:, None] == d_rows[None, :]
+            ).astype(jnp.float32)
         if choice.engine == "fused":
             # one Pallas launch: LIF advance + spike emission + per-bucket
             # gather; the spike vector never round-trips through HBM
@@ -255,6 +268,51 @@ def make_core_step(
                 ring = ring.at[jnp.mod(t + d, D)].add(currents[i][:n_p])
             new_weights = carry["weights"]
             tr_plus, tr_minus = carry["tr_plus"], carry["tr_minus"]
+        elif choice.engine == "fused_plastic":
+            # the single-kernel step grown by the STDP pass: trace decay
+            # rides the LIF advance, and every synapse panel is traversed
+            # ONCE — the gather reads the pre-update weights and the
+            # plastic-masked update writes back in the same grid step
+            # (identity exchange: act == spikes, pre-trace == tr_plus')
+            vtx = carry["vtx_state"]
+            i_tot = i_syn + noise + vtx[:, LIF_BIAS]
+            (v2, r2, spikes, tr_plus, tr_minus, currents,
+             new_weights) = ops.fused_step_plastic(
+                vtx[:, LIF_V], vtx[:, LIF_REF], i_tot,
+                carry["tr_plus"], carry["tr_minus"],
+                dev.cols, carry["weights"], dev.plastic,
+                params=lif_params, taus=(tau_plus, tau_minus),
+                stdp=stdp_params, backend=backend,
+            )
+            vtx_state = (
+                vtx.at[:, LIF_V].set(v2).at[:, LIF_REF].set(r2)
+            )
+            for i, d in enumerate(dev.delays):
+                ring = ring.at[jnp.mod(t + d, D)].add(currents[i][:n_p])
+            new_weights = tuple(new_weights)
+        elif choice.engine == "fused_split_plastic":
+            # plastic split step: the pre-exchange kernel advances LIF AND
+            # the e-traces, the exchange carries spikes + pre-traces, and
+            # the post-exchange kernel folds ring rotate + all gathers +
+            # the STDP weight update into one pass over the panels
+            vtx = carry["vtx_state"]
+            i_tot = i_syn + noise + vtx[:, LIF_BIAS]
+            v2, r2, spikes, tr_plus, tr_minus = ops.fused_pre_exchange(
+                vtx[:, LIF_V], vtx[:, LIF_REF], i_tot,
+                carry["tr_plus"], carry["tr_minus"],
+                params=lif_params, taus=(tau_plus, tau_minus),
+                backend=backend,
+            )
+            vtx_state = (
+                vtx.at[:, LIF_V].set(v2).at[:, LIF_REF].set(r2)
+            )
+            act, pre_trace, overflow = exchange(spikes, tr_plus)
+            ring, new_weights = ops.fused_post_exchange_plastic(
+                act, pre_trace, carry["ring"], clear_mask, write_onehot,
+                tr_minus, spikes, dev.cols, carry["weights"], dev.plastic,
+                stdp=stdp_params, backend=backend,
+            )
+            new_weights = tuple(new_weights)
         elif choice.engine == "fused_split":
             # the same fusion split at the exchange: fused {LIF + emit}
             # kernel, the collective, then a fused {ring rotate + every
@@ -270,16 +328,6 @@ def make_core_step(
                 vtx.at[:, LIF_V].set(v2).at[:, LIF_REF].set(r2)
             )
             act, _, overflow = exchange(spikes, carry["tr_plus"])
-            # slot arithmetic becomes data (masks), not indexing, so the
-            # post kernel's write rows are static
-            d_rows = jnp.arange(D)
-            clear_mask = (d_rows != slot).astype(jnp.float32)
-            write_slots = jnp.stack(
-                [jnp.mod(t + d, D) for d in dev.delays]
-            )
-            write_onehot = (
-                write_slots[:, None] == d_rows[None, :]
-            ).astype(jnp.float32)
             ring = ops.fused_post_exchange(
                 act, carry["ring"], clear_mask, write_onehot,
                 dev.cols, carry["weights"], backend=backend,

@@ -1,0 +1,144 @@
+"""CI benchmark-regression gate (benchmarks/check_regression.py):
+a deliberately slowed mode must fail the gate (non-zero exit), the
+committed baseline must pass against itself, machine-speed normalization
+must cancel wholesale slowdowns, and unshared modes are skipped."""
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GATE = os.path.join(REPO, "benchmarks", "check_regression.py")
+BASELINE = os.path.join(REPO, "benchmarks", "baseline.json")
+
+spec = importlib.util.spec_from_file_location("check_regression", GATE)
+check_regression = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_regression)
+
+
+@pytest.fixture()
+def reports(tmp_path):
+    """A baseline and an identical current report, as temp files."""
+    base = {
+        "modes": {
+            "ref": {"us_per_step": 900.0},
+            "k1_fused": {"us_per_step": 260.0},
+            "k1_unfused": {"us_per_step": 271.0},
+            "plastic_k1_fused": {"us_per_step": 400.0},
+        }
+    }
+    bpath = tmp_path / "baseline.json"
+    cpath = tmp_path / "current.json"
+    bpath.write_text(json.dumps(base))
+    cpath.write_text(json.dumps(base))
+    return base, str(bpath), str(cpath)
+
+
+def _write(path, data):
+    with open(path, "w") as f:
+        json.dump(data, f)
+
+
+def test_identical_reports_pass(reports, capsys):
+    _, bpath, cpath = reports
+    rc = check_regression.main(["--baseline", bpath, "--current", cpath])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "OK" in out and "REGRESSION" not in out
+
+
+def test_deliberately_slowed_mode_fails_gate(reports, capsys):
+    """Acceptance: a mode slowed past the threshold exits non-zero and is
+    named in the delta table."""
+    base, bpath, cpath = reports
+    cur = copy.deepcopy(base)
+    cur["modes"]["plastic_k1_fused"]["us_per_step"] *= 2.0  # > 1.35x
+    _write(cpath, cur)
+    rc = check_regression.main(["--baseline", bpath, "--current", cpath])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "plastic_k1_fused" in out
+    assert "REGRESSION" in out
+    # the table is printed either way, with the passing modes marked ok
+    assert "k1_unfused" in out and "ok" in out
+
+
+def test_slowdown_below_threshold_passes(reports):
+    base, bpath, cpath = reports
+    cur = copy.deepcopy(base)
+    cur["modes"]["k1_fused"]["us_per_step"] *= 1.30  # < 1.35x
+    _write(cpath, cur)
+    assert check_regression.main(
+        ["--baseline", bpath, "--current", cpath]
+    ) == 0
+    # ...and a tighter threshold catches the same delta
+    assert check_regression.main(
+        ["--baseline", bpath, "--current", cpath, "--threshold", "1.2"]
+    ) == 1
+
+
+def test_normalize_cancels_machine_speed(reports):
+    """A wholesale 3x slowdown (slower CI runner) fails the raw gate but
+    passes under --normalize ref, which gates relative engine cost."""
+    base, bpath, cpath = reports
+    cur = copy.deepcopy(base)
+    for entry in cur["modes"].values():
+        entry["us_per_step"] *= 3.0
+    _write(cpath, cur)
+    assert check_regression.main(
+        ["--baseline", bpath, "--current", cpath]
+    ) == 1
+    assert check_regression.main(
+        ["--baseline", bpath, "--current", cpath, "--normalize", "ref"]
+    ) == 0
+
+
+def test_normalized_relative_regression_still_fails(reports):
+    """Normalization must not mask a real per-engine regression."""
+    base, bpath, cpath = reports
+    cur = copy.deepcopy(base)
+    for entry in cur["modes"].values():
+        entry["us_per_step"] *= 3.0  # machine slowdown...
+    cur["modes"]["k1_fused"]["us_per_step"] *= 2.0  # ...plus a real one
+    _write(cpath, cur)
+    rc = check_regression.main(
+        ["--baseline", bpath, "--current", cpath, "--normalize", "ref"]
+    )
+    assert rc == 1
+
+
+def test_unshared_modes_are_skipped_not_gated(reports, capsys):
+    base, bpath, cpath = reports
+    cur = copy.deepcopy(base)
+    del cur["modes"]["plastic_k1_fused"]
+    cur["modes"]["brand_new_mode"] = {"us_per_step": 1e9}
+    _write(cpath, cur)
+    rc = check_regression.main(["--baseline", bpath, "--current", cpath])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "brand_new_mode" in out and "plastic_k1_fused" in out
+
+
+def test_empty_or_disjoint_reports_error(reports, tmp_path):
+    _, bpath, _ = reports
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"modes": {}}))
+    assert check_regression.main(
+        ["--baseline", bpath, "--current", str(empty)]
+    ) == 2
+
+
+def test_committed_baseline_passes_against_itself():
+    """The real committed baseline gates the real CI invocation shape."""
+    assert os.path.exists(BASELINE), "benchmarks/baseline.json missing"
+    rc = check_regression.main(
+        ["--baseline", BASELINE, "--current", BASELINE,
+         "--normalize", "ref"]
+    )
+    assert rc == 0
+    # and it contains the plastic modes this PR gates
+    modes = check_regression.load_modes(BASELINE)
+    assert {"plastic_k1_fused", "plastic_k1_unfused",
+            "plastic_dist_k2_fused", "plastic_dist_k2_unfused"} <= set(modes)

@@ -161,12 +161,136 @@ def test_fused_post_exchange_matches_unfused_composition(rng, slot, delays):
         )
 
 
+# -- plastic fused kernels (STDP folded into the panel pass) ---------------
+
+STDP_PARAMS = dict(
+    a_plus=0.01, a_minus=0.012, w_min=-2.0, w_max=2.0,
+    tau_plus=20.0, tau_minus=15.0,
+)
+
+
+def _plastic_panels(rng, n_src, n_rows, R, ks):
+    cols, weights, plastic = [], [], []
+    for K in ks:
+        c = rng.integers(0, n_src, (R, K)).astype(np.int32)
+        w = rng.normal(size=(R, K)).astype(np.float32)
+        w[n_rows:] = 0  # padded rows carry no synapses
+        pm = (rng.random((R, K)) < 0.5).astype(np.float32)
+        pm[n_rows:] = 0  # ...and no plastic slots
+        cols.append(jnp.asarray(c))
+        weights.append(jnp.asarray(w))
+        plastic.append(jnp.asarray(pm))
+    return cols, weights, plastic
+
+
+@pytest.mark.parametrize("n_p,R,ks", [
+    (64, 64, (16,)),  # aligned, single bucket
+    (100, 104, (8, 24)),  # non-aligned rows, two buckets
+    (37, 40, (4, 12, 20)),  # odd sizes, three buckets
+])
+def test_fused_plastic_kernel_matches_ref(rng, n_p, R, ks):
+    """One launch: LIF + traces + gather + STDP == the composed oracles,
+    bit-for-bit on spikes/traces and to f32 tolerance on v/currents."""
+    v = jnp.asarray((-65.0 + 20.0 * rng.random(n_p)).astype(np.float32))
+    refrac = jnp.asarray(rng.integers(0, 3, n_p).astype(np.float32))
+    i_tot = jnp.asarray((18.0 * rng.random(n_p)).astype(np.float32))
+    tp = jnp.asarray(rng.random(n_p).astype(np.float32))
+    tm = jnp.asarray(rng.random(n_p).astype(np.float32))
+    cols, weights, plastic = _plastic_panels(rng, n_p, n_p, R, ks)
+    args = (v, refrac, i_tot, tp, tm, cols, weights, plastic)
+    kw = dict(params=LIF_PARAMS, taus=(20.0, 15.0), stdp=STDP_PARAMS)
+    out_r = ops.fused_step_plastic(*args, backend="ref", **kw)
+    out_p = ops.fused_step_plastic(*args, backend="pallas_interpret", **kw)
+    assert int(np.asarray(out_r[2]).sum()) > 0, "case emits no spikes"
+    np.testing.assert_allclose(
+        np.asarray(out_p[0]), np.asarray(out_r[0]), atol=1e-5
+    )  # v (FMA-contraction tolerance, as for the non-plastic kernel)
+    np.testing.assert_array_equal(
+        np.asarray(out_p[2]), np.asarray(out_r[2])
+    )  # spikes
+    for i in (3, 4):  # traces
+        np.testing.assert_allclose(
+            np.asarray(out_p[i]), np.asarray(out_r[i]), atol=1e-6
+        )
+    for a, b in zip(out_p[5], out_r[5]):  # currents
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6
+        )
+    for a, b, w0, pm in zip(out_p[6], out_r[6], weights, plastic):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6
+        )  # new weights
+        # non-plastic slots froze exactly, in both engines
+        frozen = np.asarray(pm) == 0
+        np.testing.assert_array_equal(
+            np.asarray(a)[frozen], np.asarray(w0)[frozen]
+        )
+
+
+@pytest.mark.parametrize("slot,delays", [
+    (0, (1,)),
+    (2, (1, 3)),
+    (3, (1, 2, 4)),  # d == D wraps onto the cleared slot
+])
+def test_fused_post_exchange_plastic_matches_unfused_composition(
+    rng, slot, delays
+):
+    """ring rotate + gathers + STDP in one pass == clear slot, then per
+    bucket: spike_gather with PRE-update weights, ring add, stdp_update."""
+    n_global, n_p, R, K = 240, 60, 64, 16
+    D = max(delays)
+    slot = slot % D
+    act = jnp.asarray((rng.random(n_global) < 0.2).astype(np.float32))
+    pre_trace = jnp.asarray(rng.random(n_global).astype(np.float32))
+    ring = jnp.asarray(rng.normal(size=(D, n_p)).astype(np.float32))
+    post_t = jnp.asarray(rng.random(n_p).astype(np.float32))
+    post_s = jnp.asarray((rng.random(n_p) < 0.3).astype(np.float32))
+    clear = (jnp.arange(D) != slot).astype(jnp.float32)
+    onehot = (
+        jnp.asarray([[(slot + d) % D] for d in delays])
+        == jnp.arange(D)[None, :]
+    ).astype(jnp.float32)
+    cols, weights, plastic = _plastic_panels(
+        rng, n_global, n_p, R, (K,) * len(delays)
+    )
+
+    expect_ring = np.asarray(ring).copy()
+    expect_ring[slot] = 0.0
+    expect_w = []
+    pad_r = R - n_p
+    for c, w, pm, d in zip(cols, weights, plastic, delays):
+        cur = np.asarray(ref.spike_gather_ref(act, c, w))[:n_p]
+        expect_ring[(slot + d) % D] += cur
+        expect_w.append(np.asarray(ref.stdp_update_ref(
+            w, pm, c, pre_trace, act,
+            jnp.pad(post_t, (0, pad_r)), jnp.pad(post_s, (0, pad_r)),
+            a_plus=STDP_PARAMS["a_plus"], a_minus=STDP_PARAMS["a_minus"],
+            w_min=STDP_PARAMS["w_min"], w_max=STDP_PARAMS["w_max"],
+        )))
+
+    for backend in ("ref", "pallas_interpret"):
+        got_ring, got_w = ops.fused_post_exchange_plastic(
+            act, pre_trace, ring, clear, onehot, post_t, post_s,
+            cols, weights, plastic, stdp=STDP_PARAMS, backend=backend,
+        )
+        assert got_ring.shape == (D, n_p)
+        np.testing.assert_allclose(
+            np.asarray(got_ring), expect_ring, rtol=1e-5, atol=1e-5
+        )
+        assert len(got_w) == len(expect_w)
+        for a, b in zip(got_w, expect_w):
+            np.testing.assert_allclose(
+                np.asarray(a), b, rtol=1e-5, atol=1e-6
+            )
+
+
 # -- dispatcher -----------------------------------------------------------
 
 def test_registry_has_all_backends():
     for op in (
         "spike_gather", "lif_step", "stdp_update", "fused_step",
-        "fused_pre_exchange", "fused_post_exchange",
+        "fused_step_plastic", "fused_pre_exchange", "fused_post_exchange",
+        "fused_post_exchange_plastic",
     ):
         assert dispatch.backends_for(op) == (
             "pallas", "pallas_interpret", "ref"
@@ -224,13 +348,19 @@ def test_select_step_engine_exchange_is_placement_not_gate():
 
 @pytest.mark.parametrize("override,reason_part", [
     ({"models_present": ("lif", "alif")}, "heterogeneous"),
-    ({"any_plastic": True}, "STDP"),
     ({"identity_rows": False}, "segment-sum"),
     ({"n_delay_buckets": 0}, "no synapses"),
     ({"n_p": dispatch.FUSED_MAX_N_P + 1}, "too large"),
     ({"identity_exchange": False,
       "n_global": dispatch.FUSED_SPLIT_MAX_N_GLOBAL + 1},
      "activity vector"),
+    # plastic partitions keep the trace vectors resident too, so their
+    # VMEM budgets are tighter — the ONLY way plasticity blocks fusion
+    ({"any_plastic": True, "n_p": dispatch.FUSED_PLASTIC_MAX_N_P + 1},
+     "state+trace"),
+    ({"any_plastic": True, "identity_exchange": False,
+      "n_global": dispatch.FUSED_SPLIT_PLASTIC_MAX_N_GLOBAL + 1},
+     "pre-trace"),
 ])
 def test_select_step_engine_blockers(override, reason_part):
     c = dispatch.select_step_engine(**{**ELIGIBLE, **override})
@@ -239,6 +369,33 @@ def test_select_step_engine_blockers(override, reason_part):
     # demanding fusion on an ineligible partition is an error, not silence
     with pytest.raises(ValueError, match="fused step engine requested"):
         dispatch.select_step_engine(**{**ELIGIBLE, **override}, fused=True)
+
+
+def test_select_step_engine_plastic_selects_variant_not_unfused():
+    """any_plastic is a variant selector, not an unfused gate: a plastic
+    partition within the (tighter) trace budgets fuses as fused_plastic /
+    fused_split_plastic."""
+    c = dispatch.select_step_engine(**{**ELIGIBLE, "any_plastic": True})
+    assert c.engine == "fused_plastic"
+    assert c.fused and c.plastic and not c.split
+    c = dispatch.select_step_engine(
+        **{**ELIGIBLE, "any_plastic": True, "identity_exchange": False},
+        n_global=4096,
+    )
+    assert c.engine == "fused_split_plastic"
+    assert c.fused and c.plastic and c.split
+    assert "STDP fused" in c.reason
+    # the plastic n_p budget sits between never-fuse and the non-plastic
+    # cap: a partition inside the plastic cap fuses, one between the caps
+    # falls back with the trace-budget reason, never the old STDP blocker
+    mid = dispatch.FUSED_PLASTIC_MAX_N_P
+    assert dispatch.select_step_engine(
+        **{**ELIGIBLE, "any_plastic": True, "n_p": mid}
+    ).engine == "fused_plastic"
+    c = dispatch.select_step_engine(
+        **{**ELIGIBLE, "any_plastic": True, "n_p": mid + 1}
+    )
+    assert c.engine == "unfused" and "STDP" not in c.reason
 
 
 def test_select_step_engine_flags():
@@ -285,12 +442,46 @@ def test_fused_sim_matches_ref_on_microcircuit():
     )
 
 
-def test_fused_demand_on_plastic_net_raises():
+def test_fused_plastic_sim_bit_exact_vs_unfused_stdp():
+    """Acceptance: SimConfig(fused=True) on a plastic net no longer raises
+    — it runs the fused_plastic engine, bit-exact vs the unfused STDP path
+    on raster, spike counts, weights AND traces, with real weight
+    movement."""
     from repro.snn import SimConfig, Simulator, balanced_ei, to_dcsr
 
-    d = to_dcsr(balanced_ei(80, stdp=True, seed=3), k=1)
-    with pytest.raises(ValueError, match="STDP"):
-        Simulator(d, SimConfig(align_k=8, fused=True))
+    def build():
+        net = balanced_ei(150, stdp=True, seed=5, delay_steps=5)
+        net.vtx_state[:, 2] += 6.0  # drive real activity through STDP
+        return to_dcsr(net, k=1)
+
+    sim_u = Simulator(build(), SimConfig(
+        align_k=8, backend="ref", record_raster=True
+    ))
+    sim_f = Simulator(build(), SimConfig(
+        align_k=8, backend="pallas_interpret", fused=True,
+        record_raster=True,
+    ))
+    assert sim_u.engine_choice.engine == "unfused"
+    assert sim_f.engine_choice.engine == "fused_plastic"
+    st_u, out_u = sim_u.run(sim_u.init_state(), 80)
+    st_f, out_f = sim_f.run(sim_f.init_state(), 80)
+    ras_u = np.asarray(out_u["raster"])
+    np.testing.assert_array_equal(ras_u, np.asarray(out_f["raster"]))
+    np.testing.assert_array_equal(
+        np.asarray(out_u["spike_count"]), np.asarray(out_f["spike_count"])
+    )
+    assert int(ras_u.sum()) > 30, "test net too quiet to exercise STDP"
+    for key in ("tr_plus", "tr_minus"):
+        np.testing.assert_array_equal(
+            np.asarray(st_u[key]), np.asarray(st_f[key])
+        )
+    moved = 0.0
+    for w_u, w_f, w0 in zip(
+        st_u["weights"], st_f["weights"], sim_u.dev.weights0
+    ):
+        np.testing.assert_array_equal(np.asarray(w_u), np.asarray(w_f))
+        moved += float(np.abs(np.asarray(w_u) - np.asarray(w0)).max())
+    assert moved > 0, "STDP moved no weights — the parity is vacuous"
 
 
 def test_dist_index_exchange_splits_instead_of_bypassing():
