@@ -38,46 +38,71 @@ DEFAULT_CURRENT = "BENCH_spike_throughput.json"
 DEFAULT_THRESHOLD = 1.35
 
 
-def load_modes(path: str) -> dict:
-    """{mode_name: us_per_step} from a spike_throughput JSON report."""
+def load_report(path: str):
+    """One parse of a spike_throughput JSON report:
+    ``(modes, dimensionless, thresholds)`` where ``modes`` maps mode name
+    to its gated ``us_per_step``; ``dimensionless`` names modes flagged
+    ``dimensionless: true`` (already a ratio, e.g. ``ckpt_stall_ratio`` =
+    async/sync checkpoint stall — gated raw, since dividing a ratio by a
+    CPU-bound mode's step time would re-introduce the machine dependence
+    normalization exists to cancel); ``thresholds`` carries per-mode
+    ``gate_threshold`` overrides (noisier stats get a wider band than the
+    global ``--threshold``)."""
     with open(path) as f:
         data = json.load(f)
-    modes = data.get("modes", {})
-    out = {}
-    for name, entry in modes.items():
+    modes, dimensionless, thresholds = {}, set(), {}
+    for name, entry in data.get("modes", {}).items():
         us = entry.get("us_per_step")
         if isinstance(us, (int, float)) and us > 0:
-            out[name] = float(us)
-    return out
+            modes[name] = float(us)
+            if entry.get("dimensionless"):
+                dimensionless.add(name)
+            gt = entry.get("gate_threshold")
+            if isinstance(gt, (int, float)) and gt > 0:
+                thresholds[name] = float(gt)
+    return modes, dimensionless, thresholds
 
 
-def normalize(modes: dict, mode: str) -> dict:
+def load_modes(path: str) -> dict:
+    """{mode_name: us_per_step} from a spike_throughput JSON report."""
+    return load_report(path)[0]
+
+
+def normalize(modes: dict, mode: str, exempt: frozenset = frozenset()) -> dict:
     """Divide every mode's us_per_step by ``mode``'s own — machine speed
-    cancels, leaving the relative engine cost."""
+    cancels, leaving the relative engine cost.  Modes in ``exempt``
+    (dimensionless ratios) pass through unchanged."""
     if mode not in modes:
         raise KeyError(
             f"--normalize {mode!r}: mode not present ({sorted(modes)})"
         )
     ref = modes[mode]
-    return {name: us / ref for name, us in modes.items()}
+    return {
+        name: (us if name in exempt else us / ref)
+        for name, us in modes.items()
+    }
 
 
 def compare(
     baseline: dict,
     current: dict,
     threshold: float = DEFAULT_THRESHOLD,
+    thresholds: dict = None,
 ):
     """Returns ``(rows, regressions, only_baseline, only_current)`` where
-    ``rows`` is a list of ``(mode, base, cur, ratio, flag)`` for the
-    shared modes and ``regressions`` the subset with ratio > threshold."""
+    ``rows`` is a list of ``(mode, base, cur, ratio, thr, flag)`` for the
+    shared modes and ``regressions`` the subset with ratio > thr (the
+    mode's ``gate_threshold`` override, else the global threshold)."""
+    thresholds = thresholds or {}
     shared = sorted(set(baseline) & set(current))
     rows, regressions = [], []
     for mode in shared:
         base, cur = baseline[mode], current[mode]
         ratio = cur / base
-        flag = "REGRESSION" if ratio > threshold else "ok"
-        rows.append((mode, base, cur, ratio, flag))
-        if ratio > threshold:
+        thr = thresholds.get(mode, threshold)
+        flag = "REGRESSION" if ratio > thr else "ok"
+        rows.append((mode, base, cur, ratio, thr, flag))
+        if ratio > thr:
             regressions.append(mode)
     only_baseline = sorted(set(baseline) - set(current))
     only_current = sorted(set(current) - set(baseline))
@@ -87,10 +112,11 @@ def compare(
 def print_table(rows, threshold, unit):
     w = max([len(r[0]) for r in rows] + [len("mode")])
     print(f"{'mode':<{w}}  {'baseline':>12}  {'current':>12}  "
-          f"{'ratio':>7}  gate(>{threshold}x)")
-    for mode, base, cur, ratio, flag in rows:
+          f"{'ratio':>7}  gate(>{threshold}x default)")
+    for mode, base, cur, ratio, thr, flag in rows:
+        note = "" if thr == threshold else f" (>{thr}x)"
         print(f"{mode:<{w}}  {base:>12.3f}  {cur:>12.3f}  "
-              f"{ratio:>6.2f}x  {flag}")
+              f"{ratio:>6.2f}x  {flag}{note}")
     print(f"(units: {unit})")
 
 
@@ -107,8 +133,8 @@ def main(argv=None) -> int:
                          "(cancels machine speed; CI uses 'ref')")
     args = ap.parse_args(argv)
 
-    baseline = load_modes(args.baseline)
-    current = load_modes(args.current)
+    baseline, dim_b, thr_b = load_report(args.baseline)
+    current, dim_c, thr_c = load_report(args.current)
     if not baseline:
         print(f"error: no benchmark modes in baseline {args.baseline}")
         return 2
@@ -117,12 +143,16 @@ def main(argv=None) -> int:
         return 2
     unit = "us/step"
     if args.normalize:
-        baseline = normalize(baseline, args.normalize)
-        current = normalize(current, args.normalize)
-        unit = f"us/step relative to mode {args.normalize!r}"
+        exempt = frozenset(dim_b | dim_c)
+        baseline = normalize(baseline, args.normalize, exempt)
+        current = normalize(current, args.normalize, exempt)
+        unit = (f"us/step relative to mode {args.normalize!r} "
+                "(dimensionless modes raw)")
 
+    # the committed baseline's override wins; a current-only override
+    # applies to modes the baseline has not flagged yet
     rows, regressions, only_base, only_cur = compare(
-        baseline, current, args.threshold
+        baseline, current, args.threshold, {**thr_c, **thr_b}
     )
     if not rows:
         print("error: baseline and current share no benchmark modes")

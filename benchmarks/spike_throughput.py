@@ -12,9 +12,19 @@ Modes (``--mode``):
                   engines (STDP folded into the same panel pass as the
                   gathers) vs. the unfused three-kernel + ``stdp_update``
                   sequence, at k=1 (in-process) and k=2 (subprocess)
-  * ``all``     — fused + dist + plastic (+ ref), the full
+  * ``ckpt``    — checkpoint pipeline: per-checkpoint **run-loop stall**
+                  of ``Session.run(checkpoint_every=...)`` with the
+                  synchronous writer (``checkpoint_sync=True``) vs the
+                  async background writer (the default).  The raw stalls
+                  land as ``stall_us_per_ckpt`` on the ``ckpt_sync`` /
+                  ``ckpt_async`` entries (informational, not gated); the
+                  gated stat is ``ckpt_stall_ratio`` — async/sync median
+                  stall, a dimensionless within-run ratio carried in
+                  ``us_per_step`` with ``dimensionless: true`` (exempt
+                  from ``--normalize``) and a wider ``gate_threshold``
+  * ``all``     — fused + dist + plastic + ckpt (+ ref), the full
                   fused-vs-unfused × k=1-vs-distributed × plain-vs-plastic
-                  grid
+                  grid plus the checkpoint-stall pair
 
 Every invocation also records its results into
 ``BENCH_spike_throughput.json`` (``--json`` to relocate), merging with any
@@ -31,6 +41,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import statistics
 import subprocess
 import sys
 import time
@@ -279,6 +290,81 @@ def main_plastic(n, steps, k, json_path):
     _record(json_path, entries)
 
 
+def run_ckpt(scale, steps, every, sync):
+    """One checkpointed run; returns the mean run-loop stall per
+    checkpoint (what the async pipeline is supposed to shrink: the save
+    call's blocking time inside ``Session.run``)."""
+    import shutil
+    import tempfile
+
+    from repro.snn import Session, SimConfig, microcircuit, to_dcsr
+
+    net = microcircuit(scale=scale, seed=0)
+    d = to_dcsr(net, k=1)
+    ses = Session(d, SimConfig(align_k=32))
+    ses.run(every, chunk_size=every)  # compile the chunk program once
+    td = tempfile.mkdtemp(prefix="ckpt_bench_")
+    try:
+        t0 = time.perf_counter()
+        ses.run(steps, chunk_size=every, checkpoint_every=every,
+                checkpoint_dir=td, checkpoint_sync=sync)
+        loop_s = time.perf_counter() - t0
+        stalls = ses.last_ckpt_stalls
+        ses.wait()  # queued writes must land before the dir is removed
+    finally:
+        ses.close()
+        shutil.rmtree(td, ignore_errors=True)
+    info = ses.describe()
+    return dict(
+        n=d.n, m=d.m, k=info["k"],
+        engine=info["step_engine"], backend=info["backend"],
+        n_checkpoints=len(stalls),
+        # informational (deliberately NOT us_per_step, so the raw
+        # IO-bound stall is never CPU-normalized by the regression gate):
+        # MEDIAN over the checkpoints, robust to one filesystem hiccup
+        stall_us_per_ckpt=statistics.median(stalls) * 1e6,
+        mean_stall_us=sum(stalls) / max(len(stalls), 1) * 1e6,
+        metric="run_loop_stall_per_checkpoint_us",
+        run_s=loop_s,
+    )
+
+
+def main_ckpt(scale, steps, every, json_path):
+    """Checkpoint-pipeline stall: synchronous writer vs the async
+    background writer (host-snapshot + enqueue only).
+
+    The *gated* entry is ``ckpt_stall_ratio`` — async/sync stall measured
+    in the same process on the same disk, so it is machine-invariant
+    (raw stalls are IO-bound and would be distorted by the gate's
+    CPU-time ``--normalize ref``; they ride along unvalidated)."""
+    sync = run_ckpt(scale, steps, every, sync=True)
+    asyn = run_ckpt(scale, steps, every, sync=False)
+    ratio = asyn["stall_us_per_ckpt"] / max(sync["stall_us_per_ckpt"], 1e-9)
+    print(
+        f"spike_throughput_ckpt,{asyn['stall_us_per_ckpt']:.0f},"
+        f"sync_stall_us={sync['stall_us_per_ckpt']:.0f};"
+        f"stall_drop={1.0 / max(ratio, 1e-9):.2f}x;"
+        f"ckpts={asyn['n_checkpoints']};n={asyn['n']};m={asyn['m']}"
+    )
+    ratio_entry = dict(
+        us_per_step=ratio,  # the gated stat (dimensionless: async/sync)
+        dimensionless=True,  # check_regression: exempt from --normalize
+        # both stalls are CPU/page-cache bound here (no fsync), but the
+        # CPU/disk balance still varies across runners — give this stat a
+        # wider band; a regression to blocking writes is ~6x, far past it
+        gate_threshold=2.0,
+        metric="async_over_sync_stall_ratio",
+        sync_stall_us=sync["stall_us_per_ckpt"],
+        async_stall_us=asyn["stall_us_per_ckpt"],
+        n_checkpoints=asyn["n_checkpoints"],
+        n=asyn["n"], m=asyn["m"], k=asyn["k"],
+    )
+    _record(json_path, {
+        "ckpt_sync": sync, "ckpt_async": asyn,
+        "ckpt_stall_ratio": ratio_entry,
+    })
+
+
 def main(argv=None, quick=None):
     if quick is not None and argv is None:  # benchmarks/run.py entry
         argv = ["--quick"] if quick else []
@@ -289,7 +375,8 @@ def main(argv=None, quick=None):
         return
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode",
-                    choices=("ref", "fused", "dist", "plastic", "all"),
+                    choices=("ref", "fused", "dist", "plastic", "ckpt",
+                             "all"),
                     default="ref")
     ap.add_argument("--scale", type=float, default=None,
                     help="microcircuit scale (default per mode)")
@@ -317,6 +404,14 @@ def main(argv=None, quick=None):
         n_plastic = 160 if args.quick else 400
         k = args.k if args.k is not None else 2
         main_plastic(n_plastic, pallas_steps, k, args.json)
+    if args.mode in ("ckpt", "all"):
+        ck_scale = args.scale if args.scale is not None else (
+            0.01 if args.quick else 0.02
+        )
+        # 10 checkpoints either way: the gated stat is a median, which
+        # needs enough samples to shrug off CI-runner IO hiccups
+        ck_steps = 120 if args.quick else 200
+        main_ckpt(ck_scale, ck_steps, 12 if args.quick else 20, args.json)
     if args.mode in ("ref", "all"):
         scale = args.scale if args.scale is not None else (
             0.01 if args.quick else 0.03

@@ -2,11 +2,15 @@
 checkpoints, interop adapters."""
 from .dcsr_text import save_text, load_text  # noqa: F401
 from .dcsr_binary import (  # noqa: F401
+    NetSnapshot,
     save_binary,
     load_binary,
     load_latest_valid,
+    snapshot_network,
     snapshot_steps,
+    write_snapshot,
 )
+from .async_writer import AsyncWriter  # noqa: F401
 from .checkpoint import CheckpointManager, atomic_dir  # noqa: F401
 from .interop import (  # noqa: F401
     to_adjacency_dict,

@@ -1,0 +1,127 @@
+"""Shared background checkpoint writer.
+
+Extracted from ``CheckpointManager`` so the paper's own dCSR snapshot
+format gets the same async treatment as the training-side tensor
+checkpoints: the caller snapshots state to host buffers (cheap D2H +
+copies), enqueues a write job, and keeps computing while the previous
+snapshot flushes to disk.
+
+One daemon worker drains the queue strictly in submission order, so a
+``wait=True`` save routed through ``submit`` + :meth:`wait` can never land
+*before* an earlier queued step (the ordering bug an inline write next to
+a live queue had).  Job exceptions never kill the worker; they are stored
+and re-raised on the caller's thread by :meth:`check` / :meth:`wait` /
+:meth:`close` — the "surfaced on the next checkpoint boundary" contract.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, List, Optional
+
+
+class AsyncWriter:
+    """Single background worker executing submitted jobs in FIFO order.
+
+    ``max_pending`` bounds the queue: when the writer falls behind by that
+    many jobs, ``submit`` blocks until the worker catches up —
+    backpressure instead of unbounded snapshot accumulation in host
+    memory (each queued checkpoint job holds a full state copy).  The
+    default (0) is unbounded."""
+
+    def __init__(self, name: str = "async-ckpt-writer",
+                 max_pending: int = 0):
+        self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
+        self._err: List[BaseException] = []
+        self._closed = False
+        self._worker: Optional[threading.Thread] = threading.Thread(
+            target=self._drain, daemon=True, name=name
+        )
+        self._worker.start()
+
+    # ------------------------------------------------------------- submit
+    def submit(self, fn: Callable, *args: Any, **kwargs: Any) -> None:
+        """Enqueue ``fn(*args, **kwargs)`` for the background worker;
+        blocks when ``max_pending`` jobs are already waiting.  The
+        arguments must be safe to use after return (host copies, not
+        live mutable state)."""
+        if self._closed:
+            raise RuntimeError("AsyncWriter is closed")
+        self._q.put((fn, args, kwargs))
+
+    def _drain(self) -> None:
+        while True:
+            job = self._q.get()
+            try:
+                if job is None:
+                    return
+                fn, args, kwargs = job
+                try:
+                    fn(*args, **kwargs)
+                except BaseException as e:  # surfaced by check()/wait()
+                    self._err.append(e)
+            finally:
+                self._q.task_done()
+
+    # ------------------------------------------------------------ surface
+    def check(self) -> None:
+        """Re-raise the oldest pending background error (non-blocking);
+        no-op when every completed job succeeded."""
+        if self._err:
+            raise self._err.pop(0)
+
+    def wait(self) -> None:
+        """Block until every queued job has run, then surface errors."""
+        self._q.join()
+        self.check()
+
+    @property
+    def pending(self) -> int:
+        """Jobs submitted but not yet finished (approximate)."""
+        return self._q.unfinished_tasks
+
+    def close(self, drain: bool = True, timeout: float = 60.0) -> None:
+        """Stop the worker.  ``drain=True`` (default) waits up to
+        ``timeout`` seconds for queued jobs to finish (the worker
+        processes the FIFO queue, then the stop sentinel) and re-raises
+        any background error; if a write is still stuck after the timeout
+        (e.g. stalled storage) a ``RuntimeWarning`` is emitted and close
+        returns — shutdown stays bounded, the daemon worker keeps
+        flushing until interpreter exit.  ``drain=False`` lets queued
+        jobs run without blocking on their completion (it may still wait
+        briefly for a queue slot to enqueue the stop sentinel)."""
+        if self._worker is None:
+            return
+        self._closed = True
+        worker, self._worker = self._worker, None
+        try:
+            # a full queue normally frees a slot as the worker drains, so
+            # wait up to the timeout for the sentinel even when
+            # drain=False (the Session-finalizer path) — giving up early
+            # would leak the worker this call exists to reclaim.  Only a
+            # write stuck past the timeout (dead storage) leaves the
+            # daemon running, with a warning.
+            self._q.put(None, timeout=timeout)
+        except queue.Full:
+            import warnings
+
+            warnings.warn(
+                f"AsyncWriter.close: queue still full after {timeout}s "
+                "(stuck background write?); worker left running as a "
+                "daemon",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        if drain:
+            worker.join(timeout=timeout)
+            if worker.is_alive():
+                import warnings
+
+                warnings.warn(
+                    f"AsyncWriter.close: background writes still in "
+                    f"flight after {timeout}s; continuing shutdown "
+                    "without them (daemon worker keeps flushing)",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+            self.check()

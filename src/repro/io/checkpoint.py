@@ -23,15 +23,15 @@ from __future__ import annotations
 import contextlib
 import json
 import os
-import queue
 import re
 import shutil
-import threading
 import zlib
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from .async_writer import AsyncWriter
 
 
 def _crc_bytes(b: bytes) -> int:
@@ -45,11 +45,23 @@ def atomic_dir(final: str) -> Iterator[str]:
     partially-written ``final``, and at every instant a complete snapshot
     exists on disk (the previous one is renamed aside to ``<final>.old``
     before the swap, never deleted first; stale ``.tmp``/``.old`` dirs from
-    an earlier crash are cleared on the next write).  Shared by the tensor
-    checkpoints here and the dCSR snapshot writer (io/dcsr_binary,
-    snn/session)."""
+    an earlier crash are cleared on the next write).
+
+    A crash *between* the two renames of the swap leaves only
+    ``<final>.old`` holding the complete previous snapshot.  The next
+    write through here finishes the interrupted swap (``.old`` → final)
+    before clearing stale dirs, and the restore walkers
+    (``load_latest_valid``, ``CheckpointManager.restore_latest_valid``)
+    fall back to ``.old`` themselves — so the docstring's guarantee holds
+    at restore time too, not just on the writer's happy path.  Shared by
+    the tensor checkpoints here and the dCSR snapshot writer
+    (io/dcsr_binary, snn/session)."""
     tmp = final + ".tmp"
     old = final + ".old"
+    if os.path.exists(old) and not os.path.exists(final):
+        # a crash between the two swap renames left .old as the only
+        # complete snapshot: finish that swap instead of deleting it
+        os.replace(old, final)
     for stale in (tmp, old):
         if os.path.exists(stale):
             shutil.rmtree(stale)
@@ -63,12 +75,21 @@ def atomic_dir(final: str) -> Iterator[str]:
         os.replace(tmp, final)
 
 
-def _leaf_paths(tree: Any) -> List[str]:
-    paths, _ = zip(
-        *jax.tree_util.tree_flatten_with_path(tree)[0]
-    ) if jax.tree_util.tree_leaves(tree) else ((), None)
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    return [jax.tree_util.keystr(kp) for kp, _ in flat]
+def step_candidates(root: str) -> List[Tuple[int, bool, str]]:
+    """``(step, is_old, dir)`` for every ``step_XXXXXXXX[.old]`` dir under
+    ``root`` holding a manifest — the one directory scan shared by the
+    tensor-checkpoint and dCSR-snapshot restore walkers (``.old`` entries
+    are torn-swap survivors, see :func:`atomic_dir`)."""
+    out: List[Tuple[int, bool, str]] = []
+    if not os.path.isdir(root):
+        return out
+    for fn in os.listdir(root):
+        m = re.fullmatch(r"step_(\d+)(\.old)?", fn)
+        if m and os.path.exists(os.path.join(root, fn, "manifest.json")):
+            out.append(
+                (int(m.group(1)), bool(m.group(2)), os.path.join(root, fn))
+            )
+    return out
 
 
 class CheckpointManager:
@@ -77,23 +98,29 @@ class CheckpointManager:
         root: str,
         max_to_keep: int = 3,
         async_write: bool = True,
+        max_pending: int = 8,
     ):
+        """``max_pending`` bounds the async write queue: each queued save
+        holds a full host copy of the tree, so when the disk falls behind
+        the save cadence, ``save`` blocks (backpressure) instead of
+        accumulating snapshots until the host OOMs.  0 = unbounded."""
         self.root = root
         self.max_to_keep = max_to_keep
         self.async_write = async_write
         os.makedirs(root, exist_ok=True)
-        self._q: "queue.Queue" = queue.Queue()
-        self._err: List[BaseException] = []
-        self._worker: Optional[threading.Thread] = None
-        if async_write:
-            self._worker = threading.Thread(
-                target=self._drain, daemon=True
-            )
-            self._worker.start()
+        self._writer: Optional[AsyncWriter] = (
+            AsyncWriter(name="tensor-ckpt-writer", max_pending=max_pending)
+            if async_write else None
+        )
 
     # ---------------------------------------------------------------- save
     def save(self, step: int, tree: Any, wait: bool = False) -> str:
-        """Snapshot host-side immediately; write in background (or inline)."""
+        """Snapshot host-side immediately; write in background (or inline).
+
+        On an async manager ``wait=True`` still routes through the queue
+        (then drains it), so earlier queued steps always land *before*
+        this one — an inline write next to a live queue let a newer step
+        land (and trigger ``_gc``) ahead of an older queued one."""
         leaves = jax.tree_util.tree_leaves(tree)
         flat = jax.tree_util.tree_flatten_with_path(tree)[0]
         names = [jax.tree_util.keystr(kp) for kp, _ in flat]
@@ -114,23 +141,13 @@ class CheckpointManager:
                      [(tuple(slice(None) for _ in a.shape), a)])
                 )
         job = (step, names, snap)
-        if self.async_write and not wait:
-            self._q.put(job)
+        if self._writer is not None:
+            self._writer.submit(self._write, job)
+            if wait:
+                self._writer.wait()
         else:
             self._write(job)
         return self.step_dir(step)
-
-    def _drain(self):
-        while True:
-            job = self._q.get()
-            if job is None:
-                return
-            try:
-                self._write(job)
-            except BaseException as e:  # surfaced by wait()
-                self._err.append(e)
-            finally:
-                self._q.task_done()
 
     def _write(self, job):
         step, names, snap = job
@@ -183,7 +200,7 @@ class CheckpointManager:
             step = self.latest_step()
             if step is None:
                 raise FileNotFoundError(f"no checkpoints under {self.root}")
-        d = self.step_dir(step)
+        d = self._resolve_step_dir(step)
         with open(os.path.join(d, "manifest.json")) as f:
             man = json.load(f)
         arrays = []
@@ -238,15 +255,20 @@ class CheckpointManager:
     def step_dir(self, step: int) -> str:
         return os.path.join(self.root, f"step_{step:08d}")
 
+    def _resolve_step_dir(self, step: int) -> str:
+        """The step's readable directory: the final dir, or its ``.old``
+        sibling when a crash between atomic_dir's two swap renames left
+        only that (the torn-swap window)."""
+        d = self.step_dir(step)
+        if os.path.exists(os.path.join(d, "manifest.json")):
+            return d
+        old = d + ".old"
+        if os.path.exists(os.path.join(old, "manifest.json")):
+            return old
+        return d
+
     def all_steps(self) -> List[int]:
-        out = []
-        for fn in os.listdir(self.root):
-            m = re.fullmatch(r"step_(\d+)", fn)
-            if m and os.path.exists(
-                os.path.join(self.root, fn, "manifest.json")
-            ):
-                out.append(int(m.group(1)))
-        return sorted(out)
+        return sorted({s for s, _, _ in step_candidates(self.root)})
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
@@ -254,17 +276,16 @@ class CheckpointManager:
 
     def wait(self):
         """Block until queued writes land; re-raise background errors."""
-        self._q.join()
-        if self._err:
-            raise self._err.pop()
+        if self._writer is not None:
+            self._writer.wait()
 
     def _gc(self):
         steps = self.all_steps()
         for s in steps[: -self.max_to_keep]:
             shutil.rmtree(self.step_dir(s), ignore_errors=True)
+            shutil.rmtree(self.step_dir(s) + ".old", ignore_errors=True)
 
     def close(self):
-        if self._worker is not None:
-            self._q.put(None)
-            self._worker.join(timeout=10)
-            self._worker = None
+        if self._writer is not None:
+            self._writer.close()
+            self._writer = None

@@ -7,28 +7,46 @@ dictionary, meta, the step counter and a CRC32 per file — corruption of any
 shard is detected at restore and surfaced so the driver can fall back to the
 previous complete checkpoint.
 
+The write path is split in two so it can run asynchronously
+(``snn/session.py`` + ``io/async_writer.py``):
+
+  * :func:`snapshot_network` captures everything a snapshot needs into
+    host-side **copies** (a :class:`NetSnapshot`) — safe to hand to a
+    background writer while the live ``net.parts`` keep mutating under
+    ``sync_to_dcsr``;
+  * :func:`write_snapshot` serializes a ``NetSnapshot``, writing the
+    ``part<p>.npz`` shards with a thread pool (one writer per partition —
+    the paper's "performed largely independently between parallel
+    processes") and the manifest last.
+
+``save_binary`` composes the two synchronously and keeps its historical
+signature; sync and async checkpoints therefore share one serializer and
+are bit-identical on disk.
+
 ``save_binary(..., atomic=True)`` stages the snapshot in a ``.tmp`` sibling
-and swaps it in with one ``os.replace`` (io/checkpoint's scheme), so a crash
+and swaps it in with ``os.replace`` (io/checkpoint's scheme), so a crash
 mid-write never clobbers the previous complete snapshot.
 :func:`load_latest_valid` is the fault-tolerant restore entry: it accepts
 either a single snapshot directory or a root of ``step_XXXXXXXX`` snapshot
 dirs (as written by ``Session.run(checkpoint_every=...)``) and walks
-newest-first past corrupt/truncated steps.
+newest-first past corrupt/truncated steps, falling back to a ``.old``
+sibling when a crash inside ``atomic_dir``'s swap window left only that.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
-import re
 import zipfile
 import zlib
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.dcsr import DCSRNetwork, DCSRPartition
 from ..core.state import ModelRegistry
-from .checkpoint import atomic_dir
+from .checkpoint import atomic_dir, step_candidates
 
 
 def _crc(path: str) -> int:
@@ -41,41 +59,48 @@ def _crc(path: str) -> int:
             c = zlib.crc32(chunk, c)
 
 
-def save_binary(
+@dataclasses.dataclass
+class NetSnapshot:
+    """Host-side capture of one dCSR snapshot, decoupled from the live
+    network: ``parts`` maps part_id -> the arrays its ``part<p>.npz``
+    shard will hold (mutable state copied; immutable topology referenced),
+    ``manifest`` is everything but the per-file CRCs (computed at write
+    time)."""
+
+    parts: List[Tuple[int, Dict[str, np.ndarray]]]
+    manifest: Dict
+
+
+def snapshot_network(
     net: DCSRNetwork,
-    path: str,
     sim_state: Optional[Dict[int, Dict[str, np.ndarray]]] = None,
     t_now: int = 0,
-    atomic: bool = False,
-) -> None:
-    """``sim_state[p]`` may carry per-partition runtime arrays
-    (ring, hist, tr_plus, tr_minus) to make restarts exact.
+) -> NetSnapshot:
+    """Capture ``net`` (+ optional per-partition runtime arrays) into a
+    :class:`NetSnapshot` of host buffers.
 
-    ``atomic=True`` writes through a tmp dir + ``os.replace`` so ``path``
-    only ever holds a complete snapshot."""
-    if atomic:
-        with atomic_dir(path) as tmp:
-            _write_snapshot(net, tmp, sim_state, t_now)
-        return
-    os.makedirs(path, exist_ok=True)
-    _write_snapshot(net, path, sim_state, t_now)
-
-
-def _write_snapshot(net, path, sim_state, t_now):
-    crcs = {}
+    Arrays the engines mutate between checkpoints (``vtx_state``,
+    ``edge_state`` — rewritten in place by ``sync_to_dcsr`` /
+    ``scatter_weights_back`` — and the ``sim_*`` runtime arrays, which may
+    be zero-copy views of device buffers) are **copied**; the topology
+    arrays (row_ptr, col_idx, models, coords, global_ids) are immutable
+    for the lifetime of a session and are referenced.  The result is
+    race-free against continued simulation and a later ``sync_to_dcsr``.
+    """
+    parts: List[Tuple[int, Dict[str, np.ndarray]]] = []
     for part in net.parts:
-        fn = os.path.join(path, f"part{part.part_id}.npz")
         arrs = dict(
             row_ptr=part.row_ptr, col_idx=part.col_idx,
-            vtx_model=part.vtx_model, vtx_state=part.vtx_state,
-            edge_model=part.edge_model, edge_state=part.edge_state,
+            vtx_model=part.vtx_model,
+            vtx_state=np.array(part.vtx_state, copy=True),
+            edge_model=part.edge_model,
+            edge_state=np.array(part.edge_state, copy=True),
             coords=part.coords, global_ids=part.global_ids,
         )
         if sim_state and part.part_id in sim_state:
             for k, v in sim_state[part.part_id].items():
-                arrs[f"sim_{k}"] = np.asarray(v)
-        np.savez(fn, **arrs)
-        crcs[f"part{part.part_id}.npz"] = _crc(fn)
+                arrs[f"sim_{k}"] = np.array(v, copy=True)
+        parts.append((part.part_id, arrs))
     manifest = dict(
         k=net.k, n=net.n, m=net.m,
         dist=[int(x) for x in net.dist],
@@ -91,12 +116,70 @@ def _write_snapshot(net, path, sim_state, t_now):
             + list(net.registry.edge_models())
             if s.state_vars
         },
-        crc=crcs,
     )
+    return NetSnapshot(parts=parts, manifest=manifest)
+
+
+def write_snapshot(
+    snap: NetSnapshot,
+    path: str,
+    atomic: bool = False,
+    max_workers: Optional[int] = None,
+) -> None:
+    """Serialize a :class:`NetSnapshot` to ``path``.
+
+    The ``part<p>.npz`` shards are written concurrently by a thread pool
+    (by default one writer per partition, capped at the host's CPU
+    count); the manifest — whose presence marks the snapshot complete —
+    is written last, after every shard (and its CRC) landed."""
+    if atomic:
+        with atomic_dir(path) as tmp:
+            _write_snapshot_dir(snap, tmp, max_workers)
+        return
+    os.makedirs(path, exist_ok=True)
+    _write_snapshot_dir(snap, path, max_workers)
+
+
+def _write_part(path: str, item: Tuple[int, Dict[str, np.ndarray]]):
+    part_id, arrs = item
+    fn = f"part{part_id}.npz"
+    full = os.path.join(path, fn)
+    np.savez(full, **arrs)
+    return fn, _crc(full)
+
+
+def _write_snapshot_dir(snap: NetSnapshot, path, max_workers=None):
+    if max_workers is None:
+        max_workers = max(min(len(snap.parts), os.cpu_count() or 1), 1)
+    if max_workers > 1 and len(snap.parts) > 1:
+        with ThreadPoolExecutor(max_workers=max_workers) as pool:
+            crcs = dict(
+                pool.map(lambda it: _write_part(path, it), snap.parts)
+            )
+    else:
+        crcs = dict(_write_part(path, it) for it in snap.parts)
+    manifest = dict(snap.manifest, crc=crcs)
     tmp = os.path.join(path, "manifest.json.tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f)
     os.replace(tmp, os.path.join(path, "manifest.json"))
+
+
+def save_binary(
+    net: DCSRNetwork,
+    path: str,
+    sim_state: Optional[Dict[int, Dict[str, np.ndarray]]] = None,
+    t_now: int = 0,
+    atomic: bool = False,
+) -> None:
+    """``sim_state[p]`` may carry per-partition runtime arrays
+    (ring, hist, tr_plus, tr_minus) to make restarts exact.
+
+    ``atomic=True`` writes through a tmp dir + ``os.replace`` so ``path``
+    only ever holds a complete snapshot.  This is the synchronous
+    composition of :func:`snapshot_network` + :func:`write_snapshot`."""
+    write_snapshot(snapshot_network(net, sim_state, t_now), path,
+                   atomic=atomic)
 
 
 def load_binary(
@@ -145,15 +228,19 @@ def load_binary(
 
 def snapshot_steps(root: str) -> List[int]:
     """Step numbers of ``step_XXXXXXXX`` snapshot dirs under ``root`` that
-    at least have a manifest (sorted ascending)."""
-    out = []
-    if not os.path.isdir(root):
-        return out
-    for fn in os.listdir(root):
-        m = re.fullmatch(r"step_(\d+)", fn)
-        if m and os.path.exists(os.path.join(root, fn, "manifest.json")):
-            out.append(int(m.group(1)))
-    return sorted(out)
+    at least have a manifest (sorted ascending).  A step surviving only as
+    its ``step_XXXXXXXX.old`` sibling (crash inside the atomic-swap
+    window) counts too — ``load_latest_valid`` knows how to read it."""
+    return sorted({s for s, _, _ in step_candidates(root)})
+
+
+def _snapshot_dir_candidates(root: str) -> List[Tuple[int, str]]:
+    """(step, dir) restore candidates under ``root``, newest step first;
+    within a step the final dir is tried before its ``.old`` sibling (the
+    torn-swap fallback)."""
+    cands = step_candidates(root)
+    cands.sort(key=lambda c: (-c[0], c[1]))
+    return [(step, d) for step, _, d in cands]
 
 
 def load_latest_valid(
@@ -161,21 +248,37 @@ def load_latest_valid(
 ) -> Tuple[DCSRNetwork, Dict[int, Dict[str, np.ndarray]], int]:
     """Fault-tolerant snapshot restore.
 
-    ``path`` is either one snapshot dir (has ``manifest.json``) or a root of
-    ``step_XXXXXXXX`` snapshot dirs; in the latter case steps are tried
+    ``path`` is either one snapshot dir (has ``manifest.json``) or a root
+    of ``step_XXXXXXXX`` snapshot dirs; in the latter case steps are tried
     newest-first and corrupt/truncated ones (CRC mismatch, torn manifest,
     missing shard) are skipped — the dCSR analogue of
-    ``CheckpointManager.restore_latest_valid``.
+    ``CheckpointManager.restore_latest_valid``.  In both forms a snapshot
+    that exists only as ``<dir>.old`` — the window where a crash hit
+    ``atomic_dir`` between renaming the previous snapshot aside and
+    renaming the new one in — is found and restored, so "at every instant
+    a complete snapshot exists on disk" holds at restore time too.
     """
+    old = os.fspath(path) + ".old"
+    has_old = os.path.exists(os.path.join(old, "manifest.json"))
     if os.path.exists(os.path.join(path, "manifest.json")):
-        return load_binary(path, verify=verify)
-    steps = snapshot_steps(path)
-    for step in reversed(steps):
         try:
-            return load_binary(
-                os.path.join(path, f"step_{step:08d}"), verify=verify
-            )
+            return load_binary(path, verify=verify)
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile,
+                AssertionError):
+            # corrupt final with an intact .old sibling (crash after the
+            # swap but before the .old cleanup, then bit rot): fall back
+            # like the step-root walk does
+            if has_old:
+                return load_binary(old, verify=verify)
+            raise
+    cands = _snapshot_dir_candidates(os.fspath(path))
+    for _step, d in cands:
+        try:
+            return load_binary(d, verify=verify)
         except (OSError, ValueError, KeyError, zipfile.BadZipFile,
                 AssertionError):
             continue
+    if not cands and has_old:
+        # single-snapshot form, torn mid-swap: only the .old survived
+        return load_binary(old, verify=verify)
     raise FileNotFoundError(f"no valid dCSR snapshot under {path!r}")

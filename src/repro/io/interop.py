@@ -39,7 +39,10 @@ def from_adjacency_dict(
     for s, nbrs in adj.items():
         for d, attrs in nbrs.items():
             n = max(n, d + 1)
-            for _ in range(int(attrs.get("multiplicity", 1)) or 1):
+            # absent multiplicity means one edge; an explicit 0 means NO
+            # edge (it used to be coerced to 1 via `or 1`)
+            mult = attrs.get("multiplicity")
+            for _ in range(1 if mult is None else int(mult)):
                 srcs.append(s)
                 dsts.append(d)
                 ws.append(float(attrs.get("weight", 1.0)))

@@ -43,6 +43,11 @@ def main(argv=None):
     engine = "spmd" if args.distributed else "auto"
     if args.snapshot_dir and (
         os.path.exists(os.path.join(args.snapshot_dir, "manifest.json"))
+        # torn atomic swap: only <dir>.old survived — restorable, and a
+        # fresh start here would overwrite (and delete) it
+        or os.path.exists(
+            os.path.join(args.snapshot_dir + ".old", "manifest.json")
+        )
         or snapshot_steps(args.snapshot_dir)
     ):
         # fault-tolerant resume: walks newest-first past corrupt steps

@@ -147,6 +147,7 @@ class DistSimulator:
     def __init__(self, net: DCSRNetwork, cfg: SimConfig = SimConfig(),
                  mesh: Optional[Mesh] = None):
         self._compiled: Dict[int, Tuple] = {}  # steps -> (jitted fn, args)
+        self._sync_ells: Optional[List] = None  # per-part ELLs for sync
         self.net = net
         self.cfg = cfg
         self.dt = float(net.meta.get("dt", 0.1))
@@ -406,16 +407,28 @@ class DistSimulator:
 
     # -- dCSR sync ---------------------------------------------------------
     def state_to_dcsr(self, state: Dict) -> None:
-        """Write distributed state back into the dCSR partitions (host)."""
+        """Write distributed state back into the dCSR partitions (host),
+        in place — callers that hand the partitions to a background
+        writer must snapshot-copy first (``io.dcsr_binary
+        .snapshot_network``).  The per-partition ELL index structures are
+        built once and cached: they depend only on topology, and
+        rebuilding them dominated checkpoint stall on the old
+        every-save path."""
         s = self.stacked
+        if self._sync_ells is None:
+            self._sync_ells = [
+                build_delay_ell(
+                    part, self.net.n, align_k=self.cfg.align_k,
+                    align_rows=self.cfg.align_rows,
+                )
+                for part in self.net.parts
+            ]
         vtx = np.asarray(state["vtx_state"])
         weights = [np.asarray(w) for w in state["weights"]]
-        for p_i, part in enumerate(self.net.parts):
+        for p_i, (part, ell) in enumerate(
+            zip(self.net.parts, self._sync_ells)
+        ):
             part.vtx_state = vtx[p_i, : part.n]
-            ell = build_delay_ell(
-                part, self.net.n, align_k=self.cfg.align_k,
-                align_rows=self.cfg.align_rows,
-            )
             new_w = []
             for b in ell.buckets:
                 di = s.delays.index(b.delay)
@@ -426,7 +439,9 @@ class DistSimulator:
 
     def runtime_state(self, state: Dict) -> Dict[int, Dict[str, np.ndarray]]:
         """In-flight runtime arrays (ring/hist/traces) keyed per partition —
-        the serialization side-channel next to the dCSR snapshot."""
+        the serialization side-channel next to the dCSR snapshot.  The
+        arrays may be zero-copy views of device buffers; the snapshot
+        layer copies them before any background write."""
         from .reshard import stack_runtime
 
         return stack_runtime(state, self.stacked.k)

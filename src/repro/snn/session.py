@@ -43,6 +43,23 @@ instant a complete snapshot exists on disk):
     interop), and STDP traces (``tr_plus``/``tr_minus``);
   * ``t_now`` and the model dictionary in ``manifest.json``.
 
+Checkpoint writes are **asynchronous**: ``save`` synchronously syncs the
+device state and captures a host-side *copy* of everything the snapshot
+needs (``io.dcsr_binary.snapshot_network`` — race-free against continued
+simulation, which keeps mutating the live ``net.parts``), then enqueues
+the file write on a background :class:`repro.io.AsyncWriter`; the
+``part<p>.npz`` shards are written by a thread pool, one writer per
+partition (the paper's "performed largely independently between parallel
+processes").  ``save(wait=True)`` (the default) drains the queue before
+returning — the snapshot, and every previously queued one, is durable.
+``run(checkpoint_every=...)`` saves with ``wait=False`` so the simulation
+loop keeps advancing while the previous snapshot flushes; call
+:meth:`Session.wait` (or ``close()``, or leave a ``with Session(...)``
+block) to make queued checkpoints durable.  A background write failure is
+re-raised on the caller's thread at the next checkpoint boundary or in
+``wait()``/``close()`` — never swallowed.  Sync and async writes share
+one serializer, so the bytes on disk are identical.
+
 ``Session.restore(path, k=...)`` is **elastic**: because simulation noise
 is a pure function of ``(seed, t, permanent neuron id)`` and runtime arrays
 are row-aligned, a snapshot taken at one k restores onto any other k
@@ -65,11 +82,11 @@ Typical use::
     from repro.snn.monitors import RasterMonitor
 
     net = to_dcsr(microcircuit(scale=0.01), k=4)
-    ses = Session(net, SimConfig())
-    raster = RasterMonitor()
-    res = ses.run(1000, monitors=[raster], checkpoint_every=200,
-                  checkpoint_dir="ckpts")
-    ses.save("final")                       # one-call snapshot
+    with Session(net, SimConfig()) as ses:  # exit drains queued writes
+        raster = RasterMonitor()
+        res = ses.run(1000, monitors=[raster], checkpoint_every=200,
+                      checkpoint_dir="ckpts")   # async, non-blocking
+        ses.save("final")                   # one-call snapshot (durable)
     ses2 = Session.restore("final", k=2)    # elastic restart on k=2
 """
 from __future__ import annotations
@@ -78,7 +95,9 @@ import collections.abc
 import dataclasses
 import os
 import shutil
+import time
 import warnings
+import weakref
 from typing import Dict, Iterable, Optional, Protocol, Tuple
 
 import jax
@@ -87,7 +106,10 @@ import numpy as np
 
 from ..core.dcsr import DCSRNetwork, merge_to_single
 from ..core.partition import block_partition
-from ..io.dcsr_binary import load_latest_valid, save_binary, snapshot_steps
+from ..io.async_writer import AsyncWriter
+from ..io.dcsr_binary import (
+    load_latest_valid, snapshot_network, snapshot_steps, write_snapshot,
+)
 from .dist_sim import DistSimulator
 from .reshard import RUNTIME_KEYS, concat_runtime, reshard_sim_state
 from .simulator import SimConfig, Simulator
@@ -297,6 +319,10 @@ class Session:
         self._t0 = int(t_now)
         self._pending_runtime = sim_state if sim_state else None
         self.last_run_chunks: Tuple[int, ...] = ()
+        # run-loop stall (seconds) of each checkpoint taken by the last
+        # run(checkpoint_every=...): what --mode ckpt benchmarks
+        self.last_ckpt_stalls: Tuple[float, ...] = ()
+        self._writer: Optional[AsyncWriter] = None
         # eager engine build: surfaces SimConfig/backend errors at
         # construction and fixes dt/d_ring for save()
         self._engine(self.cfg.record_raster, self.cfg.record_v)
@@ -433,6 +459,7 @@ class Session:
         checkpoint_every: Optional[int] = None,
         checkpoint_dir: Optional[str] = None,
         max_to_keep: Optional[int] = None,
+        checkpoint_sync: bool = False,
     ) -> RunResult:
         """Advance the simulation ``steps`` steps as a chunked scan.
 
@@ -444,6 +471,21 @@ class Session:
         aligned to checkpoint boundaries); ``max_to_keep`` garbage-collects
         older step snapshots.  Chunking is bit-transparent: the trajectory
         is identical for any ``chunk_size``.
+
+        Checkpoints are taken **asynchronously** by default: the loop only
+        pays for the device→host sync plus a host-side snapshot copy, and
+        keeps simulating while the background writer flushes the previous
+        snapshot's ``part<p>.npz`` shards (a thread pool, one writer per
+        partition).  After ``run`` returns the last checkpoints may still
+        be in flight — ``Session.wait()`` / ``close()`` make them durable;
+        a background write error is re-raised at the next checkpoint
+        boundary or in ``wait()``.  ``checkpoint_sync=True`` restores the
+        fully blocking behaviour (each snapshot durable before the next
+        chunk runs); both paths produce bit-identical snapshots.  The
+        per-checkpoint run-loop stall is recorded in
+        ``self.last_ckpt_stalls`` (seconds) either way —
+        ``benchmarks/spike_throughput.py --mode ckpt`` measures exactly
+        this.
         """
         if steps <= 0:
             raise ValueError(f"steps must be positive, got {steps}")
@@ -468,7 +510,7 @@ class Session:
         t_run0 = self.t
         for mon in monitors:
             mon.begin(self)
-        counts, overflows, chunks = [], [], []
+        counts, overflows, chunks, stalls = [], [], [], []
         done = 0
         next_ckpt = checkpoint_every
         while done < steps:
@@ -484,17 +526,30 @@ class Session:
             chunks.append(c)
             done += c
             if next_ckpt is not None and done == next_ckpt:
+                t_ck = time.perf_counter()
                 self.save(
                     os.path.join(
                         checkpoint_dir, f"step_{t_run0 + done:08d}"
-                    )
+                    ),
+                    wait=checkpoint_sync,
                 )
                 if max_to_keep:
-                    self._gc_checkpoints(checkpoint_dir, max_to_keep)
+                    # retention rides the same FIFO queue as the writes,
+                    # so GC can never run ahead of an in-flight older step
+                    if checkpoint_sync:
+                        self._gc_checkpoints(checkpoint_dir, max_to_keep)
+                    else:
+                        self._writer_obj().submit(
+                            self._gc_checkpoints, checkpoint_dir,
+                            max_to_keep,
+                        )
+                stalls.append(time.perf_counter() - t_ck)
                 next_ckpt += checkpoint_every
         for mon in monitors:
             mon.finalize()
         self.last_run_chunks = tuple(chunks)
+        if checkpoint_every is not None:
+            self.last_ckpt_stalls = tuple(stalls)
         overflow = np.concatenate(overflows)
         dropped = int(overflow.sum())
         if dropped:
@@ -516,19 +571,88 @@ class Session:
         )
 
     # -- checkpoint / restart ----------------------------------------------
-    def save(self, path: str) -> str:
+    def _writer_obj(self) -> AsyncWriter:
+        if self._writer is None:
+            # bounded queue = backpressure: when the disk falls behind the
+            # checkpoint cadence, save() blocks instead of accumulating an
+            # unbounded number of full host-state snapshots (each boundary
+            # submits a write + optionally a GC job, so 4 pending jobs
+            # ≈ two queued snapshots + the one being written)
+            self._writer = AsyncWriter(
+                name="dcsr-ckpt-writer", max_pending=4
+            )
+            # reclaim the worker thread when a Session is dropped without
+            # close(): queued jobs still flush (FIFO before the sentinel),
+            # but the thread exits instead of leaking one blocked daemon
+            # per abandoned Session
+            weakref.finalize(self, self._writer.close, drain=False)
+        return self._writer
+
+    def save(self, path: str, *, wait: bool = True) -> str:
         """One-call snapshot: sync device state back into the dCSR
-        partitions and write network + in-flight runtime + ``t`` atomically
-        (see the module docstring for exactly what is captured)."""
+        partitions, capture a host-side copy, and write network +
+        in-flight runtime + ``t`` atomically (see the module docstring for
+        exactly what is captured).
+
+        What is guaranteed at return:
+
+        * always — the snapshot content is *captured*: a later step, GC,
+          or another ``save`` cannot change what this snapshot will hold,
+          and any background error from a previous ``save`` has been
+          re-raised here;
+        * ``wait=True`` (default) — this snapshot and every previously
+          enqueued one are durable on disk (the write queue is drained in
+          FIFO order, so no newer step ever lands before an older one);
+        * ``wait=False`` — the write is in flight on the background
+          writer; ``Session.wait()`` / ``close()`` make it durable.
+        """
         eng = self._current_engine
         self._ensure_state(eng)
+        if self._writer is not None:
+            self._writer.check()  # surface earlier background failures
         eng.sync_to_dcsr(self._state)
-        save_binary(
-            self.net, path,
-            sim_state=eng.runtime_state(self._state),
-            t_now=self.t, atomic=True,
+        snap = snapshot_network(
+            self.net, eng.runtime_state(self._state), self.t
         )
+        w = self._writer_obj()
+        w.submit(write_snapshot, snap, path, atomic=True)
+        if wait:
+            w.wait()
         return path
+
+    def wait(self) -> None:
+        """Drain the background checkpoint writer: block until every
+        enqueued snapshot (and retention GC) has landed, re-raising any
+        background write error."""
+        if self._writer is not None:
+            self._writer.wait()
+
+    def close(self) -> None:
+        """Drain the checkpoint queue and stop the background writer
+        (re-raising any pending background error).  The session remains
+        usable afterwards — a later ``save`` starts a fresh writer."""
+        if self._writer is not None:
+            w, self._writer = self._writer, None
+            w.close()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.close()
+        else:
+            try:  # don't mask the in-flight exception with a drain error
+                self.close()
+            except Exception as drain_err:
+                # ...but never swallow it silently either: the user must
+                # learn their checkpoints did not land
+                warnings.warn(
+                    "background checkpoint write failed while unwinding "
+                    f"another exception: {drain_err!r}",
+                    RuntimeWarning,
+                )
+        return False
 
     @classmethod
     def restore(
@@ -564,6 +688,6 @@ class Session:
     @staticmethod
     def _gc_checkpoints(root: str, keep: int) -> None:
         for step in snapshot_steps(root)[:-keep]:
-            shutil.rmtree(
-                os.path.join(root, f"step_{step:08d}"), ignore_errors=True
-            )
+            d = os.path.join(root, f"step_{step:08d}")
+            shutil.rmtree(d, ignore_errors=True)
+            shutil.rmtree(d + ".old", ignore_errors=True)

@@ -470,7 +470,10 @@ class Simulator:
     # -- dCSR sync (simulation state -> serializable network) -------------
     def state_to_dcsr(self, state: Dict) -> None:
         """Write simulation state back into the dCSR partition in place
-        (weights via ELL edge_index, vertex tuples directly)."""
+        (weights via ELL edge_index, vertex tuples directly).  In place
+        means the partition arrays are NOT stable across a later sync —
+        callers handing them to a background writer must snapshot-copy
+        first (``io.dcsr_binary.snapshot_network``)."""
         part = self.net.parts[0]
         part.vtx_state = np.asarray(state["vtx_state"])
         self.ell.update_bucket_weights(
@@ -480,7 +483,9 @@ class Simulator:
 
     def runtime_state(self, state: Dict) -> Dict[int, Dict[str, np.ndarray]]:
         """In-flight runtime arrays (ring/hist/traces) keyed per partition —
-        the serialization side-channel next to the dCSR snapshot."""
+        the serialization side-channel next to the dCSR snapshot.  The
+        arrays may be zero-copy views of device buffers; the snapshot
+        layer copies them before any background write."""
         from .reshard import RUNTIME_KEYS
 
         return {

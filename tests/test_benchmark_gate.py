@@ -109,6 +109,59 @@ def test_normalized_relative_regression_still_fails(reports):
     assert rc == 1
 
 
+def test_dimensionless_mode_gated_raw_under_normalize(reports):
+    """A mode flagged dimensionless (ckpt_stall_ratio: async/sync stall)
+    is compared raw under --normalize: a machine with a different
+    CPU/disk balance (all CPU modes 3x faster, ratio unchanged) passes,
+    while a genuine ratio regression still fails."""
+    base, bpath, cpath = reports
+    base = copy.deepcopy(base)
+    base["modes"]["ckpt_stall_ratio"] = {
+        "us_per_step": 0.2, "dimensionless": True,
+    }
+    _write(bpath, base)
+    cur = copy.deepcopy(base)
+    for name, entry in cur["modes"].items():
+        if name != "ckpt_stall_ratio":
+            entry["us_per_step"] /= 3.0  # faster CPU, same disk ratio
+    _write(cpath, cur)
+    rc = check_regression.main(
+        ["--baseline", bpath, "--current", cpath, "--normalize", "ref"]
+    )
+    assert rc == 0  # raw 0.2 vs 0.2: not distorted by the 3x CPU shift
+    cur["modes"]["ckpt_stall_ratio"]["us_per_step"] = 0.2 * 2  # real loss
+    _write(cpath, cur)
+    rc = check_regression.main(
+        ["--baseline", bpath, "--current", cpath, "--normalize", "ref"]
+    )
+    assert rc == 1
+
+
+def test_gate_threshold_override_widens_band(reports):
+    """A mode may carry its own gate_threshold (noisy stats get a wider
+    band than the global 1.35x): 1.6x passes under a 2.0x override, a
+    past-override regression still fails."""
+    base, bpath, cpath = reports
+    base = copy.deepcopy(base)
+    base["modes"]["ckpt_stall_ratio"] = {
+        "us_per_step": 0.2, "dimensionless": True, "gate_threshold": 2.0,
+    }
+    _write(bpath, base)
+    cur = copy.deepcopy(base)
+    cur["modes"]["ckpt_stall_ratio"]["us_per_step"] = 0.2 * 1.6
+    _write(cpath, cur)
+    rc = check_regression.main(
+        ["--baseline", bpath, "--current", cpath, "--normalize", "ref"]
+    )
+    assert rc == 0  # above the global 1.35x, within the mode's 2.0x
+    cur["modes"]["ckpt_stall_ratio"]["us_per_step"] = 0.2 * 2.5
+    _write(cpath, cur)
+    rc = check_regression.main(
+        ["--baseline", bpath, "--current", cpath, "--normalize", "ref"]
+    )
+    assert rc == 1
+
+
 def test_unshared_modes_are_skipped_not_gated(reports, capsys):
     base, bpath, cpath = reports
     cur = copy.deepcopy(base)

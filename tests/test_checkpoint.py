@@ -1,7 +1,9 @@
-"""Tensor checkpoint manager: round trip, async, retention, corruption
-fallback, node-failure simulation, elastic resharding (subprocess)."""
+"""Tensor checkpoint manager: round trip, async ordering, retention,
+corruption fallback, torn-swap (.old) recovery, node-failure simulation,
+elastic resharding (subprocess)."""
 import json
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +11,7 @@ import numpy as np
 import pytest
 
 from helpers import run_with_devices
-from repro.io import CheckpointManager
+from repro.io import CheckpointManager, atomic_dir
 
 
 def tree():
@@ -103,6 +105,116 @@ def test_node_failure_partial_write(tmp_path):
     assert cm.latest_step() == 1
     _, step = cm.restore_latest_valid(like=t)
     assert step == 1
+
+
+def test_atomic_dir_torn_swap_recovers_on_next_write(tmp_path):
+    """A crash between atomic_dir's two swap renames leaves only
+    ``<final>.old``; the next write completes the interrupted swap before
+    staging (instead of deleting the only complete snapshot)."""
+    final = str(tmp_path / "snap")
+    with atomic_dir(final) as tmp:
+        with open(os.path.join(tmp, "a.txt"), "w") as f:
+            f.write("v1")
+    os.replace(final, final + ".old")  # simulated torn swap
+    with atomic_dir(final) as tmp:
+        # repaired before staging: v1 is back as the complete snapshot,
+        # so a crash during THIS write still leaves one on disk
+        with open(os.path.join(final, "a.txt")) as f:
+            assert f.read() == "v1"
+        with open(os.path.join(tmp, "a.txt"), "w") as f:
+            f.write("v2")
+    with open(os.path.join(final, "a.txt")) as f:
+        assert f.read() == "v2"
+    assert not os.path.exists(final + ".old")
+
+
+def test_manager_torn_swap_restores_from_old(tmp_path):
+    """A step surviving only as ``step_X.old`` is visible to all_steps and
+    restorable — the docstring's 'a complete snapshot always exists'
+    guarantee now holds at restore time."""
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    t = tree()
+    cm.save(1, t, wait=True)
+    cm.save(2, t, wait=True)
+    d = cm.step_dir(2)
+    os.replace(d, d + ".old")  # crash window between the two renames
+    assert cm.all_steps() == [1, 2]
+    assert cm.latest_step() == 2
+    out, step = cm.restore_latest_valid(like=t)
+    assert step == 2
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # explicit-step restore resolves through .old too
+    _, step = cm.restore(2, like=t)
+    assert step == 2
+
+
+def test_manager_gc_removes_old_siblings(tmp_path):
+    cm = CheckpointManager(str(tmp_path), max_to_keep=2, async_write=False)
+    t = tree()
+    cm.save(1, t, wait=True)
+    os.replace(cm.step_dir(1), cm.step_dir(1) + ".old")
+    for s in (2, 3, 4):
+        cm.save(s, t, wait=True)
+    assert cm.all_steps() == [3, 4]
+    assert not os.path.exists(cm.step_dir(1) + ".old")
+
+
+def test_async_wait_save_drains_older_queued_steps(tmp_path):
+    """save(step, wait=True) on an async manager must not jump the queue:
+    earlier queued steps land first, so retention GC sees them in order
+    (an inline write let a newer step land + _gc before an older queued
+    one, leaving a stale older step as the on-disk survivor)."""
+    cm = CheckpointManager(str(tmp_path), max_to_keep=1)
+    orig = cm._write
+
+    def slow_write(job):
+        time.sleep(0.05)  # widen the window the inline write used to win
+        orig(job)
+
+    cm._write = slow_write
+    t = tree()
+    cm.save(1, t)
+    cm.save(2, t, wait=True)
+    # FIFO order + GC after the newest: only step 2 survives
+    assert cm.all_steps() == [2]
+    cm.close()
+
+
+def test_async_writer_close_nodrain_reclaims_worker_despite_full_queue():
+    """close(drain=False) — the Session-finalizer path — must enqueue the
+    stop sentinel even when the bounded queue is momentarily full: the
+    worker drains, the sentinel lands, and the thread exits (no leak)."""
+    import threading
+
+    from repro.io import AsyncWriter
+
+    release = threading.Event()
+    w = AsyncWriter(max_pending=1)
+    w.submit(release.wait)   # occupies the worker
+    w.submit(time.sleep, 0)  # fills the one-slot queue
+    worker = w._worker
+    closer = threading.Thread(target=w.close, kwargs=dict(drain=False))
+    closer.start()
+    time.sleep(0.05)         # closer is waiting on the full queue
+    release.set()            # worker drains; sentinel slots in
+    closer.join(timeout=10)
+    assert not closer.is_alive()
+    worker.join(timeout=10)
+    assert not worker.is_alive()
+
+
+def test_manager_background_error_surfaces_on_wait(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+
+    def boom(job):
+        raise IOError("disk on fire")
+
+    cm._write = boom
+    cm.save(1, tree())
+    with pytest.raises(IOError, match="disk on fire"):
+        cm.wait()
+    cm.close()
 
 
 RESHARD = """

@@ -26,6 +26,29 @@ def test_adjacency_dict_roundtrip():
     assert e1 == e2
 
 
+def test_adjacency_zero_multiplicity_means_no_edge():
+    """An explicit multiplicity=0 means NO edge (it used to be coerced to
+    one via `or 1`); an absent multiplicity still means one edge."""
+    adj = {
+        0: {
+            1: dict(weight=2.0, delay=1.0, multiplicity=0),
+            2: dict(weight=1.5, delay=2.0),  # absent -> one edge
+        },
+        1: {2: dict(weight=0.5, delay=1.0, multiplicity=2)},
+        2: {},
+    }
+    d = from_adjacency_dict(adj)
+    assert d.n == 3 and d.m == 3  # 0 + 1 + 2 edges
+    back = to_adjacency_dict(d)
+    assert 1 not in back[0]  # the zero-multiplicity edge never existed
+    assert back[0][2]["multiplicity"] == 1
+    assert back[1][2]["multiplicity"] == 2
+    # round trip again: the multiset is stable
+    d2 = from_adjacency_dict(back, registry=d.registry)
+    assert d2.m == d.m
+    assert to_adjacency_dict(d2) == back
+
+
 def test_parmetis_triple_symmetric():
     net = spatial_random(40, avg_degree=5, seed=2)
     d = to_dcsr(net, k=3)

@@ -162,6 +162,117 @@ def test_load_latest_valid_walks_step_dirs(tmp_path):
         load_latest_valid(str(tmp_path / "missing"))
 
 
+def test_load_latest_valid_single_snapshot_torn_swap(tmp_path):
+    """Crash between atomic_dir's two renames: only ``<dst>.old`` holds a
+    complete snapshot, and load_latest_valid finds it."""
+    from repro.io import load_latest_valid
+
+    net = spatial_random(50, avg_degree=5, seed=2)
+    d = to_dcsr(net, k=1)
+    dst = str(tmp_path / "snap")
+    save_binary(d, dst, t_now=4, atomic=True)
+    os.replace(dst, dst + ".old")  # simulated torn swap
+    _, _, t = load_latest_valid(dst)
+    assert t == 4
+
+
+def test_load_latest_valid_step_root_old_fallback(tmp_path):
+    """In a step root, the newest step surviving only as ``.old`` is
+    preferred over older complete steps; if that shard is corrupt too the
+    walk continues to the previous step."""
+    from repro.io import load_latest_valid, snapshot_steps
+
+    net = spatial_random(50, avg_degree=5, seed=2)
+    d = to_dcsr(net, k=1)
+    for step in (10, 20, 30):
+        save_binary(d, str(tmp_path / f"step_{step:08d}"), t_now=step)
+    newest = str(tmp_path / "step_00000030")
+    os.replace(newest, newest + ".old")
+    assert snapshot_steps(str(tmp_path)) == [10, 20, 30]
+    _, _, t = load_latest_valid(str(tmp_path))
+    assert t == 30
+    fn = os.path.join(newest + ".old", "part0.npz")
+    with open(fn, "r+b") as f:
+        f.truncate(os.path.getsize(fn) // 2)
+    _, _, t = load_latest_valid(str(tmp_path))
+    assert t == 20
+
+
+def test_load_latest_valid_corrupt_final_falls_back_to_old_sibling(tmp_path):
+    """Single-snapshot form: crash after the swap but before the .old
+    cleanup leaves final + .old; if the final later rots, restore falls
+    back to the intact .old instead of raising."""
+    from repro.io import load_latest_valid
+
+    net = spatial_random(50, avg_degree=5, seed=2)
+    d = to_dcsr(net, k=1)
+    dst = str(tmp_path / "snap")
+    save_binary(d, dst + ".old", t_now=4)  # intact previous snapshot
+    save_binary(d, dst, t_now=9)           # newer final...
+    fn = os.path.join(dst, "part0.npz")
+    with open(fn, "r+b") as f:             # ...then bit rot
+        f.truncate(os.path.getsize(fn) // 2)
+    _, _, t = load_latest_valid(dst)
+    assert t == 4
+
+
+def test_write_snapshot_thread_pool_matches_save_binary(tmp_path):
+    """The async path's serializer (snapshot_network + write_snapshot,
+    shards written by a thread pool) produces byte-equivalent snapshots to
+    the synchronous save_binary."""
+    from repro.io import snapshot_network, write_snapshot
+
+    net = spatial_random(90, avg_degree=6, seed=6, stdp=True)
+    d = to_dcsr(net, k=3)
+    rng = np.random.default_rng(1)
+    sim_state = {
+        p.part_id: dict(
+            ring=rng.random((4, p.n)).astype(np.float32),
+            tr_plus=rng.random(p.n).astype(np.float32),
+        )
+        for p in d.parts
+    }
+    a, b = str(tmp_path / "sync"), str(tmp_path / "pool")
+    save_binary(d, a, sim_state=sim_state, t_now=7, atomic=True)
+    write_snapshot(
+        snapshot_network(d, sim_state, t_now=7), b, atomic=True,
+        max_workers=3,
+    )
+    na, sa, ta = load_binary(a)
+    nb, sb, tb = load_binary(b)
+    assert ta == tb == 7
+    _nets_equal(na, nb, atol=0)
+    for p in sa:
+        for key in sa[p]:
+            np.testing.assert_array_equal(sa[p][key], sb[p][key])
+
+
+def test_snapshot_network_copies_survive_mutation(tmp_path):
+    """A NetSnapshot is decoupled from the live net: mutating vtx_state /
+    edge_state / runtime arrays after capture (what sync_to_dcsr and the
+    next chunk do while the background writer flushes) does not change
+    what lands on disk."""
+    from repro.io import snapshot_network, write_snapshot
+
+    net = spatial_random(40, avg_degree=5, seed=3)
+    d = to_dcsr(net, k=1)
+    ring = np.ones((3, d.n), np.float32)
+    want_vtx = d.parts[0].vtx_state.copy()
+    want_edge = d.parts[0].edge_state.copy()
+    snap = snapshot_network(d, {0: dict(ring=ring)}, t_now=2)
+    d.parts[0].vtx_state[:] += 123.0  # in-place, like sync_to_dcsr
+    d.parts[0].edge_state[:, 0] = -1.0
+    ring[:] = 0.0
+    dst = str(tmp_path / "snap")
+    write_snapshot(snap, dst)
+    n2, s2, _ = load_binary(dst)
+    np.testing.assert_array_equal(n2.parts[0].vtx_state, want_vtx)
+    np.testing.assert_array_equal(n2.parts[0].edge_state, want_edge)
+    np.testing.assert_array_equal(
+        s2[0]["ring"], np.ones((3, d.n), np.float32)
+    )
+
+
 def test_storage_linear_in_synapses(tmp_path):
     """The paper's claim: on-disk cost is linear in synapse count and
     independent of partition count."""

@@ -170,6 +170,7 @@ def test_session_checkpoint_every_and_corrupt_walkback(tmp_path):
     ses = Session(build(), cfg)
     ses.run(60, chunk_size=25, checkpoint_every=20, checkpoint_dir=root,
             max_to_keep=2)
+    ses.wait()  # checkpoints are async: drain before inspecting disk
     # chunks align to checkpoint boundaries; retention kept the last two
     assert ses.last_run_chunks == (20, 20, 20)
     assert snapshot_steps(root) == [40, 60]
@@ -197,6 +198,183 @@ def test_session_accepts_snapshot_path(tmp_path):
     ses2 = Session(snap, cfg)  # path form of the constructor
     assert ses2.t == 10
     assert ses2.n == ses.n
+
+
+# -- async checkpoint pipeline ----------------------------------------------
+
+def test_session_async_checkpoint_restore_mid_run_bit_exact(tmp_path):
+    """Acceptance: an async-checkpointed plastic run restores from a
+    ``step_XXXXXXXX`` root mid-run and continues bit-exactly (raster,
+    spike_count, weights, traces) — onto the same AND a different k."""
+    def build():
+        net = balanced_ei(120, stdp=True, seed=3)
+        net.vtx_state[:, 2] += 6.0  # drive activity through STDP
+        return to_dcsr(net, k=1)
+
+    cfg = SimConfig(align_k=8)
+    root = str(tmp_path / "ckpts")
+    with Session(build(), cfg) as ses:
+        ses.run(60, chunk_size=20, checkpoint_every=20,
+                checkpoint_dir=root)
+        assert len(ses.last_ckpt_stalls) == 3
+    # leaving the with-block drained the background writer
+    assert snapshot_steps(root) == [20, 40, 60]
+
+    ref = Session(build(), cfg)
+    rr = RasterMonitor()
+    ref.run(90, monitors=[rr], chunk_size=90)
+
+    # same k: restore from the step root (newest step), continue 30
+    ses2 = Session.restore(root, cfg=cfg)
+    assert ses2.t == 60
+    r2 = RasterMonitor()
+    res2 = ses2.run(30, monitors=[r2], chunk_size=30)
+    np.testing.assert_array_equal(r2.raster, rr.raster[60:])
+    np.testing.assert_array_equal(
+        res2.spike_count, rr.raster[60:].sum(axis=1).astype(np.int32)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ses2.state["tr_plus"]), np.asarray(ref.state["tr_plus"])
+    )
+    # plastically-updated weights continued bit-exactly
+    ses2.save(str(tmp_path / "cont"))
+    ref.save(str(tmp_path / "ref"))
+    w_cont = np.sort(
+        np.concatenate([p.edge_state[:, 0] for p in ses2.net.parts])
+    )
+    w_ref = np.sort(
+        np.concatenate([p.edge_state[:, 0] for p in ref.net.parts])
+    )
+    np.testing.assert_array_equal(w_cont, w_ref)
+
+    # different k: elastic restore of the async-written root onto k=2
+    ses3 = Session.restore(root, k=2, cfg=cfg)
+    assert ses3.source_k == 2 and ses3.t == 60
+    r3 = RasterMonitor()
+    ses3.run(30, monitors=[r3], chunk_size=15)
+    want = permanent_order(rr.raster[60:], ref.permanent_ids)
+    got = permanent_order(r3.raster, ses3.permanent_ids)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_session_async_and_sync_checkpoints_bit_identical(tmp_path):
+    """Sync and async checkpoint paths share one serializer: every array
+    of every step snapshot is bit-identical between the two."""
+    from repro.io import load_binary
+
+    def build():
+        net = balanced_ei(100, stdp=True, seed=9)
+        net.vtx_state[:, 2] += 6.0
+        return to_dcsr(net, k=1)
+
+    cfg = SimConfig(align_k=8)
+    a_root, s_root = str(tmp_path / "async"), str(tmp_path / "sync")
+    with Session(build(), cfg) as sa:
+        sa.run(40, chunk_size=10, checkpoint_every=20,
+               checkpoint_dir=a_root)
+    ss = Session(build(), cfg)
+    ss.run(40, chunk_size=10, checkpoint_every=20, checkpoint_dir=s_root,
+           checkpoint_sync=True)
+    assert snapshot_steps(a_root) == snapshot_steps(s_root) == [20, 40]
+    for step in (20, 40):
+        net_a, sim_a, t_a = load_binary(
+            os.path.join(a_root, f"step_{step:08d}")
+        )
+        net_s, sim_s, t_s = load_binary(
+            os.path.join(s_root, f"step_{step:08d}")
+        )
+        assert t_a == t_s == step
+        for pa, ps in zip(net_a.parts, net_s.parts):
+            np.testing.assert_array_equal(pa.vtx_state, ps.vtx_state)
+            np.testing.assert_array_equal(pa.edge_state, ps.edge_state)
+            np.testing.assert_array_equal(pa.row_ptr, ps.row_ptr)
+            np.testing.assert_array_equal(pa.col_idx, ps.col_idx)
+        assert set(sim_a) == set(sim_s)
+        for p in sim_a:
+            assert set(sim_a[p]) == set(sim_s[p])
+            for key in sim_a[p]:
+                np.testing.assert_array_equal(sim_a[p][key], sim_s[p][key])
+
+
+def test_session_async_checkpoint_torn_swap_and_corrupt_walkback(tmp_path):
+    """Crash injection under the async writer: the newest step surviving
+    only as ``.old`` (torn atomic swap) restores; corrupting that shard
+    walks back to the previous step, which continues bit-exactly."""
+    def build():
+        return to_dcsr(spatial_random(90, avg_degree=7, seed=13), k=1)
+
+    cfg = SimConfig(align_k=8)
+    root = str(tmp_path)
+    ses = Session(build(), cfg)
+    ses.run(60, chunk_size=20, checkpoint_every=20, checkpoint_dir=root)
+    ses.wait()
+    newest = os.path.join(root, "step_00000060")
+    # crash window between atomic_dir's two renames: only .old remains
+    os.replace(newest, newest + ".old")
+    assert snapshot_steps(root) == [20, 40, 60]
+
+    ses2 = Session.restore(root, cfg=cfg)
+    assert ses2.t == 60  # restored from the .old fallback
+
+    # now the .old shard is ALSO truncated: walk back to step 40
+    shard = os.path.join(newest + ".old", "part0.npz")
+    with open(shard, "r+b") as f:
+        f.truncate(os.path.getsize(shard) // 2)
+    ses3 = Session.restore(root, cfg=cfg)
+    assert ses3.t == 40
+    r3 = RasterMonitor()
+    ses3.run(20, monitors=[r3], chunk_size=20)
+    ref = Session(build(), cfg)
+    rr = RasterMonitor()
+    ref.run(60, monitors=[rr], chunk_size=60)
+    np.testing.assert_array_equal(r3.raster, rr.raster[40:])
+
+
+def test_session_background_write_error_surfaces(tmp_path):
+    """A failing background write is re-raised on the caller's thread (at
+    wait / the next checkpoint boundary), and the writer stays usable."""
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+    ses = Session(mc_net(), SimConfig(align_k=8))
+    ses.run(5, chunk_size=5)
+    ses.save(str(blocker / "snap"), wait=False)  # will fail in background
+    with pytest.raises(OSError):
+        ses.wait()
+    # error consumed; subsequent saves work and close() is clean
+    ok = str(tmp_path / "ok")
+    ses.save(ok)
+    assert os.path.exists(os.path.join(ok, "manifest.json"))
+    ses.close()
+
+
+def test_session_writer_thread_reclaimed_on_gc(tmp_path):
+    """A Session dropped without close() must not leak its background
+    writer thread: the finalizer sends the stop sentinel (after queued
+    jobs, which still flush) and the daemon exits."""
+    import gc
+    import weakref as _weakref  # noqa: F401 (behavior under test)
+
+    ses = Session(mc_net(), SimConfig(align_k=8))
+    ses.run(5, chunk_size=5)
+    ses.save(str(tmp_path / "snap"))
+    worker = ses._writer._worker
+    assert worker.is_alive()
+    del ses
+    gc.collect()
+    worker.join(timeout=10)
+    assert not worker.is_alive()
+
+
+def test_session_background_error_raises_at_next_checkpoint(tmp_path):
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+    ses = Session(mc_net(), SimConfig(align_k=8))
+    ses.run(5, chunk_size=5)
+    ses.save(str(blocker / "snap"), wait=False)
+    ses._writer._q.join()  # let the failing job finish deterministically
+    with pytest.raises(OSError):
+        ses.save(str(tmp_path / "next"))  # boundary surfaces the error
+    ses.close()
 
 
 # -- SPMD engine (subprocess: needs fake devices) ---------------------------
