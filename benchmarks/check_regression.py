@@ -15,6 +15,9 @@ tracks the *relative* cost of each engine instead.  CI uses
 
 Modes present on only one side are reported and skipped (new benchmark
 modes must land together with a refreshed baseline to become gated).
+``--strict`` turns current-only modes into a hard failure: CI runs with
+it, so a new engine's numbers cannot land in the benchmark report without
+a committed baseline entry gating them from their first PR.
 
 Refreshing the baseline (after an intentional perf change or when adding
 a mode)::
@@ -131,6 +134,11 @@ def main(argv=None) -> int:
     ap.add_argument("--normalize", default=None, metavar="MODE",
                     help="divide both reports by MODE's us_per_step first "
                          "(cancels machine speed; CI uses 'ref')")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail (exit 1) when the current report contains "
+                         "modes absent from the baseline, instead of "
+                         "printing and skipping them — new modes must ship "
+                         "with a refreshed baseline.json")
     args = ap.parse_args(argv)
 
     baseline, dim_b, thr_b = load_report(args.baseline)
@@ -160,6 +168,11 @@ def main(argv=None) -> int:
     print_table(rows, args.threshold, unit)
     if only_base:
         print(f"note: modes only in baseline (skipped): {only_base}")
+    if only_cur and args.strict:
+        print(f"FAIL (--strict): modes in current report but missing from "
+              f"the baseline: {only_cur}; refresh benchmarks/baseline.json "
+              "in the same PR that adds a benchmark mode")
+        return 1
     if only_cur:
         print(f"note: modes only in current (not yet gated — refresh "
               f"benchmarks/baseline.json to gate them): {only_cur}")

@@ -22,9 +22,18 @@ Modes (``--mode``):
                   stall, a dimensionless within-run ratio carried in
                   ``us_per_step`` with ``dimensionless: true`` (exempt
                   from ``--normalize``) and a wider ``gate_threshold``
-  * ``all``     — fused + dist + plastic + ckpt (+ ref), the full
+  * ``event``   — activity sweep for the event-driven gather: a
+                  bias-driven net (noise off) targets ~0.05% / 0.5% / 5%
+                  spike rates and each point measures ``gather='dense'``
+                  vs ``gather='event'`` us/step side by side — the data
+                  behind ``EVENT_ACTIVITY_THRESHOLD``.  On CPU only the
+                  skipped per-block *arithmetic* is real (interpret mode);
+                  on TPU the event win is larger — the skipped HBM panel
+                  fetches dominate
+  * ``all``     — fused + dist + plastic + ckpt + event (+ ref), the full
                   fused-vs-unfused × k=1-vs-distributed × plain-vs-plastic
-                  grid plus the checkpoint-stall pair
+                  grid plus the checkpoint-stall pair and the activity
+                  sweep
 
 Every invocation also records its results into
 ``BENCH_spike_throughput.json`` (``--json`` to relocate), merging with any
@@ -47,6 +56,7 @@ import sys
 import time
 
 import jax
+import numpy as np
 
 from repro.snn import Session, SimConfig, microcircuit, to_dcsr
 
@@ -87,8 +97,12 @@ def run(scale=0.02, steps=200, backend="ref", fused=None):
     # compiled Pallas needs 128-lane-aligned panels; interpret/ref runs use
     # 32 to keep the CPU emulation panels small
     align_k = 128 if backend == "pallas" else 32
+    # gather pinned dense: the k1/dist/plastic modes measure the dense
+    # engines; 'auto' would let a quiet run swap to the event gather
+    # mid-measurement (the sweep in main_event measures that on purpose)
     ses = Session(
-        d, SimConfig(align_k=align_k, backend=backend, fused=fused)
+        d, SimConfig(align_k=align_k, backend=backend, fused=fused,
+                     gather="dense")
     )
     return _time_session(ses, steps, d.n, d.m)
 
@@ -109,9 +123,74 @@ def run_plastic(n=200, steps=100, backend="ref", fused=None):
     d = to_dcsr(net, k=1)
     align_k = 128 if backend == "pallas" else 32
     ses = Session(
-        d, SimConfig(align_k=align_k, backend=backend, fused=fused)
+        d, SimConfig(align_k=align_k, backend=backend, fused=fused,
+                     gather="dense")
     )
     return _time_session(ses, steps, d.n, d.m)
+
+
+def _event_net(scale, frac):
+    """The activity-sweep workload: microcircuit topology, noise off, a
+    ``frac`` fraction of neurons driven by a suprathreshold bias.  A
+    driven LIF fires right after each refractory exit (a 21-step cycle at
+    the default params), so the realized per-step spike rate is
+    ~0.047*frac — frac 0.0105/0.105/1.0 lands near the 0.05%/0.5%/5%
+    sweep targets.  Initial refractory counters stagger the firing phases
+    across the cycle (no biological net fires in lockstep): with few
+    driven neurons most steps are fully silent — the event engines' best
+    case — while at the ``hi`` point spikes land every step and the event
+    path honestly pays its selection overhead."""
+    net = microcircuit(scale=scale, seed=0)
+    net.meta["noise_sigma"] = 0.0
+    net.vtx_state[:, 2] = 0.0
+    n_drive = max(int(round(frac * net.n)), 1)
+    net.vtx_state[:n_drive, 2] = 2000.0
+    net.vtx_state[:n_drive, 1] = np.arange(n_drive) % 21
+    return net
+
+
+def run_event_point(scale, steps, frac, gather, backend):
+    """One sweep point: k=1 fused engine with the requested gather mode."""
+    net = _event_net(scale, frac)
+    d = to_dcsr(net, k=1)
+    align_k = 128 if backend == "pallas" else 32
+    ses = Session(d, SimConfig(
+        align_k=align_k, backend=backend, fused=True, gather=gather,
+    ))
+    r = _time_session(ses, steps, d.n, d.m)
+    r["target_frac"] = frac
+    return r
+
+
+def main_event(scale, steps, json_path):
+    """Dense vs event-driven gather across the activity sweep; the data
+    that justifies (and re-validates) the auto-threshold constant."""
+    from repro.kernels.dispatch import platform_default
+
+    backend = platform_default()
+    entries = {}
+    for label, frac in (("lo", 0.0105), ("mid", 0.105), ("hi", 1.0)):
+        dense = run_event_point(scale, steps, frac, "dense", backend)
+        event = run_event_point(scale, steps, frac, "event", backend)
+        assert dense["engine"] == "fused", dense["engine"]
+        assert event["engine"] == "fused_event", event["engine"]
+        # the sweep points are deliberately tiny (quick mode: 30 steps on
+        # a sub-400-neuron net) so their us_per_step is noisy across
+        # runners — gate them with the same wider band as the ckpt stall
+        # ratio; a lost skip-machinery win shows up far past 2x
+        dense["gate_threshold"] = 2.0
+        event["gate_threshold"] = 2.0
+        speedup = dense["us_per_step"] / max(event["us_per_step"], 1e-9)
+        print(
+            f"spike_throughput_event_{label},{event['us_per_step']:.0f},"
+            f"dense_us={dense['us_per_step']:.0f};"
+            f"speedup={speedup:.2f}x;"
+            f"activity={event['mean_activity']:.5f};"
+            f"backend={backend};n={event['n']};m={event['m']}"
+        )
+        entries[f"event_{label}_dense"] = dense
+        entries[f"event_{label}_event"] = event
+    _record(json_path, entries)
 
 
 def run_dist(scale, steps, k, backend, fused, exchange="auto",
@@ -129,6 +208,7 @@ def run_dist(scale, steps, k, backend, fused, exchange="auto",
     align_k = 128 if backend == "pallas" else 32
     ses = Session(d, SimConfig(
         align_k=align_k, backend=backend, fused=fused, exchange=exchange,
+        gather="dense",
     ))
     assert ses.describe()["engine"] == "spmd"
     return _time_session(ses, steps, d.n, d.m)
@@ -196,6 +276,15 @@ def _record(json_path, entries):
             pair = name[: -len("_fused")] + "_unfused"
             if pair in modes:
                 speedups[name[: -len("_fused")]] = round(
+                    modes[pair]["us_per_step"]
+                    / max(modes[name]["us_per_step"], 1e-9), 3
+                )
+    ev_speedups = data.setdefault("speedup_dense_over_event", {})
+    for name in list(modes):
+        if name.startswith("event_") and name.endswith("_event"):
+            pair = name[: -len("_event")] + "_dense"
+            if pair in modes:
+                ev_speedups[name[: -len("_event")]] = round(
                     modes[pair]["us_per_step"]
                     / max(modes[name]["us_per_step"], 1e-9), 3
                 )
@@ -301,13 +390,13 @@ def run_ckpt(scale, steps, every, sync):
 
     net = microcircuit(scale=scale, seed=0)
     d = to_dcsr(net, k=1)
-    ses = Session(d, SimConfig(align_k=32))
+    ses = Session(d, SimConfig(align_k=32, gather="dense"))
     ses.run(every, chunk_size=every)  # compile the chunk program once
     td = tempfile.mkdtemp(prefix="ckpt_bench_")
     try:
         t0 = time.perf_counter()
-        ses.run(steps, chunk_size=every, checkpoint_every=every,
-                checkpoint_dir=td, checkpoint_sync=sync)
+        res = ses.run(steps, chunk_size=every, checkpoint_every=every,
+                      checkpoint_dir=td, checkpoint_sync=sync)
         loop_s = time.perf_counter() - t0
         stalls = ses.last_ckpt_stalls
         ses.wait()  # queued writes must land before the dir is removed
@@ -318,6 +407,9 @@ def run_ckpt(scale, steps, every, sync):
     return dict(
         n=d.n, m=d.m, k=info["k"],
         engine=info["step_engine"], backend=info["backend"],
+        # every mode's entry carries mean_activity under the same name, so
+        # the activity sweep and the gate key off one field
+        mean_activity=float(res.spike_count.mean()) / d.n,
         n_checkpoints=len(stalls),
         # informational (deliberately NOT us_per_step, so the raw
         # IO-bound stall is never CPU-normalized by the regression gate):
@@ -358,6 +450,7 @@ def main_ckpt(scale, steps, every, json_path):
         async_stall_us=asyn["stall_us_per_ckpt"],
         n_checkpoints=asyn["n_checkpoints"],
         n=asyn["n"], m=asyn["m"], k=asyn["k"],
+        mean_activity=asyn["mean_activity"],
     )
     _record(json_path, {
         "ckpt_sync": sync, "ckpt_async": asyn,
@@ -376,7 +469,7 @@ def main(argv=None, quick=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode",
                     choices=("ref", "fused", "dist", "plastic", "ckpt",
-                             "all"),
+                             "event", "all"),
                     default="ref")
     ap.add_argument("--scale", type=float, default=None,
                     help="microcircuit scale (default per mode)")
@@ -404,6 +497,14 @@ def main(argv=None, quick=None):
         n_plastic = 160 if args.quick else 400
         k = args.k if args.k is not None else 2
         main_plastic(n_plastic, pallas_steps, k, args.json)
+    if args.mode in ("event", "all"):
+        ev_scale = args.scale if args.scale is not None else (
+            0.005 if args.quick else 0.01
+        )
+        ev_steps = args.steps if args.steps is not None else (
+            30 if args.quick else 100
+        )
+        main_event(ev_scale, ev_steps, args.json)
     if args.mode in ("ckpt", "all"):
         ck_scale = args.scale if args.scale is not None else (
             0.01 if args.quick else 0.02

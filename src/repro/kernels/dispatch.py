@@ -142,6 +142,7 @@ def lookup(op: str, backend: Optional[str] = None) -> Callable:
 
 STEP_ENGINES = (
     "fused", "fused_plastic", "fused_split", "fused_split_plastic",
+    "fused_event", "fused_split_event",
     "unfused",
 )
 
@@ -159,13 +160,21 @@ class StepEngineChoice:
 
     @property
     def split(self) -> bool:
-        return self.engine in ("fused_split", "fused_split_plastic")
+        return self.engine in (
+            "fused_split", "fused_split_plastic", "fused_split_event",
+        )
 
     @property
     def plastic(self) -> bool:
         """True for the variants that fold the STDP pass into the fused
         step."""
         return self.engine in ("fused_plastic", "fused_split_plastic")
+
+    @property
+    def event(self) -> bool:
+        """True for the event-driven gather variants (panel traversal
+        restricted to row blocks with active presynaptic spikes)."""
+        return self.engine in ("fused_event", "fused_split_event")
 
 
 # the fused kernel keeps six full-length f32 state vectors (v/refrac/i_tot
@@ -184,6 +193,56 @@ FUSED_SPLIT_MAX_N_GLOBAL = _FUSED_VECTOR_VMEM_BUDGET // 4
 # the plastic split variant pins the exchanged pre-trace vector alongside
 # the activity vector (two n_global f32 panels), halving the budget
 FUSED_SPLIT_PLASTIC_MAX_N_GLOBAL = _FUSED_VECTOR_VMEM_BUDGET // (2 * 4)
+
+# -- event-driven gather (fused_event / fused_split_event) ----------------
+# the per-step compressed spike-id buffer (``event_select``) rides the
+# pallas_call as a scalar-prefetch input; cap its int32 footprint so the
+# schedule never crowds the panel/state budget above
+EVENT_IDS_VMEM_BUDGET = 1 * 1024 * 1024
+EVENT_MAX_IDS = EVENT_IDS_VMEM_BUDGET // 4
+# Session's activity-adaptive dispatcher (SimConfig(gather="auto")) swaps
+# to the event engine below this running mean spike rate and back to the
+# dense sweep above it.  Calibrated from the committed benchmark activity
+# sweep (benchmarks/spike_throughput.py --mode event, numbers in
+# benchmarks/baseline.json): on the interpret-mode CPU proxy the event
+# path wins ~2x at 0.035% activity and loses ~0.75x by 0.5%, so the
+# crossover sits between those points.  On TPU the skipped HBM panel
+# fetches (not just skipped arithmetic) move the real crossover higher;
+# this constant is the conservative CPU-proxy value.
+EVENT_ACTIVITY_THRESHOLD = 0.002
+
+
+def event_id_cap(n_global: int, cap_frac: float) -> int:
+    """Effective compressed spike-id capacity of the event engines — the
+    single source of the formula (SimConfig(event_cap_frac=...) is a
+    fraction of the activity-vector width, floored so tiny nets keep a
+    usable buffer).  More active ids than this in one step degrade that
+    step to the dense sweep (all blocks flagged) — exact, just not fast."""
+    return max(int(cap_frac * n_global), 32)
+
+
+def event_gather_blocker(
+    any_plastic: bool, n_global: int, event_cap_frac: float
+) -> Optional[str]:
+    """Why the event-driven gather cannot serve this partition (None when
+    it can).  Separate from ``_fusion_blocker``: an event-ineligible
+    partition still takes the *dense* fused engine — these rules only
+    gate the gather flavour."""
+    if any_plastic:
+        return (
+            "plastic nets stay dense for now: the STDP pass must visit "
+            "every synapse panel every step to apply trace-decay weight "
+            "updates, so skipping untouched panels would skip learning"
+        )
+    cap = event_id_cap(n_global, event_cap_frac)
+    if cap > EVENT_MAX_IDS:
+        return (
+            f"compressed spike-id buffer ({cap} ids = {4 * cap} bytes at "
+            f"event_cap_frac={event_cap_frac}) exceeds the event-gather "
+            f"VMEM budget ({EVENT_IDS_VMEM_BUDGET} bytes); lower "
+            "SimConfig(event_cap_frac=...) or use gather='dense'"
+        )
+    return None
 
 
 def _fusion_blocker(
@@ -243,6 +302,8 @@ def select_step_engine(
     n_p: int,
     n_global: Optional[int] = None,
     fused: Optional[bool] = None,
+    gather: str = "dense",
+    event_cap_frac: float = 0.05,
 ) -> StepEngineChoice:
     """Pick one of ``STEP_ENGINES`` for a partition's step.
 
@@ -259,7 +320,23 @@ def select_step_engine(
     ``fused=None`` (auto) fuses whenever the partition is eligible and the
     backend runs Pallas kernels; ``fused=True`` demands fusion (raises if
     the partition is ineligible); ``fused=False`` disables it.
+
+    ``gather`` picks the panel-traversal flavour of the fused engines:
+    ``"dense"`` sweeps every synapse panel every step, ``"event"`` takes
+    the event-driven variants (``fused_event`` / ``fused_split_event``)
+    that touch only row blocks with active presynaptic spikes.  The
+    ``"auto"`` SimConfig value never reaches here — Session resolves it
+    per chunk from the running spike rate (EVENT_ACTIVITY_THRESHOLD).
+    An event-ineligible partition (``event_gather_blocker``: plastic, or
+    a compressed id buffer past its VMEM budget) falls back to the
+    *dense* fused variant with the reason attached — unless
+    ``fused=True`` demanded the event engine, which raises.
     """
+    if gather not in ("dense", "event"):
+        raise ValueError(
+            f"select_step_engine(gather={gather!r}): expected 'dense' or "
+            "'event' ('auto' is resolved by Session before selection)"
+        )
     if fused is False:
         return StepEngineChoice("unfused", "disabled by config")
     blocker = _fusion_blocker(
@@ -279,6 +356,21 @@ def select_step_engine(
     )
     if any_plastic:
         placement += ", STDP fused into the panel pass"
+    if gather == "event":
+        eb = event_gather_blocker(
+            any_plastic,
+            n_global if n_global is not None else n_p,
+            event_cap_frac,
+        )
+        if eb is None:
+            target = (
+                "fused_event" if identity_exchange else "fused_split_event"
+            )
+            placement += ", event-driven gather"
+        elif fused is True:
+            raise ValueError(f"event-driven gather requested but: {eb}")
+        else:
+            placement += f" (event gather unavailable: {eb})"
     if fused is True:
         return StepEngineChoice(target, f"forced by config ({placement})")
     if backend in ("pallas", "pallas_interpret"):

@@ -1,0 +1,315 @@
+"""Pallas TPU kernel: event-driven post-exchange gather (sparse activity).
+
+The dense engines traverse every (R, K_d) synapse panel every step, yet the
+benchmark workloads measure 0.03-0.6% mean activity — the regime where the
+event-driven delivery of Pronold et al. (2021) and sparse spiking membrane
+systems on GPUs win.  The dCSR layout makes the sparse schedule cheap to
+precompute: each delay bucket's panel is row-blocked, and a build-time
+``touch`` bitmap records which *presynaptic* ids appear anywhere in each
+row block.  Per step:
+
+  1. the post-exchange activity vector is compressed to active spike ids
+     on-device (``jnp.nonzero`` with a fixed capacity — the "compressed id
+     buffer" the dispatcher budgets);
+  2. a row block is *flagged* iff any active id touches it (a gather from
+     the touch bitmaps); blocks past the id-buffer capacity degrade to
+     all-flagged — an in-step dense fallback, never a wrong answer;
+  3. the flags/selectors ride the ``pallas_call`` as **scalar-prefetch**
+     arguments: the per-bucket panel BlockSpec index_maps read ``sel`` so
+     consecutive inactive grid steps alias the last flagged block (Pallas
+     skips the HBM fetch for a repeated block index), and the kernel body
+     skips the gather arithmetic of unflagged blocks under ``pl.when``.
+
+On TPU the win is the skipped HBM panel traffic (the dominant term); in
+interpret mode only the skipped arithmetic is real, so CPU proxy numbers
+understate the event path — see the benchmark docs.
+
+The kernel is shared by both event engines: ``fused_event`` (k = 1, the
+activity is the partition's own spike vector) and ``fused_split_event``
+(the activity is the exchanged global vector).  Correctness contract:
+``ref.event_post_exchange_ref`` (flag-masked dense gather); the flags are
+*conservative* by construction — a flagged-but-silent block computes an
+exact zero, an active-but-unflagged block cannot occur because the touch
+bitmaps cover every valid synapse slot.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.ell import _align_up
+from .blocks import pick_block
+from .fused_step import _LANES, _PANEL_VMEM_BUDGET
+
+
+def event_block_geometry(
+    R: int,
+    k_widths: Sequence[int],
+    d_ring: int,
+    *,
+    block_r: int = 256,
+    interpret: bool = False,
+) -> Tuple[int, int]:
+    """The (block_r, num_blocks) the event kernel will use for panels of
+    ``R`` rows and per-bucket widths ``k_widths`` — the single source of
+    the row-block granularity, shared by the build-time touch bitmaps and
+    the per-step kernel call (their shapes must agree).  Same VMEM budget
+    as the dense post-exchange kernel: per grid step the resident panels
+    are (block_r, K_d) cols+weights per bucket plus the (D, block_r) ring
+    in/out blocks."""
+    D_pad = _align_up(max(d_ring, 8), 8)
+    bytes_per_row = sum(int(k) * 8 for k in k_widths) + 2 * D_pad * 4
+    max_rows = max(_PANEL_VMEM_BUDGET // max(bytes_per_row, 1), 1)
+    br = pick_block(R, min(block_r, max_rows), interpret=interpret,
+                    what="event_post_exchange rows")
+    return br, R // br
+
+
+def build_touch_masks(
+    cols: Sequence,  # per delay bucket (R, K_d) int32 presynaptic ids
+    valid: Sequence,  # per delay bucket (R, K_d) 0/1 mask (padding = 0)
+    n: int,  # width of the activity vector the ids index into
+    num_blocks: int,
+    block_r: int,
+) -> List[np.ndarray]:
+    """Per-bucket (num_blocks, n) uint8 bitmaps: ``touch[b, j] == 1`` iff
+    presynaptic id ``j`` appears in a *valid* slot of row block ``b``.
+    Host-side, build-time (topology-only — weights may change, adjacency
+    does not).  Padding slots are excluded via ``valid`` so an id that is
+    only referenced by zero-weight padding never flags a block."""
+    masks = []
+    for c, v in zip(cols, valid):
+        c = np.asarray(c)
+        v = np.asarray(v)
+        assert c.shape[0] == num_blocks * block_r, (c.shape, num_blocks,
+                                                    block_r)
+        m = np.zeros((num_blocks, n), np.uint8)
+        for b in range(num_blocks):
+            sl = slice(b * block_r, (b + 1) * block_r)
+            ids = c[sl][v[sl] > 0]
+            if ids.size:
+                m[b, ids.astype(np.int64)] = 1
+        masks.append(m)
+    return masks
+
+
+def event_select(
+    act: jnp.ndarray,  # (n,) activity (0/1 floats)
+    touch: Sequence[jnp.ndarray],  # per bucket (num_blocks, n) uint8
+    cap: int,  # compressed id-buffer capacity (static)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compress the activity vector to spike ids and flag touched row
+    blocks — the per-step schedule of the event kernel, computed on-device.
+
+    Returns ``(sel, flags)``, both ``(nd, num_blocks)`` int32.  ``flags``
+    marks blocks with at least one active presynaptic row; ``sel`` maps
+    each grid step to the panel block it should fetch — flagged blocks map
+    to themselves, unflagged blocks alias the last flagged one (a repeated
+    block index is a skipped HBM fetch; their compute is skipped too).
+    More active ids than ``cap`` flags *every* block: an in-step dense
+    fallback that preserves exactness instead of dropping spikes.
+    """
+    n = act.shape[0]
+    active = act > 0
+    # fill_value=n: out-of-range, so the touch gather below reads 0 via
+    # mode='fill' and an unused slot can never flag a block
+    ids = jnp.nonzero(active, size=cap, fill_value=n)[0].astype(jnp.int32)
+    overflowed = jnp.sum(active) > cap
+    flags = []
+    for tch in touch:
+        hit = jnp.take(tch, ids, axis=1, mode="fill", fill_value=0)
+        flags.append((hit.max(axis=1) > 0) | overflowed)
+    flags = jnp.stack(flags).astype(jnp.int32)  # (nd, num_blocks)
+    nb = flags.shape[1]
+    idx = jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32), flags.shape)
+    sel = jax.lax.cummax(jnp.where(flags > 0, idx, -1), axis=1)
+    return jnp.maximum(sel, 0), flags
+
+
+def _make_event_kernel(nd: int):
+    def kernel(*refs):
+        sel_ref, flags_ref = refs[:2]  # scalar-prefetch (nd, nb) each
+        act_ref, ring_ref, clear_ref, oh_ref = refs[2:6]
+        cols_refs = refs[6: 6 + nd]
+        w_refs = refs[6 + nd: 6 + 2 * nd]
+        ring_out = refs[6 + 2 * nd]
+        del sel_ref  # consumed by the BlockSpec index_maps, not the body
+        r = pl.program_id(0)
+        act = act_ref[...]  # (n,) f32, VMEM-resident, revisited
+        # rotate unconditionally (the ring block is this grid step's own
+        # output either way), then accumulate only the flagged buckets
+        ring_out[...] = ring_ref[...] * clear_ref[...][:, None]
+        for i in range(nd):
+            @pl.when(flags_ref[i, r] != 0)
+            def _(i=i):
+                cols = cols_refs[i][...]  # (block_r, K_d)
+                w = w_refs[i][...]
+                vals = jnp.take(act, cols, axis=0)
+                cur = jnp.sum(w.astype(jnp.float32) * vals, axis=1)
+                ring_out[...] += oh_ref[i, :][:, None] * cur[None, :]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nd", "block_r", "interpret")
+)
+def _event_call(
+    sel, flags, act, ring, clear, onehot, *panels, nd, block_r, interpret
+):
+    cols = panels[:nd]
+    weights = panels[nd:]
+    n_act = act.shape[0]
+    D_pad, R = ring.shape
+    nd_, D = onehot.shape
+    grid = (R // block_r,)
+
+    def panel_map(i):
+        # scalar-prefetch index map: grid step r fetches the block sel[i, r]
+        # points at — unflagged steps repeat the previous index, and Pallas
+        # skips the HBM fetch for a repeated block
+        return lambda r, sel, flg, i=i: (sel[i, r], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_act,), lambda r, sel, flg: (0,)),
+            pl.BlockSpec((D_pad, block_r), lambda r, sel, flg: (0, r)),
+            pl.BlockSpec((D_pad,), lambda r, sel, flg: (0,)),
+            pl.BlockSpec((nd_, D), lambda r, sel, flg: (0, 0)),
+        ]
+        + [
+            pl.BlockSpec((block_r, c.shape[1]), panel_map(i))
+            for i, c in enumerate(cols)
+        ]
+        + [
+            pl.BlockSpec((block_r, w.shape[1]), panel_map(i))
+            for i, w in enumerate(weights)
+        ],
+        out_specs=pl.BlockSpec((D_pad, block_r), lambda r, sel, flg: (0, r)),
+    )
+    return pl.pallas_call(
+        _make_event_kernel(nd),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((D_pad, R), jnp.float32),
+        interpret=interpret,
+    )(sel, flags, act, ring, clear, onehot, *cols, *weights)
+
+
+def event_post_exchange_pallas(
+    act: jnp.ndarray,  # (n,) exchanged global activity
+    ring: jnp.ndarray,  # (D, n_p) ring buffer, slot NOT yet cleared
+    clear_mask: jnp.ndarray,  # (D,) 0 at the delivered slot, 1 elsewhere
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    sel: jnp.ndarray,  # (nd, num_blocks) int32 block selectors
+    flags: jnp.ndarray,  # (nd, num_blocks) int32 0/1 block activity
+    cols: Sequence[jnp.ndarray],  # per delay bucket (R, K_d) int32 global
+    weights: Sequence[jnp.ndarray],  # per delay bucket (R, K_d)
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:  # (D, n_p) new ring
+    """Event-driven post-exchange step: ring rotate + *flagged-block-only*
+    delay-bucket gathers in one ``pallas_call``.
+
+    Identical math to ``fused_post_exchange_pallas`` on flagged blocks;
+    unflagged blocks contribute an exact zero without being fetched from
+    HBM (``sel`` aliases their panel BlockSpec to the last flagged block)
+    or computed (``pl.when`` on the prefetched flag).  ``sel``/``flags``
+    come from :func:`event_select`; their ``num_blocks`` axis fixes the
+    row-block granularity and must match :func:`event_block_geometry` for
+    these panels (the engines build both from one plan).
+    """
+    nd = len(cols)
+    assert nd >= 1, "event post-exchange needs at least one delay bucket"
+    assert len(weights) == nd
+    assert sel.shape == flags.shape == (nd, sel.shape[1]), (
+        sel.shape, flags.shape, nd
+    )
+    D, n_p = ring.shape
+    R = cols[0].shape[0]
+    assert all(c.shape[0] == R for c in cols), (
+        "event post-exchange needs a common R across delay buckets: "
+        f"{[c.shape for c in cols]}"
+    )
+    assert R >= n_p, (R, n_p)
+    nb = sel.shape[1]
+    assert R % nb == 0, (
+        f"event selector has {nb} blocks but R={R} is not divisible; "
+        "build sel/flags with event_block_geometry for these panels"
+    )
+    block_r = R // nb
+
+    # same padding scheme as the dense post-exchange kernel
+    n_act = _align_up(max(act.shape[0], _LANES), _LANES)
+    act_p = jnp.pad(act.astype(jnp.float32), (0, n_act - act.shape[0]))
+    D_pad = _align_up(max(D, 8), 8)
+    ring_p = jnp.pad(ring, ((0, D_pad - D), (0, R - n_p)))
+    clear_p = jnp.pad(clear_mask.astype(jnp.float32), (0, D_pad - D))
+    oh_p = jnp.pad(
+        write_onehot.astype(jnp.float32), ((0, 0), (0, D_pad - D))
+    )
+    new_ring = _event_call(
+        sel.astype(jnp.int32), flags.astype(jnp.int32),
+        act_p, ring_p, clear_p, oh_p, *cols, *weights,
+        nd=nd, block_r=block_r, interpret=interpret,
+    )
+    return new_ring[:D, :n_p]
+
+
+# -- build-time plan shared by both event engines --------------------------
+
+
+class EventPlan:
+    """Static schedule of the event engines for one partition: row-block
+    geometry + per-bucket touch bitmaps + the compressed id-buffer
+    capacity.  Built once at engine construction (host side, outside any
+    trace); :meth:`select` is the per-step on-device part."""
+
+    def __init__(self, block_r: int, num_blocks: int, cap: int,
+                 touch: Sequence[jnp.ndarray]):
+        self.block_r = int(block_r)
+        self.num_blocks = int(num_blocks)
+        self.cap = int(cap)
+        self.touch = list(touch)
+
+    @classmethod
+    def build(
+        cls,
+        cols: Sequence,  # per delay bucket (R, K_d) presynaptic ids
+        valid: Sequence,  # per delay bucket (R, K_d) 0/1 validity
+        n: int,  # activity-vector width the ids index into
+        d_ring: int,
+        cap: int,
+        *,
+        interpret: bool = False,
+        as_numpy: bool = False,
+    ) -> "EventPlan":
+        R = int(np.asarray(cols[0]).shape[0])
+        k_widths = [int(np.asarray(c).shape[1]) for c in cols]
+        block_r, nb = event_block_geometry(
+            R, k_widths, d_ring, interpret=interpret
+        )
+        masks = build_touch_masks(cols, valid, n, nb, block_r)
+        if not as_numpy:
+            masks = [jnp.asarray(m) for m in masks]
+        return cls(block_r, nb, cap, masks)
+
+    def select(self, act: jnp.ndarray):
+        return event_select(act, self.touch, self.cap)
+
+    def with_touch(self, touch: Sequence) -> "EventPlan":
+        """The same plan over replacement touch arrays (the distributed
+        engine stacks them per partition and rebinds the local shard
+        inside ``shard_map``)."""
+        touch = list(touch)
+        assert all(
+            t.shape == (self.num_blocks,) + t.shape[1:] for t in touch
+        )
+        return EventPlan(self.block_r, self.num_blocks, self.cap, touch)

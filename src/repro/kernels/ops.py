@@ -14,8 +14,12 @@ from __future__ import annotations
 import functools
 from typing import Callable, Optional
 
+import jax
+import jax.numpy as jnp
+
 from . import ref
 from .dispatch import lookup, register
+from .event_step import event_post_exchange_pallas
 from .fused_step import (
     fused_lif_step_pallas,
     fused_plastic_step_pallas,
@@ -220,6 +224,52 @@ def fused_post_exchange(
         act, ring, clear_mask, write_onehot, tuple(cols), tuple(weights),
         **kw
     )
+
+
+@register("event_post_exchange", "ref")
+def _event_post_exchange_ref(
+    act, ring, clear_mask, write_onehot, sel, flags, cols, weights, **kw
+):
+    return ref.event_post_exchange_ref(
+        act, ring, clear_mask, write_onehot, sel, flags, cols, weights
+    )
+
+
+_register_pallas("event_post_exchange")(event_post_exchange_pallas)
+
+
+def event_post_exchange(
+    act, ring, clear_mask, write_onehot, sel, flags, cols, weights, *,
+    backend: Optional[str] = None, **kw
+):
+    """Event-driven post-exchange half of the split step: ring-buffer
+    rotate + the delay-bucket gathers restricted to row blocks flagged by
+    ``sel``/``flags`` (from ``kernels.event_step.event_select``).  Returns
+    the new ``(D, n_p)`` ring; bit-equal to ``fused_post_exchange`` when
+    the flags are conservative (the contract ``event_select`` provides).
+
+    Two skip levels, both exact: with NO block flagged anywhere (a fully
+    silent step — the common case at biological activity) the gather
+    launch is skipped outright via ``lax.cond`` and the ring only rotates
+    (every bucket's contribution is provably zero); otherwise the kernel
+    runs and skips *per block* (scalar-prefetch aliasing + ``pl.when``).
+    The step-level skip is backend-generic — it is also what the CPU
+    interpret proxy actually measures, since interpret mode pays the full
+    per-grid-step harness cost regardless of ``pl.when``."""
+    fn = lookup("event_post_exchange", backend)
+    cols = tuple(cols)
+    weights = tuple(weights)
+
+    def _gather(_):
+        return fn(
+            act, ring, clear_mask, write_onehot, sel, flags, cols,
+            weights, **kw
+        )
+
+    def _rotate(_):
+        return ring * clear_mask.astype(ring.dtype)[:, None]
+
+    return jax.lax.cond(jnp.any(flags > 0), _gather, _rotate, None)
 
 
 @register("fused_post_exchange_plastic", "ref")

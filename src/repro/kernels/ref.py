@@ -174,6 +174,40 @@ def fused_post_exchange_ref(
     return new_ring
 
 
+def event_post_exchange_ref(
+    act: jnp.ndarray,  # (n,) exchanged global activity
+    ring: jnp.ndarray,  # (D, n_p) future-current ring buffer (uncleared)
+    clear_mask: jnp.ndarray,  # (D,) 0 at the just-delivered slot, 1 else
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    sel: jnp.ndarray,  # (nd, num_blocks) int32 block selectors (unused)
+    flags: jnp.ndarray,  # (nd, num_blocks) int32 0/1 block activity
+    cols,  # per delay bucket (R, K_d) int32, global ids
+    weights,  # per delay bucket (R, K_d)
+) -> jnp.ndarray:
+    """Oracle for the event-driven post-exchange kernel: the dense
+    post-exchange gather with each bucket's row blocks *masked by its
+    flags* — the defined semantics of the kernel's block skipping.  With
+    conservative flags (``event_select``: every block holding a valid
+    active synapse is flagged) the mask is a mathematical no-op and the
+    result equals ``fused_post_exchange_ref``; a flag-computation bug
+    surfaces as a mismatch against the dense oracle.  ``sel`` is a fetch
+    schedule (which HBM block each grid step reads), not semantics — the
+    oracle ignores it.
+    """
+    del sel
+    n_p = ring.shape[1]
+    new_ring = ring * clear_mask[:, None]
+    for i, (c, w) in enumerate(zip(cols, weights)):
+        nb = flags.shape[1]
+        block_r = c.shape[0] // nb
+        row_mask = jnp.repeat(
+            flags[i].astype(jnp.float32), block_r, total_repeat_length=c.shape[0]
+        )
+        cur = (spike_gather_ref(act, c, w) * row_mask)[:n_p]
+        new_ring = new_ring + write_onehot[i][:, None] * cur[None, :]
+    return new_ring
+
+
 def fused_step_ref(
     v: jnp.ndarray,  # (n_p,)
     refrac: jnp.ndarray,  # (n_p,)

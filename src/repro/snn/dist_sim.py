@@ -44,12 +44,18 @@ from ..compat import shard_map
 
 from ..core.dcsr import DCSRNetwork
 from ..core.ell import build_delay_ell
-from ..kernels.dispatch import resolve_sim_backend, select_step_engine
+from ..kernels.dispatch import (
+    event_id_cap, resolve_sim_backend, select_step_engine,
+)
+from ..kernels.event_step import (
+    EventPlan, build_touch_masks, event_block_geometry,
+)
 from .simulator import (
     SimConfig,
     make_core_step,
     partition_device_data,
     _models_present,
+    _probe_event_capable,
 )
 
 
@@ -192,7 +198,7 @@ class DistSimulator:
         # identity_exchange is a *placement* input: k == 1 dense is a true
         # identity (single fused kernel); anything else splits the fused
         # step at the collective
-        self.engine_choice = select_step_engine(
+        sel_kw = dict(
             backend=self.backend,
             models_present=self.models_present,
             any_plastic=s.any_plastic and self.stdp_params is not None,
@@ -202,7 +208,36 @@ class DistSimulator:
             n_p=s.n_p,
             n_global=k * s.n_p,
             fused=cfg.fused,
+            event_cap_frac=cfg.event_cap_frac,
         )
+        self.engine_choice = select_step_engine(
+            gather="dense" if cfg.gather == "auto" else cfg.gather,
+            **sel_kw,
+        )
+        self.event_capable = _probe_event_capable(**sel_kw)
+        # static schedule of the event engines: one row-block geometry for
+        # the whole stack (uniform partitions share R and the K widths) and
+        # per-partition touch bitmaps stacked on the parts axis — the local
+        # shard is rebound inside shard_map like the synapse panels
+        self.event_cap = event_id_cap(self.n_global, cfg.event_cap_frac)
+        self._event_touch: Optional[List[np.ndarray]] = None
+        if self.engine_choice.event:
+            R = s.cols[0].shape[1]
+            k_widths = [c.shape[2] for c in s.cols]
+            self._event_block_r, self._event_nb = event_block_geometry(
+                R, k_widths, s.d_ring,
+                interpret=self.backend != "pallas",
+            )
+            self._event_touch = [
+                np.stack([
+                    build_touch_masks(
+                        [s.cols[di][p]], [s.valid[di][p]], self.n_global,
+                        self._event_nb, self._event_block_r,
+                    )[0]
+                    for p in range(k)
+                ])
+                for di in range(len(s.delays))
+            ]
 
     # -- state ------------------------------------------------------------
     def init_state(self, t0: int = 0) -> Dict:
@@ -278,10 +313,11 @@ class DistSimulator:
             return act, pre, overflow
         return ex, cap
 
-    def _build_step(self, dev_template, noise_ids):
+    def _build_step(self, dev_template, noise_ids, event_plan=None):
         exchange, cap = self._exchange()
         s = self.stacked
         core = make_core_step(
+            event_plan=event_plan,
             registry=self.net.registry,
             models_present=self.models_present,
             dt=self.dt,
@@ -336,7 +372,8 @@ class DistSimulator:
 
         from .simulator import PartitionDeviceData
 
-        def local_run(vtx_model, noise_ids, cols, valid, plastic, carry):
+        def local_run(vtx_model, noise_ids, cols, valid, plastic, touch,
+                      carry):
             local_carry = dict(
                 t=carry["t"],
                 vtx_state=carry["vtx_state"][0],
@@ -361,7 +398,13 @@ class DistSimulator:
                 identity_rows=tuple(True for _ in s.delays),
                 any_plastic=s.any_plastic,
             )
-            step, _ = self._build_step(dev, noise_ids[0])
+            plan = None
+            if self._event_touch is not None:
+                plan = EventPlan(
+                    self._event_block_r, self._event_nb, self.event_cap,
+                    [tc[0] for tc in touch],
+                )
+            step, _ = self._build_step(dev, noise_ids[0], event_plan=plan)
             final, outs = jax.lax.scan(step, local_carry, None, length=steps)
             new_carry = dict(
                 t=final["t"],
@@ -391,6 +434,10 @@ class DistSimulator:
                 [P("parts")] * len(s.delays),
                 [P("parts")] * len(s.delays),
                 [P("parts")] * len(s.delays),
+                [P("parts")] * (
+                    len(self._event_touch)
+                    if self._event_touch is not None else 0
+                ),
                 specs,
             ),
             out_specs=(out_carry_specs, out_specs),
@@ -402,7 +449,9 @@ class DistSimulator:
             [p.global_ids.astype(np.int32) for p in self.net.parts]
         )
         args = (s.vtx_model, noise_ids, list(s.cols), list(s.valid),
-                list(s.plastic))
+                list(s.plastic),
+                list(self._event_touch)
+                if self._event_touch is not None else [])
         return shmapped, args
 
     # -- dCSR sync ---------------------------------------------------------

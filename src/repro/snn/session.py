@@ -110,6 +110,7 @@ from ..io.async_writer import AsyncWriter
 from ..io.dcsr_binary import (
     load_latest_valid, snapshot_network, snapshot_steps, write_snapshot,
 )
+from ..kernels.dispatch import EVENT_ACTIVITY_THRESHOLD
 from .dist_sim import DistSimulator
 from .reshard import RUNTIME_KEYS, concat_runtime, reshard_sim_state
 from .simulator import SimConfig, Simulator
@@ -314,11 +315,18 @@ class Session:
             else net
         )
         self._engine_obj: Optional[StepEngine] = None
-        self._engine_flags: Optional[Tuple[bool, bool]] = None
+        self._engine_flags: Optional[Tuple[bool, bool, str]] = None
         self._state: Optional[Dict] = None
         self._t0 = int(t_now)
         self._pending_runtime = sim_state if sim_state else None
         self.last_run_chunks: Tuple[int, ...] = ()
+        # gather='auto' starts on the dense sweep; run()'s chunk loop swaps
+        # to the event engine (and back) from the observed spike rate
+        self._gather_mode = (
+            "dense" if self.cfg.gather == "auto" else self.cfg.gather
+        )
+        # gather mode each chunk of the last run() actually executed with
+        self.last_gather_modes: Tuple[str, ...] = ()
         # run-loop stall (seconds) of each checkpoint taken by the last
         # run(checkpoint_every=...): what --mode ckpt benchmarks
         self.last_ckpt_stalls: Tuple[float, ...] = ()
@@ -361,10 +369,11 @@ class Session:
         set replaces it — the carry pytree is engine-independent, so state
         survives the swap, at the cost of a recompile when recordings
         toggle."""
-        key = (bool(record_raster), bool(record_v))
+        key = (bool(record_raster), bool(record_v), self._gather_mode)
         if self._engine_obj is None or self._engine_flags != key:
             cfg = dataclasses.replace(
-                self.cfg, record_raster=key[0], record_v=key[1]
+                self.cfg, record_raster=key[0], record_v=key[1],
+                gather=self._gather_mode,
             )
             if self.engine_kind == "spmd":
                 eng: StepEngine = _SPMDEngine(self.net, cfg, mesh=self._mesh)
@@ -440,6 +449,7 @@ class Session:
             n=self.n, m=self.m, k=self.k, source_k=self.source_k,
             engine=self.engine_kind, t=self.t,
             step_engine=self.engine_choice.engine,
+            gather=self._gather_mode,
         )
         if isinstance(self._current_engine, _SingleEngine):
             d["backend"] = self._current_engine.sim.backend
@@ -498,11 +508,19 @@ class Session:
         need = set()
         for mon in monitors:
             need |= set(getattr(mon, "requires", ()))
-        engine = self._engine(
-            self.cfg.record_raster or "raster" in need,
-            self.cfg.record_v or "v_mean" in need,
-        )
+        rec_raster = self.cfg.record_raster or "raster" in need
+        rec_v = self.cfg.record_v or "v_mean" in need
+        engine = self._engine(rec_raster, rec_v)
         self._ensure_state(engine)
+        # activity-threshold dispatcher: with gather='auto' on an
+        # event-capable partition, each chunk's observed spike rate feeds
+        # an EMA; crossing EVENT_ACTIVITY_THRESHOLD swaps the gather mode
+        # for the NEXT chunk (the carry pytree is engine-independent, so
+        # the swap is a recompile, never a trajectory change)
+        adaptive = self.cfg.gather == "auto" and bool(
+            getattr(getattr(engine, "sim", None), "event_capable", False)
+        )
+        rate_ema: Optional[float] = None
         if chunk_size is None:
             chunk_size = min(steps, _DEFAULT_CHUNK)
         chunk_size = max(1, int(chunk_size))
@@ -511,6 +529,7 @@ class Session:
         for mon in monitors:
             mon.begin(self)
         counts, overflows, chunks, stalls = [], [], [], []
+        gather_modes = []
         done = 0
         next_ckpt = checkpoint_every
         while done < steps:
@@ -524,7 +543,23 @@ class Session:
             counts.append(outs["spike_count"])
             overflows.append(outs["overflow"])
             chunks.append(c)
+            gather_modes.append(self._gather_mode)
             done += c
+            if adaptive:
+                rate = float(
+                    np.mean(outs["spike_count"])
+                ) / max(self.n, 1)
+                rate_ema = (
+                    rate if rate_ema is None
+                    else 0.5 * rate_ema + 0.5 * rate
+                )
+                desired = (
+                    "event" if rate_ema < EVENT_ACTIVITY_THRESHOLD
+                    else "dense"
+                )
+                if desired != self._gather_mode:
+                    self._gather_mode = desired
+                    engine = self._engine(rec_raster, rec_v)
             if next_ckpt is not None and done == next_ckpt:
                 t_ck = time.perf_counter()
                 self.save(
@@ -548,6 +583,7 @@ class Session:
         for mon in monitors:
             mon.finalize()
         self.last_run_chunks = tuple(chunks)
+        self.last_gather_modes = tuple(gather_modes)
         if checkpoint_every is not None:
             self.last_ckpt_stalls = tuple(stalls)
         overflow = np.concatenate(overflows)

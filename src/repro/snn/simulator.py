@@ -31,8 +31,10 @@ from ..core.ell import DelayELL, build_delay_ell
 from ..core.state import EDGE_WEIGHT
 from ..kernels import ops
 from ..kernels.dispatch import (
-    BACKENDS, StepEngineChoice, resolve_sim_backend, select_step_engine,
+    BACKENDS, StepEngineChoice, event_id_cap, resolve_sim_backend,
+    select_step_engine,
 )
+from ..kernels.event_step import EventPlan
 from .neurons import (
     LIF_BIAS, LIF_PARAM_KEYS, LIF_REF, LIF_V, make_neuron_step,
 )
@@ -53,6 +55,14 @@ class SimConfig:
     # and the paper-faithful dense all-gather otherwise
     exchange: str = "auto"
     index_cap_frac: float = 0.25  # K cap for compressed exchange, frac of n_p
+    # 'auto' | 'dense' | 'event': panel-traversal flavour of the fused
+    # engines.  'event' restricts each step's gather to synapse row blocks
+    # with at least one active presynaptic spike (fused_event /
+    # fused_split_event); 'auto' starts dense and lets Session's chunk loop
+    # switch on the event gather when the observed spike rate stays under
+    # kernels.dispatch.EVENT_ACTIVITY_THRESHOLD (and back when it rises)
+    gather: str = "auto"
+    event_cap_frac: float = 0.05  # compressed spike-id capacity, frac of n
     seed: int = 42
 
     def __post_init__(self):
@@ -76,6 +86,20 @@ class SimConfig:
                 f"SimConfig(index_cap_frac={self.index_cap_frac}): the "
                 "compressed-exchange capacity is a fraction of the "
                 "partition size and must lie in (0, 1]"
+            )
+        if self.gather not in ("auto", "dense", "event"):
+            raise ValueError(
+                f"SimConfig(gather={self.gather!r}): expected 'auto' "
+                "(dense until the running spike rate drops under the "
+                "event threshold), 'dense' (every synapse panel every "
+                "step) or 'event' (event-driven gather over row blocks "
+                "with active presynaptic spikes)"
+            )
+        if not 0.0 < self.event_cap_frac <= 1.0:
+            raise ValueError(
+                f"SimConfig(event_cap_frac={self.event_cap_frac}): the "
+                "compressed spike-id capacity is a fraction of the "
+                "activity-vector width and must lie in (0, 1]"
             )
         if self.align_k < 1 or self.align_rows < 1:
             raise ValueError(
@@ -141,6 +165,18 @@ def _models_present(net: DCSRNetwork) -> Tuple[str, ...]:
     return tuple(names)
 
 
+def _probe_event_capable(**sel_kw) -> bool:
+    """Would ``gather='event'`` actually land on an event engine for this
+    partition?  Session's auto-threshold dispatcher consults this before
+    swapping gather modes mid-run, so an adaptive swap can never trip the
+    ``fused=True`` + event-blocked ValueError or silently re-select the
+    engine it already runs."""
+    try:
+        return select_step_engine(gather="event", **sel_kw).event
+    except ValueError:
+        return False
+
+
 def make_core_step(
     *,
     registry,
@@ -158,6 +194,9 @@ def make_core_step(
     record_raster: bool = False,
     record_v: bool = False,
     fused: Optional[bool] = None,
+    gather: str = "dense",
+    event_cap_frac: float = 0.05,
+    event_plan: Optional[EventPlan] = None,
     identity_exchange: Optional[bool] = None,
     engine_choice: Optional[StepEngineChoice] = None,
 ) -> Callable:
@@ -203,6 +242,14 @@ def make_core_step(
             n_p=n_p,
             n_global=n_global,
             fused=fused,
+            gather="dense" if gather == "auto" else gather,
+            event_cap_frac=event_cap_frac,
+        )
+    if choice.event and event_plan is None:
+        event_plan = EventPlan.build(
+            dev.cols, dev.valid, n_global, D,
+            event_id_cap(n_global, event_cap_frac),
+            interpret=backend != "pallas",
         )
     if choice.fused:
         neuron_step = None
@@ -219,9 +266,9 @@ def make_core_step(
         i_syn = jax.lax.dynamic_index_in_dim(
             carry["ring"], slot, axis=0, keepdims=False
         )
-        if not choice.split:
-            # the split post-exchange kernels rotate the ring themselves;
-            # the other engines clear the delivered slot here
+        if not (choice.split or choice.event):
+            # the split/event post-exchange kernels rotate the ring
+            # themselves; the other engines clear the delivered slot here
             ring = jax.lax.dynamic_update_index_in_dim(
                 carry["ring"], jnp.zeros((carry["ring"].shape[1],),
                                          carry["ring"].dtype),
@@ -238,10 +285,10 @@ def make_core_step(
             noise = jnp.zeros((n_p,), jnp.float32)
 
         overflow = jnp.zeros((), jnp.int32)
-        if choice.split:
-            # both split engines precompute the slot arithmetic into masks
-            # so their post-exchange kernel needs no dynamic indexing —
-            # the write rows are data, not control flow
+        if choice.split or choice.event:
+            # the split/event engines precompute the slot arithmetic into
+            # masks so their post-exchange kernel needs no dynamic indexing
+            # — the write rows are data, not control flow
             d_rows = jnp.arange(D)
             clear_mask = (d_rows != slot).astype(jnp.float32)
             write_slots = jnp.stack(
@@ -330,6 +377,30 @@ def make_core_step(
             act, _, overflow = exchange(spikes, carry["tr_plus"])
             ring = ops.fused_post_exchange(
                 act, carry["ring"], clear_mask, write_onehot,
+                dev.cols, carry["weights"], backend=backend,
+            )
+            new_weights = carry["weights"]
+            tr_plus, tr_minus = carry["tr_plus"], carry["tr_minus"]
+        elif choice.event:
+            # event-driven gather: fused {LIF + emit}, the exchange, then
+            # the activity vector is compressed to spike ids on-device and
+            # the post-exchange kernel gathers ONLY synapse row blocks
+            # flagged as touched by an active presynaptic id — bit-equal
+            # to the dense sweep (fused_event: identity exchange, the
+            # activity is the partition's own spike vector)
+            vtx = carry["vtx_state"]
+            i_tot = i_syn + noise + vtx[:, LIF_BIAS]
+            v2, r2, spikes = ops.fused_pre_exchange(
+                vtx[:, LIF_V], vtx[:, LIF_REF], i_tot,
+                params=lif_params, backend=backend,
+            )
+            vtx_state = (
+                vtx.at[:, LIF_V].set(v2).at[:, LIF_REF].set(r2)
+            )
+            act, _, overflow = exchange(spikes, carry["tr_plus"])
+            sel, flags = event_plan.select(act)
+            ring = ops.event_post_exchange(
+                act, carry["ring"], clear_mask, write_onehot, sel, flags,
                 dev.cols, carry["weights"], backend=backend,
             )
             new_weights = carry["weights"]
@@ -448,8 +519,22 @@ class Simulator:
             record_raster=cfg.record_raster,
             record_v=cfg.record_v,
             fused=cfg.fused,
+            gather=cfg.gather,
+            event_cap_frac=cfg.event_cap_frac,
         )
         self.engine_choice: StepEngineChoice = self._step.engine_choice
+        self.event_capable = _probe_event_capable(
+            backend=self.backend,
+            models_present=_models_present(net),
+            any_plastic=self.dev.any_plastic and stdp is not None,
+            identity_exchange=True,
+            identity_rows=all(self.dev.identity_rows),
+            n_delay_buckets=len(self.dev.delays),
+            n_p=self.dev.n_p,
+            n_global=net.n,
+            fused=cfg.fused,
+            event_cap_frac=cfg.event_cap_frac,
+        )
 
     def init_state(self, t0: int = 0) -> Dict:
         n_p = self.dev.n_p

@@ -174,6 +174,61 @@ def test_unshared_modes_are_skipped_not_gated(reports, capsys):
     assert "brand_new_mode" in out and "plastic_k1_fused" in out
 
 
+def test_strict_fails_on_current_only_mode(reports, capsys):
+    """Acceptance: --strict turns an ungated new mode into a hard CI
+    failure — a new engine's benchmark numbers cannot land without a
+    baseline entry gating them."""
+    base, bpath, cpath = reports
+    cur = copy.deepcopy(base)
+    cur["modes"]["event_lo_event"] = {"us_per_step": 55.0}
+    _write(cpath, cur)
+    rc = check_regression.main(
+        ["--baseline", bpath, "--current", cpath, "--strict"]
+    )
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "FAIL (--strict)" in out and "event_lo_event" in out
+    assert "refresh benchmarks/baseline.json" in out
+    # without --strict the same report only warns (pre-existing behavior)
+    rc = check_regression.main(["--baseline", bpath, "--current", cpath])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "not yet gated" in out
+
+
+def test_strict_passes_when_modes_match(reports):
+    """--strict changes nothing when every current mode is gated —
+    including when the BASELINE has extra modes (a removed benchmark must
+    not brick CI; removal is reported and skipped)."""
+    base, bpath, cpath = reports
+    assert check_regression.main(
+        ["--baseline", bpath, "--current", cpath, "--strict"]
+    ) == 0
+    cur = copy.deepcopy(base)
+    del cur["modes"]["plastic_k1_fused"]
+    _write(cpath, cur)
+    assert check_regression.main(
+        ["--baseline", bpath, "--current", cpath, "--strict"]
+    ) == 0
+
+
+def test_strict_still_reports_regressions_first(reports, capsys):
+    """A run with BOTH a regression and an ungated mode fails either way,
+    and --strict reports the missing-baseline failure (the actionable
+    one: the fix is refreshing the baseline, which also re-gates)."""
+    base, bpath, cpath = reports
+    cur = copy.deepcopy(base)
+    cur["modes"]["k1_fused"]["us_per_step"] *= 2.0
+    cur["modes"]["event_lo_event"] = {"us_per_step": 55.0}
+    _write(cpath, cur)
+    rc = check_regression.main(
+        ["--baseline", bpath, "--current", cpath, "--strict"]
+    )
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out
+
+
 def test_empty_or_disjoint_reports_error(reports, tmp_path):
     _, bpath, _ = reports
     empty = tmp_path / "empty.json"
@@ -188,10 +243,19 @@ def test_committed_baseline_passes_against_itself():
     assert os.path.exists(BASELINE), "benchmarks/baseline.json missing"
     rc = check_regression.main(
         ["--baseline", BASELINE, "--current", BASELINE,
-         "--normalize", "ref"]
+         "--normalize", "ref", "--strict"]
     )
     assert rc == 0
-    # and it contains the plastic modes this PR gates
+    # and it contains the plastic and event-gather modes CI gates
     modes = check_regression.load_modes(BASELINE)
     assert {"plastic_k1_fused", "plastic_k1_unfused",
             "plastic_dist_k2_fused", "plastic_dist_k2_unfused"} <= set(modes)
+    assert {"event_lo_dense", "event_lo_event",
+            "event_mid_dense", "event_mid_event",
+            "event_hi_dense", "event_hi_event"} <= set(modes)
+    # every mode entry records its workload's mean activity (the event
+    # engines' operating point must be legible from the report alone)
+    with open(BASELINE) as f:
+        entries = json.load(f)["modes"]
+    missing = [m for m, e in entries.items() if "mean_activity" not in e]
+    assert not missing, f"modes without mean_activity: {missing}"

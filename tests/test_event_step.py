@@ -1,0 +1,450 @@
+"""Event-driven gather engine (fused_event / fused_split_event): kernel
+parity vs the dense post-exchange across activity regimes (silent,
+localized-sparse, all-fire, id-buffer overflow), the build-time
+touch-bitmap/selector machinery, dispatcher eligibility and blocker
+strings, SimConfig validation, end-to-end k=1 bit-exactness vs the dense
+fused engine, Session's activity-adaptive gather switching, and k>1
+distributed parity across dense/index exchanges (subprocess)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from helpers import run_with_devices
+from repro.kernels import dispatch, ops
+from repro.kernels.event_step import (
+    EventPlan, build_touch_masks, event_select,
+)
+from repro.snn import SimConfig, microcircuit, to_dcsr
+from repro.snn.simulator import Simulator
+
+
+# -- fixtures: a post-exchange case with block-local topology --------------
+#
+# rows of row block b draw their presynaptic ids only from the id range
+# [b*width, (b+1)*width) — so one active id flags exactly one block and
+# the skip machinery is actually exercised (random topology at test sizes
+# touches every block from every id, making flag tests vacuous)
+
+def _blocked_case(rng, n_global=240, n_p=60, R=64, ks=(16, 8), delays=(1, 3),
+                  slot=2, nb=4):
+    D = max(delays)
+    slot = slot % D
+    block_r = R // nb
+    width = n_global // nb
+    ring = jnp.asarray(rng.normal(size=(D, n_p)).astype(np.float32))
+    clear = (jnp.arange(D) != slot).astype(jnp.float32)
+    onehot = (
+        jnp.asarray([[(slot + d) % D] for d in delays])
+        == jnp.arange(D)[None, :]
+    ).astype(jnp.float32)
+    cols, weights, valid = [], [], []
+    for K in ks:
+        c = np.zeros((R, K), np.int32)
+        for b in range(nb):
+            c[b * block_r:(b + 1) * block_r] = rng.integers(
+                b * width, (b + 1) * width, (block_r, K)
+            )
+        v = (rng.random((R, K)) < 0.8).astype(np.float32)
+        # plant one guaranteed valid reference to id b*width per block, so
+        # flag assertions don't depend on the random draw hitting an id
+        for b in range(nb):
+            c[b * block_r, 0] = b * width
+            v[b * block_r, 0] = 1.0
+        v[n_p:] = 0  # padded rows hold no valid synapses
+        w = rng.normal(size=(R, K)).astype(np.float32) * v  # dCSR invariant
+        cols.append(jnp.asarray(c))
+        weights.append(jnp.asarray(w))
+        valid.append(jnp.asarray(v))
+    touch = [
+        jnp.asarray(m) for m in
+        build_touch_masks(cols, valid, n_global, nb, block_r)
+    ]
+    return dict(
+        n_global=n_global, n_p=n_p, R=R, nb=nb, block_r=block_r,
+        width=width, ring=ring, clear=clear, onehot=onehot,
+        cols=tuple(cols), weights=tuple(weights), valid=tuple(valid),
+        touch=touch,
+    )
+
+
+# -- event_select / build_touch_masks --------------------------------------
+
+def test_event_select_silent_flags_nothing(rng):
+    case = _blocked_case(rng)
+    act = jnp.zeros(case["n_global"], jnp.float32)
+    sel, flags = event_select(act, case["touch"], cap=16)
+    assert sel.shape == flags.shape == (len(case["touch"]), case["nb"])
+    assert int(np.asarray(flags).sum()) == 0
+    assert int(np.asarray(sel).sum()) == 0  # clamped to block 0
+
+
+def test_event_select_localized_id_flags_its_block(rng):
+    """One active id in block 2's id range flags block 2 only; sel aliases
+    the unflagged blocks after it to 2 (skipped HBM re-fetch) and clamps
+    the ones before it to 0."""
+    case = _blocked_case(rng)
+    act = np.zeros(case["n_global"], np.float32)
+    act[2 * case["width"]] = 1.0  # the planted id of block 2
+    sel, flags = event_select(jnp.asarray(act), case["touch"], cap=16)
+    flags = np.asarray(flags)
+    sel = np.asarray(sel)
+    for i in range(flags.shape[0]):
+        np.testing.assert_array_equal(flags[i], [0, 0, 1, 0])
+        np.testing.assert_array_equal(sel[i], [0, 0, 2, 2])
+
+
+def test_event_select_overflow_degrades_to_dense(rng):
+    """More active ids than the buffer capacity flags EVERY block — the
+    in-step dense fallback (exact, never dropped spikes)."""
+    case = _blocked_case(rng)
+    act = np.zeros(case["n_global"], np.float32)
+    act[:5] = 1.0  # 5 active ids, all in block 0's range
+    sel, flags = event_select(jnp.asarray(act), case["touch"], cap=4)
+    assert int(np.asarray(flags).min()) == 1
+    np.testing.assert_array_equal(
+        np.asarray(sel),
+        np.broadcast_to(np.arange(case["nb"]), np.asarray(sel).shape),
+    )
+    # ...and with capacity for all of them, only block 0 is flagged
+    _, flags_ok = event_select(jnp.asarray(act), case["touch"], cap=8)
+    np.testing.assert_array_equal(
+        np.asarray(flags_ok)[:, 1:], 0
+    )
+
+
+def test_touch_masks_exclude_padding_slots(rng):
+    """An id referenced only by an invalid (padding) slot must not flag
+    the block — zero-weight padding never contributes current."""
+    n_global, R, K, nb = 64, 16, 4, 4
+    block_r = R // nb
+    cols = [np.zeros((R, K), np.int32)]
+    valid = [np.zeros((R, K), np.float32)]
+    cols[0][0, 0] = 7   # valid slot in block 0
+    valid[0][0, 0] = 1.0
+    cols[0][block_r, 0] = 7  # the same id, but an invalid slot in block 1
+    masks = build_touch_masks(cols, valid, n_global, nb, block_r)
+    assert masks[0][0, 7] == 1
+    assert masks[0][1, 7] == 0
+    assert masks[0].sum() == 1
+
+
+def test_event_id_cap_floor():
+    assert dispatch.event_id_cap(1000, 0.05) == 50
+    assert dispatch.event_id_cap(100, 0.05) == 32  # floored for tiny nets
+    assert dispatch.event_id_cap(10**6, 0.05) == 50_000
+
+
+# -- kernel parity vs the dense post-exchange ------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+@pytest.mark.parametrize("regime", ["silent", "sparse", "all_fire",
+                                    "overflow"])
+def test_event_post_exchange_matches_dense(rng, regime, backend):
+    """Acceptance: the event-driven gather is exact in every activity
+    regime — silent (step-level skip), localized-sparse (block-level
+    skip), all-fire (nothing skippable) and id-buffer overflow (in-step
+    dense fallback)."""
+    case = _blocked_case(rng)
+    act = np.zeros(case["n_global"], np.float32)
+    cap = 16
+    if regime == "sparse":
+        act[2 * case["width"]] = 1.0
+        act[3 * case["width"]] = 1.0
+    elif regime == "all_fire":
+        act[:] = 1.0
+    elif regime == "overflow":
+        act[rng.choice(case["n_global"], 12, replace=False)] = 1.0
+        cap = 4
+    act = jnp.asarray(act)
+    sel, flags = event_select(act, case["touch"], cap=cap)
+    if regime == "sparse":  # the skip machinery must actually engage
+        assert 0 < int(np.asarray(flags).sum()) < flags.size
+    args = (act, case["ring"], case["clear"], case["onehot"])
+    expect = ops.fused_post_exchange(
+        *args, case["cols"], case["weights"], backend=backend
+    )
+    got = ops.event_post_exchange(
+        *args, sel, flags, case["cols"], case["weights"], backend=backend
+    )
+    assert got.shape == expect.shape
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(expect), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_event_post_exchange_rejects_mismatched_selector(rng):
+    """sel/flags built for a different block count must be refused, not
+    silently misindexed."""
+    case = _blocked_case(rng)
+    act = jnp.zeros(case["n_global"], jnp.float32)
+    nd = len(case["cols"])
+    bad_sel = jnp.zeros((nd, 7), jnp.int32)  # 64 rows % 7 blocks != 0
+    with pytest.raises(AssertionError, match="not divisible"):
+        ops.event_post_exchange(
+            act, case["ring"], case["clear"], case["onehot"],
+            bad_sel, bad_sel, case["cols"], case["weights"],
+            backend="pallas_interpret",
+        )
+
+
+# -- EventPlan --------------------------------------------------------------
+
+def test_event_plan_build_and_select_roundtrip(rng):
+    case = _blocked_case(rng)
+    plan = EventPlan.build(
+        case["cols"], case["valid"], case["n_global"], d_ring=4, cap=16,
+        interpret=True,
+    )
+    assert plan.block_r * plan.num_blocks == case["R"]
+    assert plan.cap == 16
+    assert all(
+        t.shape == (plan.num_blocks, case["n_global"]) for t in plan.touch
+    )
+    act = jnp.zeros(case["n_global"], jnp.float32)
+    sel, flags = plan.select(act)
+    assert sel.shape == flags.shape == (len(case["cols"]), plan.num_blocks)
+
+
+def test_event_plan_with_touch_checks_geometry(rng):
+    case = _blocked_case(rng)
+    plan = EventPlan.build(
+        case["cols"], case["valid"], case["n_global"], d_ring=4, cap=16,
+        interpret=True,
+    )
+    swapped = plan.with_touch([jnp.zeros_like(t) for t in plan.touch])
+    assert (swapped.block_r, swapped.num_blocks, swapped.cap) == (
+        plan.block_r, plan.num_blocks, plan.cap
+    )
+    with pytest.raises(AssertionError):
+        plan.with_touch([
+            jnp.zeros((plan.num_blocks + 1, case["n_global"]), jnp.uint8)
+            for _ in plan.touch
+        ])
+
+
+# -- dispatcher: engine selection and blocker strings ----------------------
+
+ELIGIBLE = dict(
+    backend="pallas", models_present=("lif",), any_plastic=False,
+    identity_exchange=True, identity_rows=True, n_delay_buckets=2,
+    n_p=1024,
+)
+
+
+def test_select_step_engine_event_variants():
+    c = dispatch.select_step_engine(**ELIGIBLE, gather="event")
+    assert c.engine == "fused_event"
+    assert c.event and c.fused and not c.split
+    assert "event-driven gather" in c.reason
+    c = dispatch.select_step_engine(
+        **{**ELIGIBLE, "identity_exchange": False}, n_global=4096,
+        gather="event",
+    )
+    assert c.engine == "fused_split_event"
+    assert c.event and c.split
+    # dense stays the default
+    assert not dispatch.select_step_engine(**ELIGIBLE).event
+
+
+def test_select_step_engine_event_plastic_falls_back_dense():
+    """A plastic partition is event-ineligible (skipping panels would skip
+    learning): gather='event' falls back to the dense plastic engine with
+    the reason attached — it does NOT silently run the event gather."""
+    c = dispatch.select_step_engine(
+        **{**ELIGIBLE, "any_plastic": True}, gather="event"
+    )
+    assert c.engine == "fused_plastic" and not c.event
+    assert "event gather unavailable" in c.reason
+    assert "plastic" in c.reason
+
+
+def test_select_step_engine_event_demanded_on_ineligible_raises():
+    """Acceptance: fused=True + gather='event' on an ineligible partition
+    raises with the blocker string, instead of quietly running dense."""
+    with pytest.raises(ValueError,
+                       match="event-driven gather requested but.*plastic"):
+        dispatch.select_step_engine(
+            **{**ELIGIBLE, "any_plastic": True}, fused=True, gather="event"
+        )
+
+
+def test_select_step_engine_event_id_buffer_budget():
+    """A compressed id buffer past its VMEM budget blocks the event
+    gather (dense fallback / raise), and the blocker names the knob."""
+    big = {**ELIGIBLE, "identity_exchange": False}
+    n_global = 2 * dispatch.EVENT_MAX_IDS  # cap_frac=1.0 -> over budget
+    c = dispatch.select_step_engine(
+        **big, n_global=n_global, gather="event", event_cap_frac=1.0
+    )
+    assert c.engine == "fused_split" and not c.event
+    assert "VMEM budget" in c.reason and "event_cap_frac" in c.reason
+    with pytest.raises(ValueError, match="VMEM budget"):
+        dispatch.select_step_engine(
+            **big, n_global=n_global, fused=True, gather="event",
+            event_cap_frac=1.0,
+        )
+    # a smaller cap fraction restores eligibility
+    assert dispatch.select_step_engine(
+        **big, n_global=n_global, gather="event", event_cap_frac=0.05
+    ).event
+
+
+def test_select_step_engine_rejects_unresolved_auto():
+    with pytest.raises(ValueError, match="resolved by Session"):
+        dispatch.select_step_engine(**ELIGIBLE, gather="auto")
+
+
+def test_simconfig_validates_gather_knobs():
+    with pytest.raises(ValueError, match="gather"):
+        SimConfig(gather="sparse")
+    with pytest.raises(ValueError, match="event_cap_frac"):
+        SimConfig(event_cap_frac=0.0)
+    with pytest.raises(ValueError, match="event_cap_frac"):
+        SimConfig(event_cap_frac=1.5)
+    assert SimConfig(gather="event", event_cap_frac=0.5).gather == "event"
+
+
+# -- end to end (k = 1) ----------------------------------------------------
+
+def _mc():
+    return to_dcsr(microcircuit(scale=0.01, seed=0), k=1)
+
+
+def test_event_sim_bit_exact_vs_dense_fused_k1():
+    """Acceptance: the fused_event engine reproduces the dense fused
+    engine bit-for-bit (raster, spike counts) and the unfused oracle on
+    the microcircuit config — the block skipping is pure scheduling."""
+    sims = {}
+    for gather, want in (("dense", "fused"), ("event", "fused_event")):
+        sim = Simulator(_mc(), SimConfig(
+            align_k=32, backend="pallas_interpret", fused=True,
+            gather=gather, record_raster=True,
+        ))
+        assert sim.engine_choice.engine == want
+        sims[gather] = sim.run(sim.init_state(), 50)
+    st_d, out_d = sims["dense"]
+    st_e, out_e = sims["event"]
+    ras = np.asarray(out_d["raster"])
+    np.testing.assert_array_equal(ras, np.asarray(out_e["raster"]))
+    np.testing.assert_array_equal(
+        np.asarray(out_d["spike_count"]), np.asarray(out_e["spike_count"])
+    )
+    assert int(ras.sum()) > 0, "microcircuit run emitted no spikes"
+    np.testing.assert_allclose(
+        np.asarray(st_d["vtx_state"]), np.asarray(st_e["vtx_state"]),
+        rtol=1e-5, atol=1e-5,
+    )
+    sim_r = Simulator(_mc(), SimConfig(
+        align_k=32, backend="ref", record_raster=True
+    ))
+    _, out_r = sim_r.run(sim_r.init_state(), 50)
+    np.testing.assert_array_equal(np.asarray(out_r["raster"]), ras)
+
+
+def test_event_demanded_on_plastic_net_raises():
+    from repro.snn import balanced_ei
+
+    net = to_dcsr(balanced_ei(150, stdp=True, seed=5, delay_steps=5), k=1)
+    with pytest.raises(ValueError,
+                       match="event-driven gather requested but.*plastic"):
+        Simulator(net, SimConfig(
+            align_k=8, backend="pallas_interpret", fused=True,
+            gather="event",
+        ))
+
+
+# -- Session: activity-adaptive gather dispatch ----------------------------
+
+def test_session_auto_switches_to_event_and_matches_dense():
+    """gather='auto' starts dense; the microcircuit's observed spike rate
+    (~1e-4) sits under EVENT_ACTIVITY_THRESHOLD, so the chunk loop swaps
+    to the event engine mid-run — without changing the trajectory."""
+    from repro.snn import Session
+    from repro.snn.monitors import RasterMonitor
+
+    cfg = dict(align_k=32, backend="pallas_interpret", fused=True)
+    ras_a = RasterMonitor()
+    sa = Session(_mc(), SimConfig(gather="auto", **cfg))
+    sa.run(96, monitors=[ras_a], chunk_size=24)
+    modes = sa.last_gather_modes
+    assert modes[0] == "dense", modes  # auto always starts dense
+    assert "event" in modes, modes  # ...and crossed the threshold mid-run
+    assert modes[-1] == "event", modes
+    assert sa.describe()["gather"] == "event"
+
+    ras_d = RasterMonitor()
+    sd = Session(_mc(), SimConfig(gather="dense", **cfg))
+    sd.run(96, monitors=[ras_d], chunk_size=24)
+    assert sd.last_gather_modes == ("dense",) * 4
+    np.testing.assert_array_equal(ras_a.raster, ras_d.raster)
+
+
+def test_session_auto_stays_dense_on_busy_net():
+    """A strongly driven net keeps the running spike rate above the
+    threshold: auto never leaves the dense sweep."""
+    from repro.snn import Session
+
+    net = microcircuit(scale=0.01, seed=0)
+    net.vtx_state[:, 2] += 2000.0  # suprathreshold bias: ~5% rate
+    sa = Session(to_dcsr(net, k=1), SimConfig(
+        align_k=32, backend="pallas_interpret", fused=True, gather="auto",
+    ))
+    sa.run(60, chunk_size=20)
+    assert sa.last_gather_modes == ("dense",) * 3
+
+
+def test_session_explicit_event_runs_event_everywhere():
+    from repro.snn import Session
+
+    ses = Session(_mc(), SimConfig(
+        align_k=32, backend="pallas_interpret", fused=True, gather="event",
+    ))
+    ses.run(40, chunk_size=20)
+    assert ses.last_gather_modes == ("event", "event")
+
+
+# -- distributed (k > 1): subprocess with fake host devices ----------------
+
+def test_dist_event_bit_exact_vs_dense_k2_k4():
+    """Acceptance: fused_split_event == fused_split bit-for-bit at k=2
+    (dense exchange) and k=4 (dense + compressed index exchange) — the
+    per-partition touch bitmaps ride shard_map correctly."""
+    run_with_devices("""
+        import copy
+
+        import numpy as np
+
+        from repro.snn import (
+            DistSimulator, SimConfig, microcircuit, to_dcsr,
+        )
+
+        def build(k):
+            return to_dcsr(
+                microcircuit(scale=0.01, seed=0), k=k, uniform=True
+            )
+
+        for k, exchanges in ((2, ("dense",)), (4, ("dense", "index"))):
+            for exchange in exchanges:
+                outs = {}
+                for gather, want in (
+                    ("dense", "fused_split"), ("event", "fused_split_event")
+                ):
+                    dist = DistSimulator(build(k), SimConfig(
+                        align_k=32, backend="pallas_interpret", fused=True,
+                        exchange=exchange, gather=gather,
+                        record_raster=True,
+                    ))
+                    assert dist.engine_choice.engine == want, (
+                        k, exchange, dist.engine_choice
+                    )
+                    _, outs[gather] = dist.run(dist.init_state(), 30)
+                for key in ("raster", "spike_count"):
+                    np.testing.assert_array_equal(
+                        np.asarray(outs["dense"][key]),
+                        np.asarray(outs["event"][key]),
+                    )
+                total = int(np.asarray(outs["dense"]["spike_count"]).sum())
+                assert total > 0, (k, exchange, "silent run proves nothing")
+                print("OK", k, exchange, total)
+    """, n_devices=8)

@@ -95,7 +95,8 @@ def test_session_keeps_single_engine_instance():
     assert ses._engine_obj is e0
     ses.run(10, monitors=[RasterMonitor()], chunk_size=10)
     assert ses._engine_obj is not e0  # swapped, not added
-    assert ses._engine_flags == (True, False)
+    # key: (record_raster, record_v, resolved gather mode)
+    assert ses._engine_flags == (True, False, "dense")
 
 
 # -- save / restore ---------------------------------------------------------
