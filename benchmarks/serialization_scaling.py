@@ -67,6 +67,17 @@ def partition_independence(scale=0.02) -> List[dict]:
     return rows
 
 
+def collect(quick=True):
+    """Structured results for the ``spike_throughput`` JSON merge:
+    ``(rows, linearity_ratio, kinv_rows)``.  ``linearity_ratio`` is
+    max/min text bytes-per-synapse across scales — machine-invariant
+    (pure format arithmetic), ~1.0 when on-disk cost is linear in
+    synapses as the paper's table requires."""
+    rows = run(quick=quick)
+    bps = [r["text_bytes_per_syn"] for r in rows]
+    return rows, max(bps) / min(bps), partition_independence()
+
+
 def main(quick=True):
     rows = run(quick=quick)
     bps = [r["text_bytes_per_syn"] for r in rows]

@@ -1,0 +1,37 @@
+"""Procedural per-partition network construction + streaming dCSR ingest.
+
+Two entry paths that both bypass whole-network host materialization:
+
+- :mod:`repro.builder.rules` / :mod:`repro.builder.procedural` — declare a
+  network as populations + connectivity rules (:class:`RuleSpec`) and emit
+  each partition's dCSR rows directly, chunk by chunk, with counter-based
+  seeding so any k / chunk size / backend builds the bit-identical network.
+- :mod:`repro.builder.ingest` — chunked streaming reader over on-disk dCSR
+  snapshots (``open_snapshot`` -> ``iter_rows``) feeding partition assembly
+  and ``Session.restore(streaming=True)`` without holding more than one
+  chunk plus one partition in host memory.
+"""
+
+from .rules import (  # noqa: F401
+    ConnectRule,
+    DistanceKernel,
+    Population,
+    RuleSpec,
+    balanced_ei_rules,
+    microcircuit_rules,
+    spatial_random_rules,
+)
+from .procedural import (  # noqa: F401
+    DEFAULT_CHUNK_ROWS,
+    build_network,
+    build_partition,
+    network_def,
+    resolve_build_path,
+)
+from .ingest import (  # noqa: F401
+    RowChunk,
+    SnapshotReader,
+    load_binary_streamed,
+    load_merged_streamed,
+    open_snapshot,
+)

@@ -1,0 +1,463 @@
+"""Procedural per-partition dCSR construction.
+
+Emits each partition's dCSR rows *directly* from a :class:`RuleSpec` —
+row-block at a time, two passes (degree pass -> exact-fit allocation ->
+fill pass) — so no whole-network ``NetworkDef`` ever exists on the host.
+Every draw is counter-based (:mod:`repro.builder.crng`), keyed on
+``(seed, stream, global row, draw index)``, so the result is bit-identical
+for any partition count, any chunk size, and either sampling path:
+
+- ``path="ref"``     NumPy oracle (pure host uint32 keystream).
+- ``path="device"``  keystream words computed by the registered
+                     ``builder_keystream`` kernel (jnp oracle or Pallas);
+                     all floating-point assembly still happens host-side
+                     in the same NumPy code, so words -> network is one
+                     shared code path.
+- ``path="auto"``    "device" when the simulation backend resolves to
+                     Pallas (i.e. on TPU), else "ref".
+
+The eager bridge :func:`network_def` materializes the same network as a
+legacy ``NetworkDef``; ``to_dcsr(network_def(spec), k=k)`` is bit-equal
+to :func:`build_network`'s direct emission because chunks are emitted in
+row-major order with within-row edges source-sorted — exactly the order
+``from_edges``'s stable ``lexsort((nsrc, ndst))`` produces under the
+identity relabelling of a block partition.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..core.dcsr import DCSRNetwork, DCSRPartition
+from . import crng
+from .rules import ConnectRule, RuleSpec
+
+DEFAULT_CHUNK_ROWS = 8192
+
+# to_dcsr's dummy-vertex padding constants (uniform partitions for SPMD).
+_PAD_V = -1e6
+_PAD_REFRAC = 1e9
+
+
+def _default_registry():
+    from ..core.state import default_registry
+    from ..snn.neurons import registry_with_bias
+
+    return registry_with_bias(default_registry())
+
+
+def resolve_build_path(path: str = "auto") -> str:
+    if path not in ("auto", "ref", "device"):
+        raise ValueError(f"unknown build path {path!r}")
+    if path != "auto":
+        return path
+    try:
+        from ..kernels.dispatch import resolve_sim_backend
+
+        return "device" if resolve_sim_backend() == "pallas" else "ref"
+    except Exception:
+        return "ref"
+
+
+class _Words:
+    """Keystream word source: the only place ref and device paths differ."""
+
+    def __init__(self, seed: int, path: str, backend: Optional[str] = None):
+        self.seed = int(seed)
+        self.path = path
+        self.backend = backend
+
+    def __call__(self, stream, rows, j0, n_words):
+        rows = np.asarray(rows)
+        if rows.size == 0 or n_words == 0:
+            return np.zeros((rows.size, n_words), np.uint32)
+        if self.path == "ref":
+            return crng.word_matrix(self.seed, stream, rows, j0, n_words, xp=np)
+        from ..kernels import ops
+
+        w = ops.builder_keystream(
+            self.seed, int(stream), rows.astype(np.int32), int(j0),
+            int(n_words), backend=self.backend,
+        )
+        return np.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# Vertex state
+# ---------------------------------------------------------------------------
+
+
+def _coords_for_ids(spec: RuleSpec, words: _Words, ids: np.ndarray) -> np.ndarray:
+    """Unit-cube coordinates of arbitrary global vertex ids (float32)."""
+    ids = np.asarray(ids, np.int64)
+    out = np.empty((len(ids), 3), np.float32)
+    for pop, (a, b) in zip(spec.populations, spec.offsets().values()):
+        mask = (ids >= a) & (ids < b)
+        if not mask.any():
+            continue
+        cw = words(crng.STREAM_COORD, ids[mask], 0, 4)
+        c = crng.uniform01(cw[:, :3])
+        if pop.slab is not None:
+            i, t = pop.slab
+            c[:, 2] = (np.float32(i) + c[:, 2]) / np.float32(t)
+        out[mask] = c
+    return out
+
+
+def _vertex_block(spec, words, registry, r0, r1):
+    """(vtx_model, vtx_state, coords) for global rows [r0, r1)."""
+    R = r1 - r0
+    lif = registry.spec("lif").params
+    v_lo = np.float32(lif["v_reset"])
+    v_span = np.float32(lif["v_thresh"] - lif["v_reset"])
+    vmodel = np.full(R, registry.vertex_id("lif"), np.int32)
+    vstate = np.zeros((R, registry.max_vertex_state), np.float32)
+    rows = np.arange(r0, r1, dtype=np.int64)
+    coords = _coords_for_ids(spec, words, rows)
+    for pop, (a, b) in zip(spec.populations, spec.offsets().values()):
+        lo, hi = max(a, r0), min(b, r1)
+        if lo >= hi:
+            continue
+        sl = slice(lo - r0, hi - r0)
+        prows = np.arange(lo, hi, dtype=np.int64)
+        if pop.v_uniform:
+            u = crng.uniform01(words(crng.STREAM_V, prows, 0, 1)[:, 0])
+            vstate[sl, 0] = v_lo + u * v_span
+        else:
+            vstate[sl, 0] = np.float32(pop.v_init)
+        z = crng.standard_normal(words(crng.STREAM_BIAS, prows, 0, crng.NORMAL_WORDS))
+        vstate[sl, 2] = np.float32(pop.bias_mu) + np.float32(pop.bias_sigma) * z
+    return vmodel, vstate, coords
+
+
+# ---------------------------------------------------------------------------
+# Connectivity
+# ---------------------------------------------------------------------------
+
+
+def _rule_chunk(spec, words, ri: int, rule: ConnectRule, r0: int, r1: int,
+                registry, fill: bool):
+    """Sample rule ``ri``'s in-edges for target rows [r0, r1).
+
+    Returns ``(deg, payload)`` where ``deg`` is the per-row degree over
+    the whole chunk and ``payload`` (fill pass only) carries the masked
+    candidate arrays.  Degree and fill passes consume identical
+    keystream words, so they agree by construction.
+    """
+    offs = spec.offsets()
+    a, b = offs[rule.dst]
+    lo, hi = max(a, r0), min(b, r1)
+    deg_all = np.zeros(r1 - r0, np.int64)
+    if lo >= hi:
+        return deg_all, None
+    rows = np.arange(lo, hi, dtype=np.int64)
+    R = len(rows)
+    sa, sb = offs[rule.src]
+    n_src = sb - sa
+    d2 = None
+
+    if rule.fan_in:
+        C = rule.fan_in
+        sw = words(crng.rule_stream(ri, crng.SRC_OFF), rows, 0, C)
+        rel = crng.uint_below(sw, n_src).astype(np.int64)
+        if rule.no_self:
+            # deterministic remap keeps the exact in-degree
+            self_rel = rows[:, None] - sa
+            rel = np.where(rel == self_rel, (rel + 1) % n_src, rel)
+        src = sa + rel
+        valid = np.ones((R, C), bool)
+    elif rule.p > 0.0:
+        lam = rule.p * n_src
+        base = int(lam)
+        thr = np.uint32(int(round((lam - base) * (1 << 24))))
+        dw = words(crng.rule_stream(ri, crng.DEGREE_OFF), rows, 0, 2)
+        extra = crng.u24(dw[:, 0]) < thr
+        deg = base + extra.astype(np.int64)
+        C = base + 1
+        valid = np.arange(C, dtype=np.int64)[None, :] < deg[:, None]
+        sw = words(crng.rule_stream(ri, crng.SRC_OFF), rows, 0, C)
+        src = sa + crng.uint_below(sw, n_src).astype(np.int64)
+        if rule.no_self:
+            valid &= src != rows[:, None]
+    else:  # distance kernel
+        C = rule.candidates
+        sw = words(crng.rule_stream(ri, crng.SRC_OFF), rows, 0, C)
+        src = sa + crng.uint_below(sw, n_src).astype(np.int64)
+        tgt_xyz = _coords_for_ids(spec, words, rows)
+        src_xyz = _coords_for_ids(spec, words, src.ravel()).reshape(R, C, 3)
+        d2 = ((src_xyz - tgt_xyz[:, None, :]) ** 2).sum(axis=-1)
+        kern = rule.kernel
+        p_acc = np.float32(kern.p_max) * np.clip(
+            np.float32(1.0) - d2 / np.float32(kern.radius**2), 0.0, 1.0
+        ).astype(np.float32)
+        aw = words(crng.rule_stream(ri, crng.ACCEPT_OFF), rows, 0, C)
+        valid = crng.uniform01(aw) < p_acc
+        if rule.no_self:
+            valid &= src != rows[:, None]
+
+    deg_all[lo - r0 : hi - r0] = valid.sum(axis=1)
+    if not fill:
+        return deg_all, None
+
+    # Weights: scale * f(mu + sigma * z), f = abs when weight_abs.
+    if rule.weight_sigma:
+        zw = words(
+            crng.rule_stream(ri, crng.WEIGHT_OFF), rows, 0, C * crng.NORMAL_WORDS
+        ).reshape(R, C, crng.NORMAL_WORDS)
+        w = np.float32(rule.weight_mu) + np.float32(rule.weight_sigma) * crng.standard_normal(zw)
+    else:
+        w = np.full((R, C), rule.weight_mu, np.float32)
+    if rule.weight_abs:
+        w = np.abs(w)
+    if rule.weight_scale != 1.0:
+        w = w * np.float32(rule.weight_scale)
+
+    if rule.delay_uniform:
+        dlw = words(crng.rule_stream(ri, crng.DELAY_OFF), rows, 0, C)
+        d = (1 + crng.uint_below(dlw, rule.delay_uniform)).astype(np.float32)
+    elif rule.delay_distance:
+        if d2 is None:  # fan_in/p rule with distance delays
+            tgt_xyz = _coords_for_ids(spec, words, rows)
+            src_xyz = _coords_for_ids(spec, words, src.ravel()).reshape(R, C, 3)
+            d2 = ((src_xyz - tgt_xyz[:, None, :]) ** 2).sum(axis=-1)
+        dm = np.float32(rule.delay_distance)
+        d = np.clip(np.ceil(np.sqrt(d2) / np.float32(3.0**0.5) * dm), 1.0, dm)
+        d = d.astype(np.float32)
+    else:
+        d = np.full((R, C), rule.delay, np.float32)
+
+    payload = {
+        "lo": lo - r0,
+        "valid": valid,
+        "src": src,
+        "w": w.astype(np.float32),
+        "d": d,
+        "emodel": registry.edge_id(rule.synapse),
+    }
+    return deg_all, payload
+
+
+def _fill_chunk(spec, words, registry, r0, r1):
+    """All edges into rows [r0, r1): row-major, within-row source-sorted.
+
+    Returns (counts (R,), col_idx, edge_model, edge_state) for the chunk.
+    """
+    R = r1 - r0
+    payloads = []
+    counts = np.zeros(R, np.int64)
+    for ri, rule in enumerate(spec.rules):
+        deg, payload = _rule_chunk(spec, words, ri, rule, r0, r1, registry, fill=True)
+        counts += deg
+        if payload is not None and payload["valid"].any():
+            payloads.append(payload)
+    max_se = registry.max_edge_state
+    if not payloads:
+        return (
+            counts,
+            np.zeros(0, np.int64),
+            np.zeros(0, np.int32),
+            np.zeros((0, max_se), np.float32),
+        )
+    rows_l, srcs, ws, ds, ems = [], [], [], [], []
+    for p in payloads:
+        ii, jj = np.nonzero(p["valid"])  # row-major within this rule
+        rows_l.append(p["lo"] + ii)
+        srcs.append(p["src"][ii, jj])
+        ws.append(p["w"][ii, jj])
+        ds.append(p["d"][ii, jj])
+        ems.append(np.full(len(ii), p["emodel"], np.int32))
+    rowf = np.concatenate(rows_l)
+    srcf = np.concatenate(srcs)
+    # stable (row, src) sort == from_edges' lexsort((nsrc, ndst)) order
+    order = np.lexsort((srcf, rowf))
+    estate = np.zeros((len(srcf), max_se), np.float32)
+    estate[:, 0] = np.concatenate(ws)[order]
+    estate[:, 1] = np.concatenate(ds)[order]
+    return counts, srcf[order], np.concatenate(ems)[order], estate
+
+
+# ---------------------------------------------------------------------------
+# Partition / network assembly
+# ---------------------------------------------------------------------------
+
+
+def _block_bounds(n: int, k: int):
+    base, rem = divmod(n, k)
+    sizes = np.full(k, base, np.int64)
+    sizes[:rem] += 1
+    return np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64), sizes
+
+
+def build_partition(
+    spec: RuleSpec,
+    k: int,
+    part_id: int,
+    *,
+    uniform: bool = False,
+    chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    path: str = "auto",
+    backend: Optional[str] = None,
+    registry=None,
+) -> DCSRPartition:
+    """Emit partition ``part_id`` of the ``k``-way block partition of ``spec``.
+
+    Only this partition's rows are ever touched; peak memory is one
+    ``chunk_rows`` row-block plus the partition's own arrays.
+    ``uniform=True`` appends the same isolated dummy vertices
+    ``to_dcsr(..., uniform=True)`` would, so SPMD shard shapes match.
+    """
+    if not (0 <= part_id < k):
+        raise ValueError(f"part_id {part_id} out of range for k={k}")
+    registry = registry or _default_registry()
+    path = resolve_build_path(path)
+    words = _Words(spec.seed, path, backend)
+    n = spec.n
+    bounds, sizes = _block_bounds(n, k)
+    r_lo, r_hi = int(bounds[part_id]), int(bounds[part_id + 1])
+    n_real = r_hi - r_lo
+    if uniform:
+        target = int(sizes.max())
+        deficit = target - sizes
+        pad = int(deficit[part_id])
+        pad_gid0 = n + int(deficit[:part_id].sum())
+        row_start = part_id * target
+        if int(deficit.sum()):
+            # Sources must carry *uniform-slot* labels (q*target + local),
+            # matching from_edges' relabelling when pads interleave.  The
+            # map is strictly monotonic so within-row order is preserved.
+            def relabel(s):
+                q = np.searchsorted(bounds, s, side="right") - 1
+                return q * target + (s - bounds[q])
+        else:
+            relabel = None
+    else:
+        pad, pad_gid0, row_start = 0, 0, r_lo
+        relabel = None
+
+    chunk_rows = max(1, int(chunk_rows))
+    chunks = list(range(r_lo, r_hi, chunk_rows))
+
+    # Pass 1: exact per-row degrees -> row_ptr (exact-fit allocation).
+    degrees = np.zeros(n_real + pad, np.int64)
+    for c0 in chunks:
+        c1 = min(c0 + chunk_rows, r_hi)
+        for ri, rule in enumerate(spec.rules):
+            deg, _ = _rule_chunk(spec, words, ri, rule, c0, c1, registry, fill=False)
+            degrees[c0 - r_lo : c1 - r_lo] += deg
+    row_ptr = np.concatenate([[0], np.cumsum(degrees)]).astype(np.int64)
+    m_p = int(row_ptr[-1])
+
+    # Pass 2: fill preallocated arrays chunk by chunk.
+    col_idx = np.empty(m_p, np.int64)
+    edge_model = np.empty(m_p, np.int32)
+    edge_state = np.empty((m_p, registry.max_edge_state), np.float32)
+    n_tot = n_real + pad
+    vtx_model = np.empty(n_tot, np.int32)
+    vtx_state = np.zeros((n_tot, registry.max_vertex_state), np.float32)
+    coords = np.zeros((n_tot, 3), np.float32)
+    for c0 in chunks:
+        c1 = min(c0 + chunk_rows, r_hi)
+        counts, csrc, cem, ces = _fill_chunk(spec, words, registry, c0, c1)
+        if relabel is not None:
+            csrc = relabel(csrc)
+        e0 = int(row_ptr[c0 - r_lo])
+        e1 = e0 + len(csrc)
+        assert counts.sum() == len(csrc) and e1 == int(row_ptr[c1 - r_lo])
+        col_idx[e0:e1] = csrc
+        edge_model[e0:e1] = cem
+        edge_state[e0:e1] = ces
+        vm, vs, cc = _vertex_block(spec, words, registry, c0, c1)
+        vtx_model[c0 - r_lo : c1 - r_lo] = vm
+        vtx_state[c0 - r_lo : c1 - r_lo] = vs
+        coords[c0 - r_lo : c1 - r_lo] = cc
+
+    global_ids = np.arange(r_lo, r_hi, dtype=np.int64)
+    if pad:
+        vtx_model[n_real:] = registry.vertex_id("lif")
+        vtx_state[n_real:, 0] = _PAD_V
+        vtx_state[n_real:, 1] = _PAD_REFRAC
+        global_ids = np.concatenate(
+            [global_ids, np.arange(pad_gid0, pad_gid0 + pad, dtype=np.int64)]
+        )
+
+    return DCSRPartition(
+        part_id=part_id,
+        row_start=row_start,
+        row_ptr=row_ptr,
+        col_idx=col_idx,
+        vtx_model=vtx_model,
+        vtx_state=vtx_state,
+        edge_model=edge_model,
+        edge_state=edge_state,
+        coords=coords,
+        global_ids=global_ids,
+    )
+
+
+def build_network(
+    spec: RuleSpec,
+    k: int = 1,
+    *,
+    uniform: bool = False,
+    chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    path: str = "auto",
+    backend: Optional[str] = None,
+) -> DCSRNetwork:
+    """Build the full k-way network by per-partition emission.
+
+    Bit-identical to ``to_dcsr(network_def(spec), k=k, uniform=uniform)``
+    for every k, chunk size, and sampling path.
+    """
+    registry = _default_registry()
+    n = spec.n
+    _, sizes = _block_bounds(n, k)
+    if uniform:
+        target = int(sizes.max())
+        dist = (np.arange(k + 1, dtype=np.int64) * target)
+    else:
+        dist = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+    parts = [
+        build_partition(
+            spec, k, p, uniform=uniform, chunk_rows=chunk_rows,
+            path=path, backend=backend, registry=registry,
+        )
+        for p in range(k)
+    ]
+    # row_ptr degrees for padded rows are absent only when pad == 0; when
+    # uniform, padded rows were appended with zero degree by construction.
+    for part in parts:
+        if part.n != len(part.row_ptr) - 1:
+            raise AssertionError("partition row_ptr inconsistent")
+    net = DCSRNetwork(dist=dist, parts=parts, registry=registry, meta=spec.meta())
+    net.validate()
+    return net
+
+
+def network_def(
+    spec: RuleSpec,
+    *,
+    chunk_rows: int = DEFAULT_CHUNK_ROWS,
+    path: str = "auto",
+    backend: Optional[str] = None,
+):
+    """Eager bridge: materialize the rule-built network as a legacy
+    ``NetworkDef`` (whole network on host — for interop and tests)."""
+    from ..snn.network import NetworkDef
+
+    part = build_partition(
+        spec, 1, 0, chunk_rows=chunk_rows, path=path, backend=backend
+    )
+    return NetworkDef(
+        n=spec.n,
+        src=part.col_idx.copy(),
+        dst=part.edge_targets(),
+        edge_state=part.edge_state,
+        vtx_model=part.vtx_model,
+        vtx_state=part.vtx_state,
+        coords=part.coords,
+        registry=_default_registry(),
+        meta=spec.meta(),
+        edge_model=part.edge_model,
+    )

@@ -40,7 +40,7 @@ import os
 import zipfile
 import zlib
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -182,30 +182,81 @@ def save_binary(
                    atomic=atomic)
 
 
-def load_binary(
-    path: str, verify: bool = True
-) -> Tuple[DCSRNetwork, Dict[int, Dict[str, np.ndarray]], int]:
-    with open(os.path.join(path, "manifest.json")) as f:
-        man = json.load(f)
-    registry = ModelRegistry.from_entries(
+def registry_from_manifest(man: Dict) -> ModelRegistry:
+    return ModelRegistry.from_entries(
         [(m[0], m[1], m[2], m[3]) for m in man["models"]],
         var_names={k: tuple(v) for k, v in man.get("layouts", {}).items()},
     )
+
+
+def check_shard_crc(path: str, p: int, man: Dict) -> str:
+    """Stream-CRC shard ``p`` against the manifest; returns its path."""
+    fn = os.path.join(path, f"part{p}.npz")
+    got = _crc(fn)
+    want = man["crc"][f"part{p}.npz"]
+    if got != want:
+        raise IOError(
+            f"checkpoint shard part{p}.npz corrupt "
+            f"(crc {got:#x} != {want:#x})"
+        )
+    return fn
+
+
+def _stub_partition(p: int, dist: np.ndarray, max_sv: int,
+                    max_se: int) -> DCSRPartition:
+    """Placeholder for a shard that was not requested (lazy load): right
+    row count, zero edges, zero-row state — never valid to simulate."""
+    n_p = int(dist[p + 1] - dist[p])
+    return DCSRPartition(
+        part_id=p, row_start=int(dist[p]),
+        row_ptr=np.zeros(n_p + 1, np.int64),
+        col_idx=np.zeros(0, np.int64),
+        vtx_model=np.zeros(0, np.int32),
+        vtx_state=np.zeros((0, max_sv), np.float32),
+        edge_model=np.zeros(0, np.int32),
+        edge_state=np.zeros((0, max_se), np.float32),
+        coords=np.zeros((0, 3), np.float32),
+        global_ids=np.zeros(0, np.int64),
+    )
+
+
+def load_binary(
+    path: str, verify: bool = True, *, parts: Optional[Sequence[int]] = None
+) -> Tuple[DCSRNetwork, Dict[int, Dict[str, np.ndarray]], int]:
+    """Load a snapshot directory.
+
+    ``parts`` (lazy per-partition load) restricts deserialization to the
+    listed partition ids: only those shards are opened and CRC-checked;
+    the other k-1 slots hold zero-edge stub partitions and the returned
+    network carries ``loaded_parts`` (a frozenset) instead of passing
+    full validation.  ``parts=None`` keeps the historical eager
+    behaviour (all shards, validated)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        man = json.load(f)
+    registry = registry_from_manifest(man)
     dist = np.asarray(man["dist"], np.int64)
-    parts: List[DCSRPartition] = []
+    k = int(man["k"])
+    if parts is None:
+        want = None
+    else:
+        want = {int(p) for p in parts}
+        bad = [p for p in want if not (0 <= p < k)]
+        if bad:
+            raise ValueError(f"requested partitions {bad} out of range for k={k}")
+    part_list: List[DCSRPartition] = []
     sim_state: Dict[int, Dict[str, np.ndarray]] = {}
-    for p in range(man["k"]):
+    for p in range(k):
+        if want is not None and p not in want:
+            part_list.append(
+                _stub_partition(p, dist, registry.max_vertex_state,
+                                registry.max_edge_state)
+            )
+            continue
         fn = os.path.join(path, f"part{p}.npz")
         if verify:
-            got = _crc(fn)
-            want = man["crc"][f"part{p}.npz"]
-            if got != want:
-                raise IOError(
-                    f"checkpoint shard part{p}.npz corrupt "
-                    f"(crc {got:#x} != {want:#x})"
-                )
+            check_shard_crc(path, p, man)
         z = np.load(fn)
-        parts.append(
+        part_list.append(
             DCSRPartition(
                 part_id=p, row_start=int(dist[p]),
                 row_ptr=z["row_ptr"], col_idx=z["col_idx"],
@@ -215,14 +266,17 @@ def load_binary(
             )
         )
         ss = {
-            k[4:]: z[k] for k in z.files if k.startswith("sim_")
+            k_[4:]: z[k_] for k_ in z.files if k_.startswith("sim_")
         }
         if ss:
             sim_state[p] = ss
     net = DCSRNetwork(
-        dist=dist, parts=parts, registry=registry, meta=man["meta"]
+        dist=dist, parts=part_list, registry=registry, meta=man["meta"]
     )
-    net.validate()
+    if want is None:
+        net.validate()
+    else:
+        net.loaded_parts = frozenset(want)  # partial: skip global validation
     return net, sim_state, int(man["t_now"])
 
 
@@ -244,7 +298,9 @@ def _snapshot_dir_candidates(root: str) -> List[Tuple[int, str]]:
 
 
 def load_latest_valid(
-    path: str, verify: bool = True
+    path: str, verify: bool = True, *,
+    parts: Optional[Sequence[int]] = None,
+    loader: Optional[Callable] = None,
 ) -> Tuple[DCSRNetwork, Dict[int, Dict[str, np.ndarray]], int]:
     """Fault-tolerant snapshot restore.
 
@@ -257,28 +313,38 @@ def load_latest_valid(
     ``atomic_dir`` between renaming the previous snapshot aside and
     renaming the new one in — is found and restored, so "at every instant
     a complete snapshot exists on disk" holds at restore time too.
+
+    ``parts`` makes the walk lazy per-partition (see :func:`load_binary`);
+    ``loader`` swaps the per-directory deserializer (signature
+    ``loader(snapshot_dir, verify=...)``) so streaming ingest
+    (``repro.builder.ingest``) shares this CRC/``.old``-fallback walk.
     """
+    if loader is None:
+        def loader(d, verify=verify):
+            return load_binary(d, verify=verify, parts=parts)
+    elif parts is not None:
+        raise ValueError("pass parts= or loader=, not both")
     old = os.fspath(path) + ".old"
     has_old = os.path.exists(os.path.join(old, "manifest.json"))
     if os.path.exists(os.path.join(path, "manifest.json")):
         try:
-            return load_binary(path, verify=verify)
+            return loader(path, verify=verify)
         except (OSError, ValueError, KeyError, zipfile.BadZipFile,
                 AssertionError):
             # corrupt final with an intact .old sibling (crash after the
             # swap but before the .old cleanup, then bit rot): fall back
             # like the step-root walk does
             if has_old:
-                return load_binary(old, verify=verify)
+                return loader(old, verify=verify)
             raise
     cands = _snapshot_dir_candidates(os.fspath(path))
     for _step, d in cands:
         try:
-            return load_binary(d, verify=verify)
+            return loader(d, verify=verify)
         except (OSError, ValueError, KeyError, zipfile.BadZipFile,
                 AssertionError):
             continue
     if not cands and has_old:
         # single-snapshot form, torn mid-swap: only the .old survived
-        return load_binary(old, verify=verify)
+        return loader(old, verify=verify)
     raise FileNotFoundError(f"no valid dCSR snapshot under {path!r}")

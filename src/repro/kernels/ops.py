@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from . import ref
 from .dispatch import lookup, register
 from .event_step import event_post_exchange_pallas
+from .keystream import keystream_jnp, keystream_pallas
 from .fused_step import (
     fused_lif_step_pallas,
     fused_plastic_step_pallas,
@@ -44,6 +45,32 @@ def _register_pallas(op: str) -> Callable:
         return fn
 
     return deco
+
+
+# -- builder_keystream (procedural construction word matrix) --------------
+
+@register("builder_keystream", "ref")
+def _builder_keystream_ref(seed, stream, rows, j0, n_words, **kw):
+    import numpy as np
+
+    return keystream_jnp(
+        np.uint32(seed), np.uint32(stream), jnp.asarray(rows),
+        np.uint32(j0), int(n_words),
+    )
+
+
+_register_pallas("builder_keystream")(keystream_pallas)
+
+
+def builder_keystream(
+    seed, stream, rows, j0, n_words, *, backend: Optional[str] = None, **kw
+):
+    """Counter-based keystream words for the procedural network builder:
+    a ``(len(rows), n_words)`` uint32 matrix, bit-identical across
+    backends (see ``repro.builder.crng.word_matrix``)."""
+    return lookup("builder_keystream", backend)(
+        seed, stream, rows, j0, n_words, **kw
+    )
 
 
 # -- spike_gather ---------------------------------------------------------

@@ -20,6 +20,15 @@ from .network import (  # noqa: F401
 )
 from .session import RunResult, Session, StepEngine  # noqa: F401
 from .simulator import SimConfig  # noqa: F401
+from ..builder import (  # noqa: F401  (procedural construction surface)
+    ConnectRule,
+    DistanceKernel,
+    Population,
+    RuleSpec,
+    balanced_ei_rules,
+    microcircuit_rules,
+    spatial_random_rules,
+)
 
 __all__ = [
     "Session",
@@ -32,6 +41,13 @@ __all__ = [
     "microcircuit",
     "balanced_ei",
     "mixed_population",
+    "RuleSpec",
+    "Population",
+    "ConnectRule",
+    "DistanceKernel",
+    "spatial_random_rules",
+    "microcircuit_rules",
+    "balanced_ei_rules",
     "PD14_SIZES",
     "PD14_PROBS",
     # deprecated (module __getattr__): internal engines kept importable

@@ -40,14 +40,42 @@ class NetworkDef:
 
 
 def to_dcsr(
-    net: NetworkDef,
+    net,
     assignment: Optional[Array] = None,
     k: int = 1,
     uniform: bool = False,
+    *,
+    chunk_rows: Optional[int] = None,
+    path: str = "auto",
 ) -> DCSRNetwork:
     """Partition a NetworkDef.  ``uniform=True`` pads with isolated dummy
     vertices so every partition has exactly the same size (required by the
-    SPMD distributed simulator: equal shard shapes)."""
+    SPMD distributed simulator: equal shard shapes).
+
+    Also accepts a :class:`repro.builder.RuleSpec`: with the default block
+    assignment each partition's rows are emitted *directly* (procedural
+    chunked construction, bit-identical for any k/chunk size/backend); a
+    custom ``assignment`` falls back to the eager ``NetworkDef`` bridge,
+    since non-contiguous partitions need the global relabelling."""
+    if not isinstance(net, NetworkDef):
+        from ..builder.procedural import (
+            DEFAULT_CHUNK_ROWS, build_network, network_def,
+        )
+        from ..builder.rules import RuleSpec
+
+        if not isinstance(net, RuleSpec):
+            raise TypeError(
+                f"to_dcsr expects a NetworkDef or RuleSpec, got "
+                f"{type(net).__name__}"
+            )
+        if assignment is None:
+            return build_network(
+                net, k=k, uniform=uniform,
+                chunk_rows=chunk_rows or DEFAULT_CHUNK_ROWS, path=path,
+            )
+        net = network_def(
+            net, chunk_rows=chunk_rows or DEFAULT_CHUNK_ROWS, path=path
+        )
     n, src, dst = net.n, net.src, net.dst
     vtx_model, vtx_state, coords = net.vtx_model, net.vtx_state, net.coords
     if assignment is None:

@@ -8,6 +8,13 @@ network + vertex/edge state, (b) runtime arrays (ring, hist, traces) are
 row-aligned so they permute with the rows, and (c) simulation noise is
 keyed by *permanent* neuron id — so the continued trajectory is bit-exact
 regardless of the new partitioning (asserted in tests/test_reshard.py).
+
+Note on memory: since the streaming-ingest work (``repro.builder.ingest``),
+elastic restore onto a *different* k is the only restore path that still
+materialises whole-network state on the host — ``repartition`` needs a
+global edge view to relabel rows. Same-k and merged (k=1) restores go
+through chunked readers and never hold more than one chunk plus one
+partition in memory (``Session.restore(..., streaming=True)``).
 """
 from __future__ import annotations
 

@@ -293,8 +293,31 @@ class Session:
         *,
         engine: str = "auto",
         mesh=None,
+        k: Optional[int] = None,
+        build_chunk_rows: Optional[int] = None,
+        build_path: str = "auto",
     ):
-        if isinstance(net_or_path, (str, os.PathLike)):
+        from ..builder.rules import RuleSpec
+
+        if isinstance(net_or_path, RuleSpec):
+            # procedural one-call build: each partition's dCSR rows are
+            # emitted directly (chunked, counter-based seeding) — no
+            # whole-network NetworkDef is ever materialized
+            from ..builder.procedural import DEFAULT_CHUNK_ROWS, build_network
+
+            kk = 1 if k is None else int(k)
+            net = build_network(
+                net_or_path, k=kk, uniform=kk > 1,
+                chunk_rows=build_chunk_rows or DEFAULT_CHUNK_ROWS,
+                path=build_path,
+            )
+            sim_state, t_now = None, 0
+        elif k is not None:
+            raise ValueError(
+                "Session(k=...) only applies when building from a RuleSpec; "
+                "use Session.restore(path, k=...) for snapshots"
+            )
+        elif isinstance(net_or_path, (str, os.PathLike)):
             net, sim_state, t_now = load_latest_valid(
                 os.fspath(net_or_path)
             )
@@ -302,8 +325,8 @@ class Session:
             net, sim_state, t_now = net_or_path, None, 0
         else:
             raise TypeError(
-                "Session expects a DCSRNetwork or a snapshot path, got "
-                f"{type(net_or_path).__name__}"
+                "Session expects a DCSRNetwork, a RuleSpec or a snapshot "
+                f"path, got {type(net_or_path).__name__}"
             )
         self.cfg = cfg if cfg is not None else SimConfig()
         self.source_k = net.k
@@ -700,6 +723,8 @@ class Session:
         assignment: Optional[np.ndarray] = None,
         engine: str = "auto",
         mesh=None,
+        streaming: bool = False,
+        chunk_rows: Optional[int] = None,
     ) -> "Session":
         """Restore a session from ``session.save`` output (or a
         ``checkpoint_every`` root, walking past corrupt steps).
@@ -707,8 +732,30 @@ class Session:
         ``k``/``assignment`` trigger **elastic** restore: the network and
         its in-flight runtime are re-partitioned (``snn/reshard.py``) before
         the engine is built, and the continued trajectory is bit-identical
-        to an uninterrupted run."""
-        net, sim_state, t_now = load_latest_valid(os.fspath(path))
+        to an uninterrupted run.
+
+        ``streaming=True`` reads the snapshot chunk-by-chunk
+        (``repro.builder.ingest``, ``chunk_rows`` rows at a time) through
+        the same CRC/``.old``-fallback walk, bit-identical to the eager
+        path: restoring at the snapshot's native k (or merging to k=1)
+        never materializes more than one chunk plus one partition of
+        intermediate state.  Elastic restore onto any *other* k still
+        re-partitions eagerly — it is the only path that moves
+        whole-network state."""
+        if streaming:
+            from ..builder.ingest import (
+                DEFAULT_CHUNK_ROWS, make_streaming_loader,
+            )
+
+            loader = make_streaming_loader(
+                k=1 if (k == 1 and assignment is None) else None,
+                chunk_rows=chunk_rows or DEFAULT_CHUNK_ROWS,
+            )
+            net, sim_state, t_now = load_latest_valid(
+                os.fspath(path), loader=loader
+            )
+        else:
+            net, sim_state, t_now = load_latest_valid(os.fspath(path))
         if assignment is not None or (k is not None and k != net.k):
             asn = (
                 np.asarray(assignment, np.int64)

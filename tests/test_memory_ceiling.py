@@ -1,0 +1,116 @@
+"""Host-memory ceiling: the streaming pipeline (procedural build ->
+save -> chunked merged ingest) stays under an RSS budget that the eager
+NetworkDef materialization of the *same* network provably exceeds.
+
+Each path runs in its own subprocess so ``ru_maxrss`` measures exactly
+one workload.  In the streaming child the phase peaks are monotonically
+increasing (build < ingest < simulate), so sampling the monotonic
+high-water mark after each of the first two phases bounds that phase's
+peak without resets.  The simulate phase is exempt from the budget: the
+step engine's device arrays cost the same however the network was
+built, so they carry no signal about construction/ingest memory.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+# 9M-edge network: eager NetworkDef + from_edges transients >= ~900 MB,
+# streaming build+ingest peaks at ~430 MB.  >200 MB margin on each side.
+BUDGET_MB = 640
+N, FAN_IN = 562_500, 16
+
+_CHILD = r"""
+import json, os, resource, sys
+mode, tmp = sys.argv[1], sys.argv[2]
+import numpy as np
+from repro.builder import RuleSpec, Population, ConnectRule
+
+def rss_mb():
+    # VmHWM: per-process high-water mark, reset on exec.  ru_maxrss is
+    # inherited across fork+exec on some kernels, which would make this
+    # child report the (pytest) parent's peak — only use it off-Linux.
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) // 1024
+    except OSError:
+        pass
+    kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":
+        kb //= 1024  # ru_maxrss is bytes on macOS
+    return kb // 1024
+
+N, F = %(N)d, %(F)d
+spec = RuleSpec(
+    (Population("x", N, bias_mu=14.8, bias_sigma=0.5),),
+    (ConnectRule("x", "x", fan_in=F, weight_mu=0.4, weight_sigma=0.05,
+                 delay=2),),
+    seed=1,
+)
+marks = {}
+if mode == "eager":
+    # the pre-streaming path: whole-network edge list -> from_edges
+    from repro.snn import to_dcsr
+    from repro.builder import network_def
+    net = to_dcsr(network_def(spec), k=4)
+    marks["build"] = rss_mb()
+    marks["m"] = int(net.m)
+else:
+    from repro.builder import build_network, load_merged_streamed
+    from repro.io import save_binary
+    snap = os.path.join(tmp, "snap")
+    net = build_network(spec, k=4)
+    m = int(net.m)
+    save_binary(net, snap, t_now=0)
+    del net
+    marks["build"] = rss_mb()
+    net1, sim, t = load_merged_streamed(snap, chunk_rows=16384)
+    assert net1.m == m
+    del net1, sim
+    marks["ingest"] = rss_mb()
+    marks["m"] = m
+    # functional smoke (budget-exempt): streamed elastic restore + step
+    from repro.snn import Session, SimConfig
+    ses = Session.restore(snap, k=1, cfg=SimConfig(align_k=8),
+                          streaming=True)
+    ses.run(3, chunk_size=3)
+    marks["sim"] = rss_mb()
+print(json.dumps(marks))
+"""
+
+
+def _run_child(mode, tmp_path):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    script = _CHILD % {"N": N, "F": FAN_IN}
+    out = subprocess.run(
+        [sys.executable, "-c", script, mode, str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=540,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.skipif(sys.platform.startswith("win"),
+                    reason="needs resource.getrusage")
+def test_streaming_pipeline_stays_under_budget(tmp_path):
+    marks = _run_child("stream", tmp_path)
+    assert marks["m"] == N * FAN_IN
+    assert marks["build"] < BUDGET_MB, marks
+    assert marks["ingest"] < BUDGET_MB, marks
+    assert marks["sim"] > 0  # ran to completion
+
+
+@pytest.mark.skipif(sys.platform.startswith("win"),
+                    reason="needs resource.getrusage")
+def test_eager_materialization_exceeds_budget(tmp_path):
+    """The budget is meaningful: the same network built the eager way
+    (NetworkDef edge list + from_edges) blows through it."""
+    marks = _run_child("eager", tmp_path)
+    assert marks["m"] == N * FAN_IN
+    assert marks["build"] > BUDGET_MB, marks
