@@ -40,11 +40,20 @@ Modes (``--mode``):
                   ``serialization_scaling.collect``: bytes-per-synapse
                   rows ride along informationally; the gated stat is the
                   max/min bytes-per-synapse linearity ratio
+  * ``recovery`` — self-healing drill: a supervised run takes one
+                  injected NaN, detects it, rolls back to the newest
+                  valid checkpoint and re-runs to completion.  The
+                  detect→rollback→resume wall-time overhead vs an
+                  undisturbed supervised run is informational; the gated
+                  stat is ``recovery_steps_lost_ratio`` = steps lost /
+                  ``checkpoint_every`` (dimensionless, exactly 1.0 when
+                  the rollback lands on the newest checkpoint)
   * ``all``     — fused + dist + plastic + ckpt + event + ingest +
-                  serialization (+ ref): the full fused-vs-unfused ×
-                  k=1-vs-distributed × plain-vs-plastic grid plus the
-                  checkpoint-stall pair, the activity sweep, and the
-                  IO-side (ingest/serialization) stats
+                  serialization + recovery (+ ref): the full
+                  fused-vs-unfused × k=1-vs-distributed ×
+                  plain-vs-plastic grid plus the checkpoint-stall pair,
+                  the activity sweep, the IO-side (ingest/serialization)
+                  stats, and the recovery drill
 
 Every invocation also records its results into
 ``BENCH_spike_throughput.json`` (``--json`` to relocate), merging with any
@@ -471,6 +480,109 @@ def main_ckpt(scale, steps, every, json_path):
     })
 
 
+def run_recovery_once(scale, steps, every, faulted, seed=0):
+    """One supervised run (fresh session + checkpoint dir); ``faulted``
+    injects a single NaN after the second chunk — the canonical recovery
+    drill: detect at t=2*every, roll back to the t=every checkpoint,
+    re-run to completion.  Returns ``(wall_s, result, net)``."""
+    import warnings
+
+    from repro.testing import Fault, FaultPlan
+
+    net = microcircuit(scale=scale, seed=0)
+    d = to_dcsr(net, k=1)
+    ses = Session(d, SimConfig(align_k=32, gather="dense"))
+    td = tempfile.mkdtemp(prefix="recovery_bench_")
+    plan = FaultPlan(
+        [Fault("supervisor:state", "nan", after=1, count=1)]
+        if faulted else [],
+        seed=seed,
+    )
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with plan:
+                t0 = time.perf_counter()
+                res = ses.run_supervised(
+                    steps, chunk_size=every, checkpoint_every=every,
+                    checkpoint_dir=td,
+                )
+                wall = time.perf_counter() - t0
+    finally:
+        ses.close()
+        shutil.rmtree(td, ignore_errors=True)
+    return wall, res, d
+
+
+def main_recovery(scale, steps, every, repeats, json_path):
+    """Self-healing drill: median detect→rollback→resume overhead (the
+    faulted supervised run's wall time minus the undisturbed one's) and
+    steps lost.  The wall times are IO/compile bound and ride along
+    informationally; the gated stat is dimensionless —
+    ``recovery_steps_lost_ratio`` = steps_lost / checkpoint_every, which
+    is exactly 1.0 when the rollback lands on the NEWEST valid
+    checkpoint.  A restore walker that falls back further than it must,
+    or a checkpoint cadence that silently stops, pushes it past the
+    gate."""
+    clean_w, fault_w, losts, acts = [], [], [], []
+    n = m = None
+    for rep in range(repeats):
+        wc, rc, d = run_recovery_once(scale, steps, every, False, rep)
+        wf, rf, _ = run_recovery_once(scale, steps, every, True, rep)
+        assert rc.rollbacks == 0 and rf.rollbacks == 1, (
+            rc.rollbacks, rf.rollbacks
+        )
+        # the healed run's committed outputs must be bit-identical to the
+        # undisturbed run — otherwise the "recovery" being timed is fake
+        assert np.array_equal(rf.spike_count, rc.spike_count)
+        clean_w.append(wc)
+        fault_w.append(wf)
+        losts.append(rf.steps_lost)
+        acts.append(float(rf.spike_count.mean()) / d.n)
+        n, m = d.n, d.m
+    clean_us = statistics.median(clean_w) * 1e6
+    fault_us = statistics.median(fault_w) * 1e6
+    recovery_us = max(fault_us - clean_us, 0.0)
+    lost = statistics.median(losts)
+    ratio = lost / every
+    act = sum(acts) / len(acts)
+    print(
+        f"spike_throughput_recovery,{recovery_us:.0f},"
+        f"steps_lost={lost:.0f};ratio={ratio:.2f};every={every};"
+        f"clean_us={clean_us:.0f};faulted_us={fault_us:.0f};"
+        f"repeats={repeats};n={n};m={m}"
+    )
+    info = dict(
+        # informational (deliberately NOT us_per_step: wall times are
+        # IO/recompile bound and must never be CPU-normalized): MEDIAN
+        # over the repeats, robust to one runner hiccup
+        recovery_us=recovery_us,
+        clean_run_us=clean_us,
+        faulted_run_us=fault_us,
+        steps_lost=lost,
+        checkpoint_every=every,
+        repeats=repeats,
+        metric="detect_rollback_resume_overhead_us",
+        n=n, m=m, k=1,
+        mean_activity=act,
+    )
+    gated = dict(
+        us_per_step=ratio,   # the gated stat (dimensionless)
+        dimensionless=True,  # check_regression: exempt from --normalize
+        # exactly 1.0 by construction; 1.5 flags a walker falling back a
+        # whole extra checkpoint (2.0) without tripping on jitter
+        gate_threshold=1.5,
+        metric="steps_lost_over_checkpoint_every",
+        steps_lost=lost,
+        checkpoint_every=every,
+        n=n, m=m, k=1,
+        mean_activity=act,
+    )
+    _record(json_path, {
+        "recovery": info, "recovery_steps_lost_ratio": gated,
+    })
+
+
 _INGEST_CHILD = r"""
 import json, resource, sys, time
 
@@ -667,7 +779,8 @@ def main(argv=None, quick=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode",
                     choices=("ref", "fused", "dist", "plastic", "ckpt",
-                             "event", "ingest", "serialization", "all"),
+                             "event", "ingest", "serialization",
+                             "recovery", "all"),
                     default="ref")
     ap.add_argument("--scale", type=float, default=None,
                     help="microcircuit scale (default per mode)")
@@ -711,6 +824,13 @@ def main(argv=None, quick=None):
         # needs enough samples to shrug off CI-runner IO hiccups
         ck_steps = 120 if args.quick else 200
         main_ckpt(ck_scale, ck_steps, 12 if args.quick else 20, args.json)
+    if args.mode in ("recovery", "all"):
+        rc_scale = args.scale if args.scale is not None else (
+            0.01 if args.quick else 0.02
+        )
+        rc_every = 12 if args.quick else 20
+        rc_reps = 3 if args.quick else 5
+        main_recovery(rc_scale, rc_every * 5, rc_every, rc_reps, args.json)
     if args.mode in ("ingest", "all"):
         main_ingest(args.json, args.quick)
     if args.mode in ("serialization", "all"):

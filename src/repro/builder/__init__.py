@@ -20,6 +20,8 @@ from .rules import (  # noqa: F401
     balanced_ei_rules,
     microcircuit_rules,
     spatial_random_rules,
+    spec_from_dict,
+    spec_to_dict,
 )
 from .procedural import (  # noqa: F401
     DEFAULT_CHUNK_ROWS,

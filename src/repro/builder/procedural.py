@@ -432,6 +432,13 @@ def build_network(
             raise AssertionError("partition row_ptr inconsistent")
     net = DCSRNetwork(dist=dist, parts=parts, registry=registry, meta=spec.meta())
     net.validate()
+    # carry the generating spec (JSON form) so snapshots of this network
+    # can regenerate a corrupt shard's topology bit-identically at restore
+    # (io.dcsr_binary embeds it in the manifest; snn.supervisor consumes it)
+    from .rules import spec_to_dict
+
+    net.rule_spec = {"spec": spec_to_dict(spec), "uniform": bool(uniform),
+                     "k": int(k)}
     return net
 
 

@@ -303,6 +303,36 @@ def spatial_random_rules(
                     name="spatial_random")
 
 
+def spec_to_dict(spec: RuleSpec) -> dict:
+    """JSON-able dict capturing a :class:`RuleSpec` exactly (tuples become
+    lists; round-trips through :func:`spec_from_dict` bit-identically,
+    which is what lets a snapshot manifest carry its generating spec for
+    corrupt-shard topology regeneration)."""
+    import json
+
+    # asdict is recursive (pops/rules/kernel/slab); the json round-trip
+    # canonicalizes tuples to lists so the dict compares equal before and
+    # after living in a manifest file
+    return json.loads(json.dumps(dataclasses.asdict(spec)))
+
+
+def spec_from_dict(d: dict) -> RuleSpec:
+    """Inverse of :func:`spec_to_dict` (re-validates on construction)."""
+    pops = tuple(
+        Population(**{**p, "slab": tuple(p["slab"]) if p.get("slab") else None})
+        for p in d["populations"]
+    )
+    rules = tuple(
+        ConnectRule(**{
+            **r,
+            "kernel": DistanceKernel(**r["kernel"]) if r.get("kernel") else None,
+        })
+        for r in d["rules"]
+    )
+    extra = {k: d[k] for k in ("seed", "dt", "noise_sigma", "name") if k in d}
+    return RuleSpec(pops, rules, **extra)
+
+
 def rule_streams(spec: RuleSpec):
     """Per-rule stream ids, for documentation/tests."""
     return [

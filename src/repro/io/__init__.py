@@ -3,15 +3,24 @@ checkpoints, interop adapters."""
 from .dcsr_text import save_text, load_text  # noqa: F401
 from .dcsr_binary import (  # noqa: F401
     NetSnapshot,
+    ShardWriteError,
     save_binary,
     load_binary,
     load_latest_valid,
+    quarantine_shards,
     snapshot_network,
     snapshot_steps,
+    verify_snapshot,
     write_snapshot,
 )
-from .async_writer import AsyncWriter  # noqa: F401
+from .async_writer import AsyncWriter, WriteJobError  # noqa: F401
 from .checkpoint import CheckpointManager, atomic_dir  # noqa: F401
+from .durability import (  # noqa: F401
+    fsync_enabled,
+    fsync_override,
+    set_fsync,
+    write_bytes_verified,
+)
 from .interop import (  # noqa: F401
     to_adjacency_dict,
     from_adjacency_dict,

@@ -9,15 +9,37 @@ snapshot flushes to disk.
 One daemon worker drains the queue strictly in submission order, so a
 ``wait=True`` save routed through ``submit`` + :meth:`wait` can never land
 *before* an earlier queued step (the ordering bug an inline write next to
-a live queue had).  Job exceptions never kill the worker; they are stored
-and re-raised on the caller's thread by :meth:`check` / :meth:`wait` /
+a live queue had).  Jobs that fail with an ``OSError`` (flaky disk, NFS
+hiccup) are retried in place with exponential backoff before the error
+counts; job exceptions never kill the worker — after the retries they are
+wrapped in :class:`WriteJobError` naming the job (step / partition /
+path, from the ``context=`` passed to :meth:`submit` plus whatever the
+exception itself carries), chained to the original traceback, and
+re-raised on the caller's thread by :meth:`check` / :meth:`wait` /
 :meth:`close` — the "surfaced on the next checkpoint boundary" contract.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, List, Optional
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+
+class WriteJobError(OSError):
+    """A background write that failed even after the writer's retries.
+
+    Subclasses ``OSError`` so historical ``except OSError`` handling
+    keeps working; ``step`` / ``part_id`` / ``path`` name the failed job
+    and ``__cause__`` chains the original exception + traceback."""
+
+    def __init__(self, msg: str, *, step: Optional[int] = None,
+                 part_id: Optional[int] = None,
+                 path: Optional[str] = None):
+        super().__init__(msg)
+        self.step = step
+        self.part_id = part_id
+        self.path = path
 
 
 class AsyncWriter:
@@ -30,24 +52,58 @@ class AsyncWriter:
     default (0) is unbounded."""
 
     def __init__(self, name: str = "async-ckpt-writer",
-                 max_pending: int = 0):
+                 max_pending: int = 0, retries: int = 2,
+                 retry_backoff_s: float = 0.05):
+        """``retries`` re-runs a job that raised an ``OSError`` that many
+        extra times (exponential backoff starting at ``retry_backoff_s``)
+        before the failure poisons the queue — checkpoint jobs stage
+        through tmp dirs, so a re-run is idempotent."""
         self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
         self._err: List[BaseException] = []
         self._closed = False
+        self.retries = max(int(retries), 0)
+        self.retry_backoff_s = retry_backoff_s
         self._worker: Optional[threading.Thread] = threading.Thread(
             target=self._drain, daemon=True, name=name
         )
         self._worker.start()
 
     # ------------------------------------------------------------- submit
-    def submit(self, fn: Callable, *args: Any, **kwargs: Any) -> None:
+    def submit(self, fn: Callable, *args: Any,
+               context: Optional[Dict[str, Any]] = None,
+               **kwargs: Any) -> None:
         """Enqueue ``fn(*args, **kwargs)`` for the background worker;
         blocks when ``max_pending`` jobs are already waiting.  The
         arguments must be safe to use after return (host copies, not
-        live mutable state)."""
+        live mutable state).  ``context`` (e.g. ``dict(step=1200,
+        path=...)``) labels any eventual failure of this job — see
+        :class:`WriteJobError`."""
         if self._closed:
             raise RuntimeError("AsyncWriter is closed")
-        self._q.put((fn, args, kwargs))
+        self._q.put((fn, args, kwargs, context))
+
+    def _wrap(self, e: BaseException,
+              context: Optional[Dict[str, Any]]) -> WriteJobError:
+        ctx = dict(context or {})
+        step = ctx.get("step")
+        part = getattr(e, "part_id", None)
+        if part is None:
+            part = ctx.get("part_id")
+        path = getattr(e, "filename", None) or ctx.get("path")
+        bits = []
+        if step is not None:
+            bits.append(f"step {step}")
+        if part is not None:
+            bits.append(f"partition {part}")
+        if path:
+            bits.append(f"path {path!r}")
+        where = ", ".join(bits) or "no job context"
+        err = WriteJobError(
+            f"background checkpoint write failed ({where}): {e}",
+            step=step, part_id=part, path=path,
+        )
+        err.__cause__ = e  # keep the original traceback in the chain
+        return err
 
     def _drain(self) -> None:
         while True:
@@ -55,13 +111,32 @@ class AsyncWriter:
             try:
                 if job is None:
                     return
-                fn, args, kwargs = job
-                try:
-                    fn(*args, **kwargs)
-                except BaseException as e:  # surfaced by check()/wait()
-                    self._err.append(e)
+                self._run_job(job)
             finally:
+                # drop the job BEFORE blocking on the next get(): a
+                # queued bound method (e.g. Session._write_and_mark)
+                # must not keep its owner alive while the worker idles,
+                # or the owner's weakref finalizer can never fire
+                job = None
                 self._q.task_done()
+
+    def _run_job(self, job) -> None:
+        fn, args, kwargs, context = job
+        attempts = self.retries + 1
+        for attempt in range(attempts):
+            if attempt:
+                time.sleep(
+                    self.retry_backoff_s * (2 ** (attempt - 1))
+                )
+            try:
+                fn(*args, **kwargs)
+                return
+            except OSError as e:  # transient disk: retry in place
+                if attempt + 1 >= attempts:
+                    self._err.append(self._wrap(e, context))
+            except BaseException as e:  # not retryable
+                self._err.append(self._wrap(e, context))
+                return
 
     # ------------------------------------------------------------ surface
     def check(self) -> None:

@@ -21,6 +21,7 @@ corrupt/incomplete steps.
 from __future__ import annotations
 
 import contextlib
+import io
 import json
 import os
 import re
@@ -31,7 +32,9 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 import jax
 import numpy as np
 
+from ..testing.faults import fault_point
 from .async_writer import AsyncWriter
+from .durability import fsync_dir, write_bytes_verified
 
 
 def _crc_bytes(b: bytes) -> int:
@@ -67,12 +70,22 @@ def atomic_dir(final: str) -> Iterator[str]:
             shutil.rmtree(stale)
     os.makedirs(tmp)
     yield tmp
+    parent = os.path.dirname(os.path.abspath(final)) or "."
+    fsync_dir(tmp)  # staged entries durable before any rename
+    fault_point("atomic_dir:pre_swap", final)
     if os.path.exists(final):
         os.replace(final, old)  # atomic aside, not rmtree: crash-safe
+        fault_point("atomic_dir:between_renames", final)
         os.replace(tmp, final)
+        fault_point("atomic_dir:after_swap", final)
+        # make both renames durable before the only other complete copy
+        # (.old) disappears — a power cut here must not lose the swap
+        fsync_dir(parent)
         shutil.rmtree(old)
     else:
         os.replace(tmp, final)
+        fault_point("atomic_dir:after_swap", final)
+        fsync_dir(parent)
 
 
 def step_candidates(root: str) -> List[Tuple[int, bool, str]]:
@@ -142,7 +155,10 @@ class CheckpointManager:
                 )
         job = (step, names, snap)
         if self._writer is not None:
-            self._writer.submit(self._write, job)
+            self._writer.submit(
+                self._write, job,
+                context=dict(step=step, path=self.step_dir(step)),
+            )
             if wait:
                 self._writer.wait()
         else:
@@ -162,9 +178,11 @@ class CheckpointManager:
                 for j, (index, data) in enumerate(shards):
                     fn = f"leaf{i}_s{j}.npy"
                     full = os.path.join(tmp, fn)
-                    np.save(full, data)
-                    with open(full, "rb") as f:
-                        crc = _crc_bytes(f.read())
+                    buf = io.BytesIO()
+                    np.save(buf, data)
+                    crc = write_bytes_verified(
+                        full, buf.getvalue(), "shard_write"
+                    )
                     entry["shards"].append(
                         dict(
                             file=fn,
@@ -181,8 +199,10 @@ class CheckpointManager:
                         )
                     )
                 manifest["leaves"].append(entry)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
+            write_bytes_verified(
+                os.path.join(tmp, "manifest.json"),
+                json.dumps(manifest).encode(), "manifest_write"
+            )
         self._gc()
 
     # ------------------------------------------------------------- restore
@@ -209,6 +229,7 @@ class CheckpointManager:
             out = np.empty(shape, dtype=entry["dtype"])
             for sh in entry["shards"]:
                 full = os.path.join(d, sh["file"])
+                fault_point("shard_read", full)
                 with open(full, "rb") as f:
                     raw = f.read()
                 if verify and _crc_bytes(raw) != sh["crc"]:

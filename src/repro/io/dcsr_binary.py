@@ -35,6 +35,8 @@ sibling when a crash inside ``atomic_dir``'s swap window left only that.
 from __future__ import annotations
 
 import dataclasses
+import errno
+import io
 import json
 import os
 import zipfile
@@ -46,7 +48,9 @@ import numpy as np
 
 from ..core.dcsr import DCSRNetwork, DCSRPartition
 from ..core.state import ModelRegistry
+from ..testing.faults import fault_point
 from .checkpoint import atomic_dir, step_candidates
+from .durability import fsync_dir, write_bytes_verified
 
 
 def _crc(path: str) -> int:
@@ -57,6 +61,17 @@ def _crc(path: str) -> int:
             if not chunk:
                 return c
             c = zlib.crc32(chunk, c)
+
+
+class ShardWriteError(OSError):
+    """A shard write that still failed after the write-level retries;
+    carries the partition id so queue-level error context can name it."""
+
+    def __init__(self, part_id: int, path: str, cause: BaseException):
+        super().__init__(
+            errno.EIO, f"shard part{part_id} failed to write: {cause}", path
+        )
+        self.part_id = part_id
 
 
 @dataclasses.dataclass
@@ -117,6 +132,12 @@ def snapshot_network(
             if s.state_vars
         },
     )
+    # procedurally built networks carry their generating RuleSpec (as a
+    # JSON dict, attached by builder.procedural.build_network): embed it
+    # so a corrupt shard's topology can be regenerated at restore time
+    rs = getattr(net, "rule_spec", None)
+    if rs is not None:
+        manifest["rule_spec"] = rs
     return NetSnapshot(parts=parts, manifest=manifest)
 
 
@@ -144,8 +165,16 @@ def _write_part(path: str, item: Tuple[int, Dict[str, np.ndarray]]):
     part_id, arrs = item
     fn = f"part{part_id}.npz"
     full = os.path.join(path, fn)
-    np.savez(full, **arrs)
-    return fn, _crc(full)
+    # serialize to memory first: the CRC is computed from the buffer the
+    # verified write checks the disk against, so a torn/bit-rotted write
+    # can never be recorded in the manifest as the shard's "good" CRC
+    buf = io.BytesIO()
+    np.savez(buf, **arrs)
+    try:
+        crc = write_bytes_verified(full, buf.getvalue(), "shard_write")
+    except OSError as e:
+        raise ShardWriteError(part_id, full, e) from e
+    return fn, crc
 
 
 def _write_snapshot_dir(snap: NetSnapshot, path, max_workers=None):
@@ -160,9 +189,10 @@ def _write_snapshot_dir(snap: NetSnapshot, path, max_workers=None):
         crcs = dict(_write_part(path, it) for it in snap.parts)
     manifest = dict(snap.manifest, crc=crcs)
     tmp = os.path.join(path, "manifest.json.tmp")
-    with open(tmp, "w") as f:
-        json.dump(manifest, f)
+    write_bytes_verified(tmp, json.dumps(manifest).encode(),
+                         "manifest_write")
     os.replace(tmp, os.path.join(path, "manifest.json"))
+    fsync_dir(path)
 
 
 def save_binary(
@@ -192,6 +222,7 @@ def registry_from_manifest(man: Dict) -> ModelRegistry:
 def check_shard_crc(path: str, p: int, man: Dict) -> str:
     """Stream-CRC shard ``p`` against the manifest; returns its path."""
     fn = os.path.join(path, f"part{p}.npz")
+    fault_point("shard_read", fn)
     got = _crc(fn)
     want = man["crc"][f"part{p}.npz"]
     if got != want:
@@ -200,6 +231,39 @@ def check_shard_crc(path: str, p: int, man: Dict) -> str:
             f"(crc {got:#x} != {want:#x})"
         )
     return fn
+
+
+def verify_snapshot(path: str) -> Tuple[Dict, List[int]]:
+    """CRC-check every shard of one snapshot dir against its manifest.
+
+    Returns ``(manifest, bad)`` where ``bad`` lists the partition ids
+    whose shard is missing or fails CRC.  Raises ``OSError`` /
+    ``ValueError`` if the manifest itself is unreadable (the snapshot is
+    then unusable as a whole, not per-shard recoverable)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        man = json.load(f)
+    bad: List[int] = []
+    for p in range(int(man["k"])):
+        try:
+            check_shard_crc(path, p, man)
+        except (OSError, KeyError):
+            bad.append(p)
+    return man, bad
+
+
+def quarantine_shards(path: str, parts: Sequence[int]) -> List[str]:
+    """Rename each ``part<p>.npz`` aside to ``part<p>.npz.quarantine``
+    (the damaged bytes are kept for post-mortem, and the snapshot stops
+    looking restorable to the walkers).  Returns the quarantine paths."""
+    out: List[str] = []
+    for p in parts:
+        src = os.path.join(path, f"part{p}.npz")
+        dst = src + ".quarantine"
+        if os.path.exists(src):
+            os.replace(src, dst)
+        out.append(dst)
+    fsync_dir(path)
+    return out
 
 
 def _stub_partition(p: int, dist: np.ndarray, max_sv: int,
@@ -273,6 +337,8 @@ def load_binary(
     net = DCSRNetwork(
         dist=dist, parts=part_list, registry=registry, meta=man["meta"]
     )
+    if "rule_spec" in man:
+        net.rule_spec = man["rule_spec"]
     if want is None:
         net.validate()
     else:

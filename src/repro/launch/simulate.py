@@ -37,7 +37,21 @@ def main(argv=None):
     ap.add_argument("--snapshot-every", type=int, default=0)
     ap.add_argument("--distributed", action="store_true",
                     help="shard_map over k devices (needs >= k devices)")
+    ap.add_argument("--supervised", action="store_true",
+                    help="self-healing run loop: per-chunk health checks,"
+                         " rollback to the newest valid checkpoint, "
+                         "corrupt-shard quarantine (needs --snapshot-dir "
+                         "and --snapshot-every)")
+    ap.add_argument("--max-rate", type=float, default=0.8,
+                    help="supervised spike-storm ceiling "
+                         "(spikes/neuron/step)")
+    ap.add_argument("--max-rollbacks", type=int, default=3,
+                    help="supervised consecutive-rollback budget")
     args = ap.parse_args(argv)
+    if args.supervised and not (args.snapshot_dir and args.snapshot_every):
+        ap.error("--supervised requires --snapshot-dir and "
+                 "--snapshot-every (checkpoints are the rollback "
+                 "substrate)")
 
     cfg = SimConfig(exchange=args.exchange)
     engine = "spmd" if args.distributed else "auto"
@@ -61,6 +75,23 @@ def main(argv=None):
     print(f"[simulate] {ses.describe()}")
 
     every = args.snapshot_every or args.steps
+    if args.supervised:
+        from ..snn.supervisor import HealthConfig, RetryPolicy
+
+        res = ses.run_supervised(
+            args.steps,
+            checkpoint_every=every,
+            checkpoint_dir=args.snapshot_dir,
+            health=HealthConfig(max_rate=args.max_rate),
+            retry=RetryPolicy(max_rollbacks=args.max_rollbacks),
+        )
+        print(f"[simulate] t={ses.t} {summary(res, ses.n, ses.dt)}")
+        print(f"[simulate] supervised: rollbacks={res.rollbacks} "
+              f"steps_lost={res.steps_lost} events={len(res.events)}")
+        for ev in res.events:
+            print(f"[simulate]   {ev.kind}@t={ev.t}: {ev.detail}")
+        ses.close()
+        return
     done = 0
     while done < args.steps:
         chunk = min(every, args.steps - done)

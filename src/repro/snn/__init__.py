@@ -20,6 +20,14 @@ from .network import (  # noqa: F401
 )
 from .session import RunResult, Session, StepEngine  # noqa: F401
 from .simulator import SimConfig  # noqa: F401
+from .supervisor import (  # noqa: F401
+    HealthConfig,
+    RestoreReport,
+    RetryPolicy,
+    SupervisedResult,
+    SupervisorEvent,
+    restore_resilient,
+)
 from ..builder import (  # noqa: F401  (procedural construction surface)
     ConnectRule,
     DistanceKernel,
@@ -35,6 +43,12 @@ __all__ = [
     "SimConfig",
     "RunResult",
     "StepEngine",
+    "HealthConfig",
+    "RetryPolicy",
+    "SupervisedResult",
+    "SupervisorEvent",
+    "RestoreReport",
+    "restore_resilient",
     "NetworkDef",
     "to_dcsr",
     "spatial_random",

@@ -353,6 +353,9 @@ class Session:
         # run-loop stall (seconds) of each checkpoint taken by the last
         # run(checkpoint_every=...): what --mode ckpt benchmarks
         self.last_ckpt_stalls: Tuple[float, ...] = ()
+        # step of the newest snapshot whose background write LANDED —
+        # the operator's actual rollback point when a later write fails
+        self._last_good_ckpt_step: Optional[int] = None
         self._writer: Optional[AsyncWriter] = None
         # eager engine build: surfaces SimConfig/backend errors at
         # construction and fixes dt/d_ring for save()
@@ -585,12 +588,23 @@ class Session:
                     engine = self._engine(rec_raster, rec_v)
             if next_ckpt is not None and done == next_ckpt:
                 t_ck = time.perf_counter()
-                self.save(
-                    os.path.join(
-                        checkpoint_dir, f"step_{t_run0 + done:08d}"
-                    ),
-                    wait=checkpoint_sync,
-                )
+                try:
+                    self.save(
+                        os.path.join(
+                            checkpoint_dir, f"step_{t_run0 + done:08d}"
+                        ),
+                        wait=checkpoint_sync,
+                    )
+                except OSError as e:
+                    last = self._last_good_ckpt_step
+                    raise OSError(
+                        f"checkpoint at step {t_run0 + done} failed "
+                        "(writer retries exhausted); last successful "
+                        "checkpoint: "
+                        + (f"step {last}" if last is not None else
+                           "none from this session")
+                        + " — that is your rollback point"
+                    ) from e
                 if max_to_keep:
                     # retention rides the same FIFO queue as the writes,
                     # so GC can never run ahead of an in-flight older step
@@ -629,7 +643,57 @@ class Session:
             overflow=overflow,
         )
 
+    def run_supervised(
+        self,
+        steps: int,
+        monitors: Iterable = (),
+        *,
+        chunk_size: Optional[int] = None,
+        checkpoint_every: int,
+        checkpoint_dir: str,
+        max_to_keep: Optional[int] = None,
+        health=None,
+        retry=None,
+    ):
+        """Self-healing ``run``: per-chunk health checks (non-finite
+        membranes, spike-storm ceiling, escalating exchange overflow),
+        automatic rollback to the newest valid checkpoint with bounded
+        retries + exponential backoff, and corrupt-shard quarantine with
+        RuleSpec-keystream topology regeneration on restore.  See
+        :mod:`repro.snn.supervisor` for the policies (``health``:
+        :class:`~repro.snn.supervisor.HealthConfig`, ``retry``:
+        :class:`~repro.snn.supervisor.RetryPolicy`) and the exact
+        rollback/replay semantics."""
+        from .supervisor import run_supervised
+
+        return run_supervised(
+            self, steps, monitors, chunk_size=chunk_size,
+            checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir, max_to_keep=max_to_keep,
+            health=health, retry=retry,
+        )
+
     # -- checkpoint / restart ----------------------------------------------
+    def _reload_from_snapshot(self, net: DCSRNetwork, sim_state,
+                              t_now: int) -> None:
+        """In-place rollback: replace the network and carry with a
+        restored snapshot (same layout this session saves at) and drop
+        the engine — device constants rebuild lazily from the restored
+        arrays, and the next ``run`` continues from ``t_now``."""
+        if self.engine_kind == "single" and net.k > 1:
+            net = merge_to_single(net)
+        if net.k != self.net.k or net.n != self.net.n:
+            raise ValueError(
+                f"rollback snapshot is k={net.k}, n={net.n}; this "
+                f"session runs k={self.net.k}, n={self.net.n}"
+            )
+        self.net = net
+        self._engine_obj = None
+        self._engine_flags = None
+        self._state = None
+        self._t0 = int(t_now)
+        self._pending_runtime = sim_state if sim_state else None
+
     def _writer_obj(self) -> AsyncWriter:
         if self._writer is None:
             # bounded queue = backpressure: when the disk falls behind the
@@ -670,14 +734,22 @@ class Session:
         if self._writer is not None:
             self._writer.check()  # surface earlier background failures
         eng.sync_to_dcsr(self._state)
+        step = self.t
         snap = snapshot_network(
-            self.net, eng.runtime_state(self._state), self.t
+            self.net, eng.runtime_state(self._state), step
         )
         w = self._writer_obj()
-        w.submit(write_snapshot, snap, path, atomic=True)
+        w.submit(self._write_and_mark, snap, path, step,
+                 context=dict(step=step, path=path))
         if wait:
             w.wait()
         return path
+
+    def _write_and_mark(self, snap, path: str, step: int) -> None:
+        """Background write body: only a write that fully landed advances
+        ``_last_good_ckpt_step`` (the rollback point named in errors)."""
+        write_snapshot(snap, path, atomic=True)
+        self._last_good_ckpt_step = step
 
     def wait(self) -> None:
         """Drain the background checkpoint writer: block until every

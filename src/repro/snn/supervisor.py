@@ -1,0 +1,530 @@
+"""Self-healing supervised run loop + resilient (quarantining) restore.
+
+The paper frames per-partition dCSR snapshots as the substrate for
+"checkpoint/restart fault-tolerant computing"; this module closes the
+loop so a sick run heals *itself* instead of waiting for an operator:
+
+* :func:`run_supervised` (surfaced as ``Session.run_supervised``) drives
+  the chunked scan with a per-chunk **health check** — non-finite
+  membrane state, spike-storm rate runaway against a configurable
+  ceiling, escalating exchange overflow — and on a violation (or a
+  checkpoint IO failure that survived the writer's own retries) rolls
+  the session back to the newest valid checkpoint in place, with bounded
+  consecutive rollbacks and exponential backoff.  Health gates the
+  checkpoints: a chunk's state is checked *before* the boundary save, so
+  poisoned state is never checkpointed and the newest checkpoint is
+  always a safe rollback target.
+
+* :func:`restore_resilient` is the quarantining restore walk behind the
+  rollback: steps are tried newest-first; a step whose manifest is
+  intact but whose shard fails CRC has that shard renamed aside to
+  ``part<p>.npz.quarantine`` (bytes kept for post-mortem) and the walk
+  continues to the next older step.  When the snapshot carries its
+  generating :class:`~repro.builder.rules.RuleSpec` (procedurally built
+  networks embed it in the manifest), the quarantined partition's
+  *topology* is regenerated bit-identically from the counter-based
+  keystream (``builder.procedural.build_partition``) and verified
+  against the restored step — topology is rebuilt where it lives rather
+  than trusted from disk; only the *dynamic* state (membranes, weights,
+  ring/trace runtime) must come from the older checkpoint.  A loud
+  ``UserWarning`` accounts for exactly which steps were lost.
+
+Determinism note: because the trajectory is a pure function of
+``(seed, t, permanent id)`` and chunking is bit-transparent, a rollback
++ re-run reproduces the pre-fault trajectory bit-identically — the
+supervised run's outputs from the rollback point match an undisturbed
+reference run (asserted end-to-end in ``tests/test_supervisor.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+import warnings
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from ..io.dcsr_binary import (
+    _snapshot_dir_candidates,
+    load_binary,
+    quarantine_shards,
+    snapshot_steps,
+    verify_snapshot,
+)
+from ..testing.faults import apply_state_faults
+
+_DEFAULT_CHUNK = 128
+
+TOPOLOGY_FIELDS = (
+    "row_ptr", "col_idx", "vtx_model", "edge_model", "coords", "global_ids",
+)
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Per-chunk health checks for :func:`run_supervised`.
+
+    ``check_finite`` scans the membrane state for NaN/Inf after every
+    chunk (one device→host sync of ``vtx_state`` — the supervision tax);
+    ``max_vm`` is a membrane-magnitude ceiling on the same scan, so a
+    storm-primed state (physically absurd |V|) is caught *immediately*,
+    before the boundary checkpoint — the spike-rate ceiling ``max_rate``
+    (spikes/neuron/step, chunk mean) only sees a storm one chunk later,
+    in its output.  ``max_overflow_rate`` bounds spikes *dropped* by a
+    lossy exchange per neuron per step; independently,
+    ``overflow_escalations`` trips when the per-chunk overflow rate
+    rises strictly for that many consecutive chunks (0 disables) — the
+    "escalating overflow" signature of a run outgrowing its exchange
+    capacity.  ``None`` disables any individual check."""
+
+    check_finite: bool = True
+    max_vm: Optional[float] = 1e3
+    max_rate: Optional[float] = 0.8
+    max_overflow_rate: Optional[float] = None
+    overflow_escalations: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Rollback budget: at most ``max_rollbacks`` *consecutive* rollbacks
+    without forward progress (progress past the furthest step previously
+    reached resets the counter), sleeping ``backoff_s * factor**i``
+    before re-running after the i-th consecutive rollback."""
+
+    max_rollbacks: int = 3
+    backoff_s: float = 0.05
+    backoff_factor: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorEvent:
+    kind: str    # "health" | "io_error" | "rollback" | "quarantine"
+    t: int       # session step when the event was observed
+    detail: str
+
+
+@dataclasses.dataclass
+class RestoreReport:
+    """What :func:`restore_resilient` did: every step dir it skipped and
+    why, the shards it quarantined, and the partitions whose topology it
+    regenerated from the RuleSpec keystream."""
+
+    t_now: int = -1
+    skipped: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    quarantined: List[Tuple[str, int, List[int]]] = dataclasses.field(
+        default_factory=list
+    )  # (dir, t_now of that step, part ids)
+    regenerated: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SupervisedResult:
+    """Mapping-compatible with :class:`repro.snn.session.RunResult`
+    (``result["spike_count"]`` etc.) plus the supervision ledger."""
+
+    spike_count: np.ndarray
+    t_final: int
+    chunks: Tuple[int, ...]
+    overflow: np.ndarray
+    rollbacks: int
+    steps_lost: int
+    events: Tuple[SupervisorEvent, ...]
+    restore_reports: Tuple[RestoreReport, ...]
+
+    def __getitem__(self, key):
+        if key == "spike_count":
+            return self.spike_count
+        if key == "overflow":
+            return self.overflow
+        raise KeyError(key)
+
+    def __iter__(self):
+        return iter(("spike_count", "overflow"))
+
+    def __len__(self):
+        return 2
+
+    def keys(self):
+        return ("spike_count", "overflow")
+
+
+# ---------------------------------------------------------------------------
+# Resilient restore (quarantine + keystream topology regeneration)
+# ---------------------------------------------------------------------------
+
+
+def _regenerate_quarantined(net, parts: Iterable[int],
+                            report: RestoreReport) -> None:
+    """Rebuild each quarantined partition's topology from the RuleSpec
+    keystream, verify it is bit-identical to the restored step's, and
+    substitute it into ``net`` (construction-where-it-lives: the arrays
+    the session continues with are the regenerated ones)."""
+    rs = getattr(net, "rule_spec", None)
+    parts = sorted(set(parts))
+    if rs is None:
+        warnings.warn(
+            f"quarantined shard(s) {parts}: snapshot carries no RuleSpec "
+            "(network was not procedurally built at this k) — topology "
+            "cannot be regenerated, restored entirely from the older "
+            "checkpoint instead",
+            UserWarning, stacklevel=3,
+        )
+        return
+    if int(rs.get("k", -1)) != net.k:
+        warnings.warn(
+            f"quarantined shard(s) {parts}: RuleSpec was recorded at "
+            f"k={rs.get('k')} but the snapshot is k={net.k} (elastic "
+            "reshard in between) — skipping keystream regeneration",
+            UserWarning, stacklevel=3,
+        )
+        return
+    from ..builder.procedural import build_partition
+    from ..builder.rules import spec_from_dict
+
+    spec = spec_from_dict(rs["spec"])
+    for p in parts:
+        regen = build_partition(spec, net.k, p, uniform=rs["uniform"])
+        for fld in TOPOLOGY_FIELDS:
+            if not np.array_equal(getattr(regen, fld),
+                                  getattr(net.parts[p], fld)):
+                raise RuntimeError(
+                    f"keystream regeneration of partition {p} diverged "
+                    f"from the checkpoint on {fld!r} — refusing to "
+                    "continue with unverifiable topology"
+                )
+            setattr(net.parts[p], fld, getattr(regen, fld))
+        report.regenerated.append(p)
+
+
+def restore_resilient(
+    path: str, *, verify: bool = True, regenerate: bool = True,
+) -> Tuple[object, Dict, int, RestoreReport]:
+    """Quarantining restore: like ``load_latest_valid`` but a step whose
+    shard fails CRC is quarantined (shard renamed to ``.quarantine``)
+    rather than silently skipped, and — when the manifest carries the
+    generating RuleSpec — the quarantined partition's topology is
+    regenerated from the keystream and verified against the restored
+    older step.  Returns ``(net, sim_state, t_now, report)``."""
+    path = os.fspath(path)
+    if os.path.exists(os.path.join(path, "manifest.json")) or \
+            os.path.exists(os.path.join(path + ".old", "manifest.json")):
+        cands = [(0, path)]
+        if os.path.exists(os.path.join(path + ".old", "manifest.json")):
+            cands.append((0, path + ".old"))
+    else:
+        cands = _snapshot_dir_candidates(path)
+    report = RestoreReport()
+    newest_t: Optional[int] = None
+    for _step, d in cands:
+        try:
+            man, bad = verify_snapshot(d)
+        except (OSError, ValueError, KeyError) as e:
+            report.skipped.append((d, f"manifest unreadable: {e}"))
+            continue
+        t_step = int(man.get("t_now", -1))
+        if newest_t is None:
+            newest_t = t_step
+        if bad:
+            quarantine_shards(d, bad)
+            report.quarantined.append((d, t_step, list(bad)))
+            report.skipped.append(
+                (d, f"shards {bad} failed CRC -> quarantined")
+            )
+            continue
+        try:
+            net, sim_state, t_now = load_binary(d, verify=verify)
+        except (OSError, ValueError, KeyError) as e:
+            report.skipped.append((d, f"load failed after CRC pass: {e}"))
+            continue
+        report.t_now = int(t_now)
+        if report.quarantined:
+            bad_parts = sorted(
+                {p for _, _, ps in report.quarantined for p in ps}
+            )
+            if regenerate:
+                _regenerate_quarantined(net, bad_parts, report)
+            lost = (newest_t - t_now) if newest_t is not None and \
+                newest_t >= 0 else "unknown"
+            warnings.warn(
+                f"restore quarantined corrupt shard(s) "
+                f"{[(os.path.basename(q[0]), q[2]) for q in report.quarantined]} "
+                f"and fell back to checkpoint step {t_now}: exactly "
+                f"{lost} simulated steps (t={t_now}..{newest_t}) were "
+                f"lost"
+                + (
+                    f"; topology of partition(s) {report.regenerated} "
+                    "regenerated bit-identically from the RuleSpec "
+                    "keystream"
+                    if report.regenerated else ""
+                ),
+                UserWarning, stacklevel=2,
+            )
+        return net, sim_state, int(t_now), report
+    raise FileNotFoundError(
+        f"no valid dCSR snapshot under {path!r} "
+        f"(skipped: {report.skipped or 'nothing found'})"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Supervised run loop
+# ---------------------------------------------------------------------------
+
+
+class _Capture:
+    """Single-chunk monitor shim: run() enables recordings from this
+    ``requires`` set and hands the full host outs (raster/v_mean
+    included) to ``on_chunk`` — the supervisor buffers them and replays
+    to the real monitors only once the run has survived to the end."""
+
+    def __init__(self, requires):
+        self.requires = tuple(requires)
+        self.outs: Optional[Dict] = None
+
+    def begin(self, session):
+        pass
+
+    def on_chunk(self, t0: int, outs: Dict) -> None:
+        self.outs = outs
+
+    def finalize(self):
+        pass
+
+
+def _check_health(session, outs: Dict, health: HealthConfig,
+                  overflow_rates: List[float]) -> Optional[str]:
+    """None when healthy, else a human-readable violation."""
+    if health.check_finite or health.max_vm is not None:
+        vtx = np.asarray(session.state["vtx_state"])
+        if health.check_finite and not np.all(np.isfinite(vtx)):
+            n_bad = int(np.size(vtx) - np.isfinite(vtx).sum())
+            return f"non-finite membrane state ({n_bad} values)"
+        if health.max_vm is not None and vtx.size:
+            # membrane column only: padded rows are zeros, so safe
+            vmax = float(np.nanmax(np.abs(vtx[..., 0])))
+            if vmax > health.max_vm:
+                return (
+                    f"membrane runaway: |V|max = {vmax:.4g} exceeds the "
+                    f"ceiling {health.max_vm}"
+                )
+    n = max(session.n, 1)
+    steps = max(len(outs["spike_count"]), 1)
+    if health.max_rate is not None:
+        rate = float(np.mean(outs["spike_count"])) / n
+        if rate > health.max_rate:
+            return (
+                f"spike storm: {rate:.4f} spikes/neuron/step exceeds the "
+                f"ceiling {health.max_rate}"
+            )
+    ov_rate = float(np.sum(outs["overflow"])) / (n * steps)
+    overflow_rates.append(ov_rate)
+    if health.max_overflow_rate is not None and \
+            ov_rate > health.max_overflow_rate:
+        return (
+            f"exchange overflow: {ov_rate:.6f} dropped/neuron/step "
+            f"exceeds the ceiling {health.max_overflow_rate}"
+        )
+    esc = health.overflow_escalations
+    if esc and len(overflow_rates) > esc:
+        tail = overflow_rates[-(esc + 1):]
+        if all(b > a for a, b in zip(tail, tail[1:])) and tail[-1] > 0:
+            return (
+                f"escalating exchange overflow: dropped-spike rate rose "
+                f"for {esc} consecutive chunks (latest {tail[-1]:.6f} "
+                "/neuron/step)"
+            )
+    return None
+
+
+def run_supervised(
+    session,
+    steps: int,
+    monitors: Iterable = (),
+    *,
+    chunk_size: Optional[int] = None,
+    checkpoint_every: int,
+    checkpoint_dir: str,
+    max_to_keep: Optional[int] = None,
+    health: Optional[HealthConfig] = None,
+    retry: Optional[RetryPolicy] = None,
+) -> SupervisedResult:
+    """Supervised, self-healing version of ``Session.run`` (see the
+    module docstring).  ``checkpoint_every``/``checkpoint_dir`` are
+    required — checkpoints are the rollback substrate; if the directory
+    holds no snapshot yet, one is taken synchronously at the current
+    step before the first chunk so a rollback target always exists.
+
+    Monitors are fed *committed* chunks only, in order, once the run has
+    completed: outputs from a span later rolled back are discarded and
+    replaced by the re-run (bit-identical when the state was healthy).
+    Raises ``RuntimeError`` after ``retry.max_rollbacks`` consecutive
+    rollbacks without forward progress, chaining the last cause."""
+    if steps <= 0:
+        raise ValueError(f"steps must be positive, got {steps}")
+    if checkpoint_every is None or checkpoint_every <= 0:
+        raise ValueError("run_supervised requires checkpoint_every > 0")
+    if not checkpoint_dir:
+        raise ValueError("run_supervised requires checkpoint_dir")
+    health = health or HealthConfig()
+    retry = retry or RetryPolicy()
+    monitors = tuple(monitors)
+    need = set()
+    for mon in monitors:
+        need |= set(getattr(mon, "requires", ()))
+
+    t_start = session.t
+    target = t_start + steps
+    if not snapshot_steps(checkpoint_dir):
+        # no rollback target yet: make one before the first chunk
+        session.save(
+            os.path.join(checkpoint_dir, f"step_{t_start:08d}"), wait=True
+        )
+    if chunk_size is None:
+        chunk_size = min(steps, _DEFAULT_CHUNK)
+    chunk_size = max(1, int(chunk_size))
+
+    buffered: Dict[int, Dict] = {}   # chunk start step -> host outs
+    events: List[SupervisorEvent] = []
+    reports: List[RestoreReport] = []
+    overflow_rates: List[float] = []
+    rollbacks = 0
+    steps_lost = 0
+    attempts = 0          # consecutive rollbacks without progress
+    progress_mark = t_start   # furthest step reached before last rollback
+
+    def _rollback(reason: str, cause: Optional[BaseException]) -> None:
+        nonlocal rollbacks, steps_lost, attempts, progress_mark
+        cur_t = session.t
+        while True:
+            # drain in-flight writes before restoring, consuming EVERY
+            # stale background error (each wait() surfaces one): failures
+            # from the span being rolled back must not poison the saves
+            # of the re-run
+            try:
+                session.wait()
+                break
+            except OSError as e:
+                events.append(SupervisorEvent(
+                    "io_error", cur_t, f"while draining writer: {e}"
+                ))
+        net, sim_state, t_now, report = restore_resilient(checkpoint_dir)
+        reports.append(report)
+        for d, t_q, ps in report.quarantined:
+            events.append(SupervisorEvent(
+                "quarantine", cur_t,
+                f"{os.path.basename(d)}: shards {ps} quarantined"
+            ))
+        session._reload_from_snapshot(net, sim_state, t_now)
+        # discard buffered outputs from the rolled-back span; the re-run
+        # replaces them (bit-identically when the span was healthy)
+        for t0 in [t0 for t0 in buffered if t0 >= t_now]:
+            del buffered[t0]
+        rollbacks += 1
+        steps_lost += max(cur_t - t_now, 0)
+        if cur_t > progress_mark:
+            attempts = 1          # made progress since the last rollback
+            progress_mark = cur_t
+        else:
+            attempts += 1
+        warnings.warn(
+            f"supervised run rolled back from step {cur_t} to checkpoint "
+            f"step {t_now} ({max(cur_t - t_now, 0)} steps lost, rollback "
+            f"{rollbacks}, attempt {attempts}/{retry.max_rollbacks}); "
+            f"reason: {reason}",
+            UserWarning, stacklevel=3,
+        )
+        events.append(SupervisorEvent("rollback", cur_t,
+                                      f"to step {t_now}: {reason}"))
+        if attempts > retry.max_rollbacks:
+            raise RuntimeError(
+                f"supervised run giving up after {attempts} consecutive "
+                f"rollbacks without progress past step {progress_mark}; "
+                f"last reason: {reason}"
+            ) from cause
+        time.sleep(retry.backoff_s
+                   * retry.backoff_factor ** (attempts - 1))
+
+    for mon in monitors:
+        mon.begin(session)
+    while True:
+        while session.t < target:
+            done = session.t - t_start
+            # chunk grid: aligned to checkpoint boundaries + deterministic
+            # in `done`, so a re-run after rollback hits the same starts
+            to_ckpt = checkpoint_every - (done % checkpoint_every)
+            c = min(chunk_size, target - session.t, to_ckpt)
+            t0 = session.t
+            cap = _Capture(need)
+            try:
+                session.run(c, monitors=(cap,), chunk_size=c)
+            except OSError as e:
+                # a background checkpoint error surfacing at this boundary
+                events.append(SupervisorEvent("io_error", t0, str(e)))
+                _rollback(f"checkpoint write failure: {e}", e)
+                continue
+            buffered[t0] = cap.outs
+            # fault-injection point for state corruption (chaos tests),
+            # then the health gate — BEFORE the boundary checkpoint, so
+            # poisoned state is never checkpointed
+            session._state = apply_state_faults(
+                "supervisor:state", session._state
+            )
+            sick = _check_health(session, cap.outs, health,
+                                 overflow_rates)
+            if sick is not None:
+                events.append(SupervisorEvent("health", session.t, sick))
+                _rollback(sick, None)
+                continue
+            done = session.t - t_start
+            if done % checkpoint_every == 0 or session.t == target:
+                try:
+                    session.save(
+                        os.path.join(checkpoint_dir,
+                                     f"step_{session.t:08d}"),
+                        wait=False,
+                    )
+                    if max_to_keep:
+                        session._writer_obj().submit(
+                            session._gc_checkpoints, checkpoint_dir,
+                            max_to_keep,
+                        )
+                except OSError as e:
+                    events.append(SupervisorEvent("io_error", session.t,
+                                                  str(e)))
+                    _rollback(f"checkpoint write failure: {e}", e)
+                    continue
+        try:
+            session.wait()    # the final checkpoint must be durable
+            break
+        except OSError as e:
+            events.append(SupervisorEvent("io_error", session.t, str(e)))
+            _rollback(f"final checkpoint failed: {e}", e)
+            # the outer loop re-runs the span the rollback re-opened
+
+    # committed: replay the buffered chunks to the real monitors in order
+    starts = sorted(buffered)
+    for t0 in starts:
+        for mon in monitors:
+            mon.on_chunk(t0, buffered[t0])
+    for mon in monitors:
+        mon.finalize()
+    return SupervisedResult(
+        spike_count=np.concatenate(
+            [buffered[t0]["spike_count"] for t0 in starts]
+        ),
+        t_final=session.t,
+        chunks=tuple(len(buffered[t0]["spike_count"]) for t0 in starts),
+        overflow=np.concatenate(
+            [buffered[t0]["overflow"] for t0 in starts]
+        ),
+        rollbacks=rollbacks,
+        steps_lost=steps_lost,
+        events=tuple(events),
+        restore_reports=tuple(reports),
+    )

@@ -1,0 +1,11 @@
+"""Deterministic fault injection for robustness testing (chaos mode)."""
+from .faults import (  # noqa: F401
+    Fault,
+    FaultPlan,
+    InjectedCrash,
+    InjectedIOError,
+    active_plans,
+    apply_state_faults,
+    chaos_plan,
+    fault_point,
+)

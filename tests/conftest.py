@@ -1,6 +1,8 @@
 # NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests
 # and benches must see the real single CPU device.  Multi-device tests
 # spawn subprocesses with their own env (see tests/helpers.py).
+import os
+
 import numpy as np
 import pytest
 
@@ -8,3 +10,20 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _chaos_plan():
+    """Chaos mode (the CI ``chaos-tests`` job): ``REPRO_CHAOS_PLAN=<name>``
+    activates one of the survivable session-wide fault plans
+    (``transient-io`` / ``torn-write`` / ``slow-disk``) for the whole
+    suite — every checkpoint/restore test must stay green because the
+    write stack's own retry/verify layers heal the injected failures."""
+    name = os.environ.get("REPRO_CHAOS_PLAN")
+    if not name:
+        yield None
+        return
+    from repro.testing.faults import chaos_plan
+
+    with chaos_plan(name, seed=int(os.environ.get("REPRO_CHAOS_SEED", "0"))) as plan:
+        yield plan

@@ -1,0 +1,404 @@
+"""Fault-injection harness + durability of the checkpoint write stack:
+plan determinism and hit windows, write-level healing (transient IO,
+torn writes), crash windows around the atomic swap, the truncation
+sweep (every corruption restores an older valid snapshot or raises,
+never garbage), and AsyncWriter retry/error-context."""
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.io import (
+    CheckpointManager,
+    load_latest_valid,
+    save_binary,
+    verify_snapshot,
+)
+from repro.io.async_writer import AsyncWriter, WriteJobError
+from repro.io.dcsr_binary import ShardWriteError, load_binary
+from repro.io.durability import fsync_override, write_bytes_verified
+from repro.snn import SimConfig, Session, balanced_ei, to_dcsr
+from repro.testing import (
+    Fault,
+    FaultPlan,
+    InjectedCrash,
+    InjectedIOError,
+    chaos_plan,
+    fault_point,
+)
+from repro.testing.faults import CHAOS_PLANS, no_faults
+
+
+def small_net(k=2, seed=0):
+    return to_dcsr(balanced_ei(n=80, seed=seed), k=k, uniform=True)
+
+
+# -- plan mechanics (private "unit:*" sites: never hit by chaos plans) ------
+
+def test_fault_hit_window_after_count():
+    with no_faults(), FaultPlan(
+        [Fault("unit:site", "io_error", after=1, count=2)], seed=0
+    ) as plan:
+        fault_point("unit:site", "/a")            # hit 0: skipped (after=1)
+        with pytest.raises(InjectedIOError):
+            fault_point("unit:site", "/a")        # hit 1: fires
+        with pytest.raises(InjectedIOError):
+            fault_point("unit:site", "/a")        # hit 2: fires
+        fault_point("unit:site", "/a")            # hit 3: window exhausted
+    assert [k for _, _, k in plan.fired] == ["io_error", "io_error"]
+
+
+def test_fault_per_path_counts_independently():
+    with no_faults(), FaultPlan(
+        [Fault("unit:site", "io_error", per_path=True)], seed=0
+    ):
+        for p in ("/a", "/b"):
+            with pytest.raises(InjectedIOError):
+                fault_point("unit:site", p)       # first hit of each path
+            fault_point("unit:site", p)           # second hit: healed
+
+
+def test_fault_match_filters_by_path_substring():
+    with no_faults(), FaultPlan(
+        [Fault("unit:site", "io_error", match="part1", count=-1)], seed=0
+    ):
+        fault_point("unit:site", "/x/part0.npz")
+        with pytest.raises(InjectedIOError):
+            fault_point("unit:site", "/x/part1.npz")
+
+
+def test_seeded_damage_is_deterministic(tmp_path):
+    """Same plan seed -> byte-identical torn-write damage, independent of
+    the path the fault happens to hit."""
+    sizes = []
+    for rep in range(2):
+        fn = str(tmp_path / f"blob{rep}.bin")
+        with open(fn, "wb") as f:
+            f.write(bytes(range(256)) * 40)
+        with no_faults(), FaultPlan(
+            [Fault("unit:site", "torn")], seed=42
+        ):
+            fault_point("unit:site", fn)
+        sizes.append(os.path.getsize(fn))
+    assert sizes[0] == sizes[1] < 256 * 40
+
+
+# -- write-level healing (the real sites, chaos masked for determinism) -----
+
+def test_write_bytes_verified_heals_transient_io(tmp_path):
+    fn = str(tmp_path / "x.bin")
+    with no_faults(), FaultPlan(
+        [Fault("shard_write", "io_error", count=2)], seed=0
+    ) as plan:
+        crc = write_bytes_verified(fn, b"payload", "shard_write")
+    assert len(plan.fired) == 2          # two failures, third attempt lands
+    assert open(fn, "rb").read() == b"payload"
+    assert crc == zlib.crc32(b"payload")
+
+
+def test_write_bytes_verified_heals_torn_write(tmp_path):
+    fn = str(tmp_path / "x.bin")
+    data = bytes(range(256)) * 16
+    with no_faults(), FaultPlan(
+        [Fault("shard_write:post", "torn", count=1)], seed=3
+    ) as plan:
+        write_bytes_verified(fn, data, "shard_write")
+    assert len(plan.fired) == 1          # read-back CRC caught the tear
+    assert open(fn, "rb").read() == data
+
+
+def test_write_bytes_verified_raises_after_retries_exhausted(tmp_path):
+    fn = str(tmp_path / "x.bin")
+    with no_faults(), FaultPlan(
+        [Fault("shard_write", "io_error", count=-1)], seed=0
+    ):
+        with pytest.raises(OSError):
+            write_bytes_verified(fn, b"payload", "shard_write")
+
+
+def test_snapshot_write_heals_transient_shard_errors(tmp_path):
+    """A full dCSR snapshot under per-path first-write failures comes out
+    valid: the write layer retries, the manifest CRCs match the disk."""
+    net = small_net()
+    d = str(tmp_path / "snap")
+    with no_faults(), FaultPlan(
+        [Fault("shard_write", "io_error", per_path=True)], seed=1
+    ) as plan:
+        save_binary(net, d, t_now=7, atomic=True)
+    assert plan.fired                    # faults really did fire
+    man, bad = verify_snapshot(d)
+    assert bad == [] and man["t_now"] == 7
+    net2, _, t = load_binary(d)
+    assert t == 7
+    np.testing.assert_array_equal(net2.parts[0].col_idx,
+                                  net.parts[0].col_idx)
+
+
+def test_bit_flip_on_read_is_detected(tmp_path):
+    net = small_net()
+    d = str(tmp_path / "snap")
+    save_binary(net, d, t_now=0, atomic=True)
+    with no_faults(), FaultPlan(
+        [Fault("shard_read", "bit_flip", count=1)], seed=5
+    ):
+        with pytest.raises(IOError, match="corrupt"):
+            load_binary(d, verify=True)
+    # the flip hit the disk: a plain re-read still sees it
+    with pytest.raises(IOError, match="corrupt"):
+        load_binary(d, verify=True)
+
+
+# -- crash windows around the atomic swap -----------------------------------
+
+def test_crash_between_renames_leaves_old_and_restores(tmp_path):
+    d = str(tmp_path / "snap")
+    net = small_net()
+    save_binary(net, d, t_now=0, atomic=True)
+    with no_faults(), FaultPlan(
+        [Fault("atomic_dir:between_renames", "crash")], seed=0
+    ):
+        with pytest.raises(InjectedCrash):
+            save_binary(net, d, t_now=10, atomic=True)
+    # frozen inside the window: only .old holds a complete snapshot
+    assert not os.path.exists(os.path.join(d, "manifest.json"))
+    assert os.path.exists(os.path.join(d + ".old", "manifest.json"))
+    _, _, t = load_latest_valid(d)
+    assert t == 0                        # restore falls back to .old
+    # the next write finishes the interrupted swap, then lands cleanly
+    save_binary(net, d, t_now=20, atomic=True)
+    assert not os.path.exists(d + ".old")
+    _, _, t = load_latest_valid(d)
+    assert t == 20
+
+
+def test_crash_after_swap_before_dirsync(tmp_path):
+    """The satellite scenario: crash after both renames but before the
+    parent-directory fsync / .old cleanup.  The new snapshot is already
+    the restore target; the stale .old is cleared by the next write."""
+    d = str(tmp_path / "snap")
+    net = small_net()
+    save_binary(net, d, t_now=0, atomic=True)
+    with no_faults(), FaultPlan(
+        [Fault("atomic_dir:after_swap", "crash")], seed=0
+    ):
+        with pytest.raises(InjectedCrash):
+            save_binary(net, d, t_now=10, atomic=True)
+    assert os.path.exists(os.path.join(d, "manifest.json"))
+    assert os.path.exists(os.path.join(d + ".old", "manifest.json"))
+    _, _, t = load_latest_valid(d)
+    assert t == 10
+    save_binary(net, d, t_now=20, atomic=True)
+    assert not os.path.exists(d + ".old")
+
+
+def test_crash_pre_swap_keeps_previous_snapshot(tmp_path):
+    d = str(tmp_path / "snap")
+    net = small_net()
+    save_binary(net, d, t_now=0, atomic=True)
+    with no_faults(), FaultPlan(
+        [Fault("atomic_dir:pre_swap", "crash")], seed=0
+    ):
+        with pytest.raises(InjectedCrash):
+            save_binary(net, d, t_now=10, atomic=True)
+    _, _, t = load_latest_valid(d)
+    assert t == 0                        # previous snapshot untouched
+
+
+# -- truncation sweep (satellite: never restore garbage) --------------------
+
+def _sweep_offsets(rng, size, k=4):
+    """Seeded offsets + the section boundaries (header / tail)."""
+    offs = {1, size // 2, max(size - 1, 1), max(size - 8, 1)}
+    offs |= {int(o) for o in rng.integers(1, size, k)}
+    return sorted(o for o in offs if 0 < o < size)
+
+
+def test_truncation_sweep_dcsr_snapshots(tmp_path):
+    """Truncating the manifest or any shard of the newest step at any
+    offset: the walker restores the older valid step, never garbage."""
+    root = str(tmp_path / "steps")
+    net = small_net()
+    with fsync_override(False):          # pure-IO sweep, keep it fast
+        save_binary(net, os.path.join(root, "step_00000000"),
+                    t_now=0, atomic=True)
+        save_binary(net, os.path.join(root, "step_00000010"),
+                    t_now=10, atomic=True)
+    newest = os.path.join(root, "step_00000010")
+    rng = np.random.default_rng(2024)
+    files = sorted(os.listdir(newest))
+    assert set(files) == {"manifest.json", "part0.npz", "part1.npz"}
+    for fn in files:
+        full = os.path.join(newest, fn)
+        pristine = open(full, "rb").read()
+        for off in _sweep_offsets(rng, len(pristine)):
+            with open(full, "wb") as f:
+                f.write(pristine[:off])
+            try:
+                _, _, t = load_latest_valid(root)
+            except (FileNotFoundError, OSError, ValueError):
+                pass                     # clean failure is acceptable
+            else:
+                assert t == 0, (
+                    f"truncated {fn}@{off} restored t={t}, not the older "
+                    "valid step"
+                )
+            with open(full, "wb") as f:  # restore for the next offset
+                f.write(pristine)
+    _, _, t = load_latest_valid(root)
+    assert t == 10                       # pristine tree intact after sweep
+
+
+def test_truncation_sweep_tensor_checkpoints(tmp_path):
+    root = str(tmp_path / "ckpt")
+    tree = {"w": np.arange(600, dtype=np.float32).reshape(30, 20),
+            "b": np.ones(20, np.float32)}
+    with fsync_override(False):
+        mgr = CheckpointManager(root, async_write=False)
+        mgr.save(0, tree)
+        mgr.save(10, tree)
+    newest = mgr.step_dir(10)
+    rng = np.random.default_rng(7)
+    for fn in sorted(os.listdir(newest)):
+        full = os.path.join(newest, fn)
+        pristine = open(full, "rb").read()
+        for off in _sweep_offsets(rng, len(pristine), k=3):
+            with open(full, "wb") as f:
+                f.write(pristine[:off])
+            try:
+                restored, step = mgr.restore_latest_valid(like=tree)
+            except FileNotFoundError:
+                pass
+            else:
+                assert step == 0
+                np.testing.assert_array_equal(restored["w"], tree["w"])
+            with open(full, "wb") as f:
+                f.write(pristine)
+    _, step = mgr.restore_latest_valid(like=tree)
+    assert step == 10
+
+
+# -- AsyncWriter: retry + error context (satellites) ------------------------
+
+def test_async_writer_retries_transient_oserror():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("flaky disk")
+
+    w = AsyncWriter(retries=2, retry_backoff_s=0.001)
+    w.submit(flaky)
+    w.wait()                             # healed on the third attempt
+    assert len(calls) == 3
+    w.close()
+
+
+def test_async_writer_error_context_and_chain(tmp_path):
+    orig = ShardWriteError(3, str(tmp_path / "part3.npz"),
+                           OSError("dead sector"))
+
+    def boom():
+        raise orig
+
+    w = AsyncWriter(retries=0)
+    w.submit(boom, context=dict(step=1200, path=str(tmp_path / "snap")))
+    with pytest.raises(WriteJobError) as ei:
+        w.wait()
+    err = ei.value
+    assert isinstance(err, OSError)      # historical handlers keep working
+    assert err.step == 1200
+    assert err.part_id == 3              # from the exception, not the ctx
+    assert err.path == str(tmp_path / "part3.npz")
+    assert err.__cause__ is orig
+    msg = str(err)
+    assert "step 1200" in msg and "partition 3" in msg and "part3" in msg
+    w.close()
+
+
+def test_async_writer_gives_up_after_retries():
+    calls = []
+
+    def always_fails():
+        calls.append(1)
+        raise OSError("still broken")
+
+    w = AsyncWriter(retries=1, retry_backoff_s=0.001)
+    w.submit(always_fails, context=dict(step=5))
+    with pytest.raises(WriteJobError, match="step 5"):
+        w.wait()
+    assert len(calls) == 2               # original + one retry
+    w.close()
+
+
+def test_async_writer_does_not_retry_non_oserror():
+    calls = []
+
+    def crashes():
+        calls.append(1)
+        raise InjectedCrash("hard stop")
+
+    w = AsyncWriter(retries=3, retry_backoff_s=0.001)
+    w.submit(crashes)
+    with pytest.raises(WriteJobError):
+        w.wait()
+    assert len(calls) == 1               # crashes are not transient
+    w.close()
+
+
+# -- chaos plans + masking ---------------------------------------------------
+
+@pytest.mark.parametrize("name", CHAOS_PLANS)
+def test_chaos_plans_are_survivable(tmp_path, name):
+    """Every named chaos plan is healed by the stack's own retry/verify
+    layers: a snapshot written underneath it is valid on disk."""
+    net = small_net(seed=2)
+    d = str(tmp_path / name)
+    with chaos_plan(name, seed=9) as plan:
+        save_binary(net, d, t_now=4, atomic=True)
+    if name != "slow-disk":
+        assert plan.fired                # the plan really injected faults
+    man, bad = verify_snapshot(d)
+    assert bad == [] and man["t_now"] == 4
+    load_binary(d, verify=True)
+
+
+def test_no_faults_masks_active_plans(tmp_path):
+    fn = str(tmp_path / "x.bin")
+    with FaultPlan([Fault("shard_write", "io_error", count=-1)], seed=0):
+        with no_faults():
+            write_bytes_verified(fn, b"ok", "shard_write")
+        with pytest.raises(OSError):
+            write_bytes_verified(str(tmp_path / "y.bin"), b"no",
+                                 "shard_write")
+    assert open(fn, "rb").read() == b"ok"
+
+
+# -- session-level: checkpoint failure names the rollback point -------------
+
+def test_run_checkpoint_failure_names_last_good_step(tmp_path):
+    """Satellite: when writer retries exhaust, the error from
+    Session.run(checkpoint_every=...) names the last successful step."""
+    root = str(tmp_path / "ck")
+    ses = Session(small_net(k=1), SimConfig(align_k=8))
+    with no_faults(), FaultPlan(
+        [Fault("manifest_write", "io_error", match="step_00000060",
+               count=-1)], seed=0
+    ):
+        with pytest.raises(
+            OSError, match=r"last successful checkpoint: step 30"
+        ) as ei:
+            ses.run(90, checkpoint_every=30, checkpoint_dir=root,
+                    checkpoint_sync=True)
+    assert "step 60" in str(ei.value)
+    assert isinstance(ei.value.__cause__, WriteJobError)
+    assert ei.value.__cause__.step == 60
+    ses.close()
+
+
+def test_unknown_chaos_plan_fails_loudly():
+    """The conftest chaos fixture activates plans from REPRO_CHAOS_PLAN;
+    unknown names must fail loudly, not silently run faultless."""
+    with pytest.raises(ValueError, match="unknown chaos plan"):
+        chaos_plan("no-such-plan")

@@ -1,0 +1,326 @@
+"""Self-healing supervised run loop + resilient restore: quarantine and
+keystream topology regeneration, NaN/storm rollback with bit-identical
+re-runs, bounded giveup, checkpoint-failure rollback, and the end-to-end
+k=2 chaos acceptance run."""
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from helpers import run_with_devices
+from repro.builder import balanced_ei_rules
+from repro.builder.procedural import build_network
+from repro.io import load_latest_valid, save_binary, snapshot_steps
+from repro.io.dcsr_binary import load_binary
+from repro.snn import (
+    HealthConfig,
+    RetryPolicy,
+    Session,
+    SimConfig,
+    balanced_ei,
+    restore_resilient,
+    to_dcsr,
+)
+from repro.snn.monitors import RasterMonitor
+from repro.testing import Fault, FaultPlan
+from repro.testing.faults import no_faults
+
+
+def k1_net(seed=3):
+    return to_dcsr(balanced_ei(n=120, seed=seed), k=1)
+
+
+def _flip_byte(path, off=200):
+    with open(path, "r+b") as f:
+        f.seek(off)
+        b = f.read(1)
+        f.seek(off)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+# -- resilient restore: quarantine + keystream regeneration -----------------
+
+def test_restore_resilient_quarantines_and_regenerates(tmp_path):
+    spec = balanced_ei_rules(n=120, seed=3, stdp=False)
+    net = build_network(spec, k=3, uniform=True)
+    root = str(tmp_path / "steps")
+    save_binary(net, os.path.join(root, "step_00000000"), t_now=0,
+                atomic=True)
+    save_binary(net, os.path.join(root, "step_00000010"), t_now=10,
+                atomic=True)
+    shard = os.path.join(root, "step_00000010", "part1.npz")
+    _flip_byte(shard)
+
+    with no_faults(), pytest.warns(UserWarning, match="quarantined"):
+        net2, _sim, t, report = restore_resilient(root)
+    assert t == 0                        # fell back past the corrupt step
+    assert report.regenerated == [1]
+    assert [ps for _, _, ps in report.quarantined] == [[1]]
+    # damaged bytes kept aside for post-mortem; shard no longer restorable
+    assert os.path.exists(shard + ".quarantine")
+    assert not os.path.exists(shard)
+    _, _, t2 = load_latest_valid(root)
+    assert t2 == 0
+    # regenerated topology is bit-identical to the original partition
+    for fld in ("row_ptr", "col_idx", "coords", "global_ids"):
+        np.testing.assert_array_equal(getattr(net2.parts[1], fld),
+                                      getattr(net.parts[1], fld))
+
+
+def test_restore_resilient_without_rulespec_warns(tmp_path):
+    """A snapshot of a non-procedural network carries no RuleSpec: the
+    corrupt shard is still quarantined and the older step restored, but
+    regeneration is impossible and says so."""
+    net = to_dcsr(balanced_ei(n=80, seed=1), k=2, uniform=True)
+    root = str(tmp_path / "steps")
+    save_binary(net, os.path.join(root, "step_00000000"), t_now=0,
+                atomic=True)
+    save_binary(net, os.path.join(root, "step_00000010"), t_now=10,
+                atomic=True)
+    _flip_byte(os.path.join(root, "step_00000010", "part0.npz"))
+
+    with no_faults(), pytest.warns(UserWarning,
+                                   match="cannot be regenerated"):
+        net2, _sim, t, report = restore_resilient(root)
+    assert t == 0
+    assert report.regenerated == []
+    np.testing.assert_array_equal(net2.parts[0].col_idx,
+                                  net.parts[0].col_idx)
+
+
+def test_restore_resilient_raises_when_nothing_valid(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_resilient(str(tmp_path / "empty"))
+
+
+# -- supervised loop: health rollback heals bit-identically -----------------
+
+def _reference_run(steps=120, chunk=30):
+    ses = Session(k1_net(), SimConfig(align_k=8))
+    ras = RasterMonitor()
+    res = ses.run(steps, monitors=[ras], chunk_size=chunk)
+    return res, ras, np.asarray(ses.state["vtx_state"])
+
+
+def test_supervised_nan_rollback_bit_identical(tmp_path):
+    res_ref, ras_ref, v_ref = _reference_run()
+    root = str(tmp_path / "ck")
+    ses = Session(k1_net(), SimConfig(align_k=8))
+    ras = RasterMonitor()
+    with no_faults(), FaultPlan(
+        [Fault("supervisor:state", "nan", after=1, count=1)], seed=5
+    ):
+        with pytest.warns(UserWarning, match="rolled back"):
+            res = ses.run_supervised(
+                120, monitors=[ras], chunk_size=30,
+                checkpoint_every=30, checkpoint_dir=root,
+            )
+    assert res.rollbacks == 1
+    assert res.steps_lost == 30          # t=60 back to the t=30 checkpoint
+    assert res.t_final == 120
+    assert [ev.kind for ev in res.events][:2] == ["health", "rollback"]
+    assert "non-finite" in res.events[0].detail
+    # committed outputs replace the rolled-back span bit-identically
+    np.testing.assert_array_equal(res.spike_count, res_ref.spike_count)
+    np.testing.assert_array_equal(ras.raster, ras_ref.raster)
+    np.testing.assert_array_equal(np.asarray(ses.state["vtx_state"]), v_ref)
+    # mapping contract (summary() etc. treat it like a RunResult)
+    assert set(res.keys()) == {"spike_count", "overflow"}
+    np.testing.assert_array_equal(res["spike_count"], res.spike_count)
+    ses.close()
+
+
+def test_supervised_storm_trips_membrane_ceiling(tmp_path):
+    """A storm-primed state (|V| blown far past threshold) is caught by
+    the max_vm gate on the very chunk it appears — BEFORE the boundary
+    checkpoint — so no snapshot on disk ever holds poisoned state."""
+    res_ref, ras_ref, v_ref = _reference_run()
+    root = str(tmp_path / "ck")
+    ses = Session(k1_net(), SimConfig(align_k=8))
+    ras = RasterMonitor()
+    with no_faults(), FaultPlan(
+        [Fault("supervisor:state", "storm", after=1, count=1)], seed=6
+    ):
+        with pytest.warns(UserWarning, match="rolled back"):
+            res = ses.run_supervised(
+                120, monitors=[ras], chunk_size=30,
+                checkpoint_every=30, checkpoint_dir=root,
+            )
+    assert res.rollbacks == 1
+    assert any("membrane runaway" in ev.detail for ev in res.events)
+    np.testing.assert_array_equal(ras.raster, ras_ref.raster)
+    ses.close()
+    # the health gate held: every checkpoint on disk is finite and sane
+    for step in snapshot_steps(root):
+        net_s, _, _ = load_binary(os.path.join(root, f"step_{step:08d}"))
+        for part in net_s.parts:
+            v = part.vtx_state[:, 0]
+            assert np.all(np.isfinite(v)) and np.all(np.abs(v) <= 1e3)
+
+
+def test_supervised_gives_up_after_bounded_rollbacks(tmp_path):
+    root = str(tmp_path / "ck")
+    ses = Session(k1_net(), SimConfig(align_k=8))
+    with no_faults(), FaultPlan(
+        [Fault("supervisor:state", "nan", count=-1)], seed=0
+    ):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with pytest.raises(RuntimeError, match="giving up"):
+                ses.run_supervised(
+                    120, chunk_size=30, checkpoint_every=30,
+                    checkpoint_dir=root,
+                    retry=RetryPolicy(max_rollbacks=2, backoff_s=0.001),
+                )
+    ses.close()
+
+
+def test_supervised_checkpoint_failure_rolls_back_then_gives_up(tmp_path):
+    """A persistent manifest-write failure (survives every write- and
+    queue-level retry) triggers rollbacks, then a bounded giveup chaining
+    the background error with its job context."""
+    from repro.io.async_writer import WriteJobError
+
+    root = str(tmp_path / "ck")
+    ses = Session(k1_net(), SimConfig(align_k=8))
+    # every checkpoint from t=60 on fails persistently: no rollback
+    # target past step 30 can ever become durable, so the run cannot make
+    # progress and must give up (regardless of when the async failure
+    # surfaces — at a later boundary's check() or at the final wait())
+    with no_faults(), FaultPlan(
+        [Fault("manifest_write", "io_error", match=f"step_{s:08d}",
+               count=-1) for s in (60, 90, 120)], seed=0
+    ):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with pytest.raises(RuntimeError, match="giving up") as ei:
+                ses.run_supervised(
+                    120, chunk_size=30, checkpoint_every=30,
+                    checkpoint_dir=root,
+                    retry=RetryPolicy(max_rollbacks=2, backoff_s=0.001),
+                )
+    cause = ei.value.__cause__
+    assert isinstance(cause, WriteJobError)
+    assert cause.step in (60, 90, 120)   # the job context names the step
+    # nothing past the last healthy checkpoint ever became durable
+    assert max(snapshot_steps(root)) == 30
+    ses.close()
+
+
+def test_supervised_validates_arguments(tmp_path):
+    ses = Session(k1_net(), SimConfig(align_k=8))
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        ses.run_supervised(10, checkpoint_every=0,
+                           checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        ses.run_supervised(10, checkpoint_every=5, checkpoint_dir="")
+    with pytest.raises(ValueError, match="steps"):
+        ses.run_supervised(0, checkpoint_every=5,
+                           checkpoint_dir=str(tmp_path))
+    ses.close()
+
+
+def test_health_config_overflow_escalation_detector():
+    """Unit check of the escalation rule: strictly rising overflow for N
+    consecutive chunks trips, plateaus do not."""
+    from repro.snn.supervisor import HealthConfig as HC
+    from repro.snn.supervisor import _check_health
+
+    class _FakeSession:
+        n = 100
+        state = {"vtx_state": np.zeros((100, 2), np.float32)}
+
+    hc = HC(max_rate=None, overflow_escalations=3)
+    rates = []
+    outs = {"spike_count": np.zeros(10, np.int32),
+            "overflow": np.zeros(10, np.int32)}
+    ses = _FakeSession()
+    for ov in (0, 1, 2, 3):              # strictly rising
+        outs = dict(outs, overflow=np.full(10, ov, np.int32))
+        sick = _check_health(ses, outs, hc, rates)
+    assert sick is not None and "escalating" in sick
+    rates = []
+    for ov in (0, 2, 2, 2):              # plateau: no trip
+        outs = dict(outs, overflow=np.full(10, ov, np.int32))
+        sick = _check_health(ses, outs, hc, rates)
+    assert sick is None
+
+
+def test_run_supervised_is_surfaced_on_session():
+    assert callable(getattr(Session, "run_supervised"))
+    assert HealthConfig().max_vm == 1e3  # storm gate on by default
+
+
+# -- end-to-end acceptance: k=2 plastic run under a seeded chaos plan -------
+
+def test_supervised_e2e_k2_chaos_bit_identical():
+    """The ISSUE acceptance run: k=2 STDP network under a seeded plan
+    combining a transient writer IO error, one injected NaN, and one
+    corrupted (bit-flipped) shard.  run_supervised completes; raster,
+    spike counts and weights are bit-identical to an undisturbed
+    reference; the quarantined shard's topology is regenerated
+    bit-identically from the RuleSpec keystream."""
+    out = run_with_devices(
+        """
+        import tempfile, warnings
+        import numpy as np
+        from repro.builder import balanced_ei_rules
+        from repro.builder.procedural import build_partition
+        from repro.snn import Session, SimConfig
+        from repro.snn.monitors import RasterMonitor
+        from repro.testing import Fault, FaultPlan
+
+        spec = balanced_ei_rules(n=240, seed=7, stdp=True)
+        cfg = SimConfig(align_k=8, exchange="dense")
+
+        ref = Session(spec, cfg, k=2, engine="spmd")
+        assert ref.engine_kind == "spmd"
+        ras_ref = RasterMonitor()
+        res_ref = ref.run(120, monitors=[ras_ref], chunk_size=30)
+
+        tmp = tempfile.mkdtemp()
+        plan = FaultPlan([
+            Fault("shard_write", "io_error", per_path=True),
+            Fault("supervisor:state", "nan", after=1, count=1),
+            Fault("shard_read", "bit_flip",
+                  match="step_00000030/part0", count=1),
+        ], seed=11)
+        ses = Session(spec, cfg, k=2, engine="spmd")
+        ras = RasterMonitor()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with plan:
+                res = ses.run_supervised(
+                    120, monitors=[ras], chunk_size=30,
+                    checkpoint_every=30, checkpoint_dir=tmp,
+                )
+        # NaN at t=60 -> rollback; step_00000030's part0 was bit-flipped
+        # on read -> quarantined -> fell back to step_00000000
+        assert res.rollbacks == 1, res.rollbacks
+        assert res.steps_lost == 60, res.steps_lost
+        assert res.t_final == 120
+        rep = res.restore_reports[0]
+        assert rep.regenerated == [0], rep
+        assert any(0 in ps for _, _, ps in rep.quarantined)
+        assert any(ev.kind == "quarantine" for ev in res.events)
+        # bit-identical to the undisturbed reference from the rollback on
+        assert np.array_equal(res.spike_count,
+                              np.asarray(res_ref.spike_count))
+        assert np.array_equal(ras.raster, ras_ref.raster)
+        for key in ("vtx_state", "weights"):
+            if key in ref.state:
+                assert np.array_equal(np.asarray(ses.state[key]),
+                                      np.asarray(ref.state[key])), key
+        # the session now runs on keystream-regenerated topology, and it
+        # is bit-identical to a fresh procedural build of partition 0
+        regen = build_partition(spec, 2, 0, uniform=True)
+        assert np.array_equal(ses.net.parts[0].row_ptr, regen.row_ptr)
+        assert np.array_equal(ses.net.parts[0].col_idx, regen.col_idx)
+        ses.close()
+        ref.close()
+        print("E2E_OK")
+        """,
+        n_devices=2,
+    )
+    assert "E2E_OK" in out
