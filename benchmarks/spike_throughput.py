@@ -30,6 +30,15 @@ Modes (``--mode``):
                   skipped per-block *arithmetic* is real (interpret mode);
                   on TPU the event win is larger — the skipped HBM panel
                   fetches dominate
+  * ``overlap`` — exchange/compute overlap for the split engines: the
+                  k=2/k=4 split-fused step with ``overlap='off'``
+                  (serialized exchange -> gather) vs ``overlap='local'``
+                  (own-partition gather issued concurrently with the
+                  collective), subprocess per point like ``dist``.  On
+                  CPU interpret mode the collective is cheap and the
+                  decomposition shows mostly its bookkeeping overhead
+                  (wide gate band); on real multi-chip meshes the hidden
+                  collective latency is the win the mode exists for
   * ``ingest``  — streamed vs eager snapshot ingest (merged k=3 -> k=1
                   load) at two network scales, wall-time and peak RSS
                   each measured in its own subprocess.  Raw numbers are
@@ -48,12 +57,12 @@ Modes (``--mode``):
                   stat is ``recovery_steps_lost_ratio`` = steps lost /
                   ``checkpoint_every`` (dimensionless, exactly 1.0 when
                   the rollback lands on the newest checkpoint)
-  * ``all``     — fused + dist + plastic + ckpt + event + ingest +
-                  serialization + recovery (+ ref): the full
+  * ``all``     — fused + dist + plastic + overlap + ckpt + event +
+                  ingest + serialization + recovery (+ ref): the full
                   fused-vs-unfused × k=1-vs-distributed ×
-                  plain-vs-plastic grid plus the checkpoint-stall pair,
-                  the activity sweep, the IO-side (ingest/serialization)
-                  stats, and the recovery drill
+                  plain-vs-plastic grid plus the overlap pair, the
+                  checkpoint-stall pair, the activity sweep, the IO-side
+                  (ingest/serialization) stats, and the recovery drill
 
 Every invocation also records its results into
 ``BENCH_spike_throughput.json`` (``--json`` to relocate), merging with any
@@ -216,7 +225,7 @@ def main_event(scale, steps, json_path):
 
 
 def run_dist(scale, steps, k, backend, fused, exchange="auto",
-             plastic=False):
+             plastic=False, overlap="auto"):
     """k>1 measurement in THIS process (caller provides >= k devices).
     ``plastic`` swaps the microcircuit for the STDP workload (``scale``
     is then the neuron count)."""
@@ -230,10 +239,12 @@ def run_dist(scale, steps, k, backend, fused, exchange="auto",
     align_k = 128 if backend == "pallas" else 32
     ses = Session(d, SimConfig(
         align_k=align_k, backend=backend, fused=fused, exchange=exchange,
-        gather="dense",
+        gather="dense", overlap=overlap,
     ))
     assert ses.describe()["engine"] == "spmd"
-    return _time_session(ses, steps, d.n, d.m)
+    r = _time_session(ses, steps, d.n, d.m)
+    r["overlap"] = ses.describe().get("overlap", overlap)
+    return r
 
 
 def _dist_worker_main(argv):
@@ -244,15 +255,17 @@ def _dist_worker_main(argv):
     ap.add_argument("--backend", required=True)
     ap.add_argument("--fused", type=int, required=True)
     ap.add_argument("--plastic", type=int, default=0)
+    ap.add_argument("--overlap", default="auto")
     args = ap.parse_args(argv)
     r = run_dist(
         args.scale, args.steps, args.k, args.backend, bool(args.fused),
-        plastic=bool(args.plastic),
+        plastic=bool(args.plastic), overlap=args.overlap,
     )
     print("RESULT " + json.dumps(r))
 
 
-def _run_dist_subprocess(scale, steps, k, backend, fused, plastic=False):
+def _run_dist_subprocess(scale, steps, k, backend, fused, plastic=False,
+                         overlap="auto"):
     """Run one distributed measurement in a subprocess with k fake host
     devices (off-TPU the host platform must be forced BEFORE jax
     initializes, so the parent process stays clean)."""
@@ -269,7 +282,7 @@ def _run_dist_subprocess(scale, steps, k, backend, fused, plastic=False):
         [sys.executable, os.path.abspath(__file__), "--_dist-worker",
          "--scale", str(scale), "--steps", str(steps), "--k", str(k),
          "--backend", backend, "--fused", str(int(fused)),
-         "--plastic", str(int(plastic))],
+         "--plastic", str(int(plastic)), "--overlap", overlap],
         env=env, capture_output=True, text=True, timeout=1800,
     )
     if out.returncode != 0:
@@ -398,6 +411,43 @@ def main_plastic(n, steps, k, json_path):
     )
     entries[f"plastic_dist_k{k}_fused"] = dist_f
     entries[f"plastic_dist_k{k}_unfused"] = dist_u
+    _record(json_path, entries)
+
+
+def main_overlap(scale, steps, ks, json_path):
+    """Split-fused step with the exchange serialized (``overlap='off'``)
+    vs overlapped with the local gather (``overlap='local'``), at the
+    k=2/k=4 proxy points.  The pair shares the workload with ``dist`` so
+    the columns line up in the JSON grid.  Both entries carry a wide
+    ``gate_threshold``: off-TPU the collective costs ~nothing, so the
+    decomposed gather mostly exposes its own bookkeeping — the gate
+    protects against the machinery rotting (a lost kernel fusion or an
+    accidental serialization shows up far past 2x), not against losing a
+    win CPU interpret mode cannot show."""
+    from repro.kernels.dispatch import platform_default
+
+    backend = platform_default()
+    entries = {}
+    for k in ks:
+        ser = _run_dist_subprocess(scale, steps, k, backend, True,
+                                   overlap="off")
+        ovl = _run_dist_subprocess(scale, steps, k, backend, True,
+                                   overlap="local")
+        assert ser["engine"] == "fused_split", ser["engine"]
+        assert ser["overlap"] == "off", ser["overlap"]
+        assert ovl["engine"] == "fused_split", ovl["engine"]
+        assert ovl["overlap"] == "local", ovl["overlap"]
+        for e in (ser, ovl):
+            e["gate_threshold"] = 2.0
+        speedup = ser["us_per_step"] / max(ovl["us_per_step"], 1e-9)
+        print(
+            f"spike_throughput_overlap_k{k},{ovl['us_per_step']:.0f},"
+            f"serialized_us={ser['us_per_step']:.0f};"
+            f"speedup={speedup:.2f}x;backend={backend};"
+            f"exchange={ovl.get('exchange')};n={ovl['n']};m={ovl['m']}"
+        )
+        entries[f"overlap_k{k}_serialized"] = ser
+        entries[f"overlap_k{k}_overlapped"] = ovl
     _record(json_path, entries)
 
 
@@ -778,8 +828,8 @@ def main(argv=None, quick=None):
         return
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mode",
-                    choices=("ref", "fused", "dist", "plastic", "ckpt",
-                             "event", "ingest", "serialization",
+                    choices=("ref", "fused", "dist", "plastic", "overlap",
+                             "ckpt", "event", "ingest", "serialization",
                              "recovery", "all"),
                     default="ref")
     ap.add_argument("--scale", type=float, default=None,
@@ -808,6 +858,11 @@ def main(argv=None, quick=None):
         n_plastic = 160 if args.quick else 400
         k = args.k if args.k is not None else 2
         main_plastic(n_plastic, pallas_steps, k, args.json)
+    if args.mode in ("overlap", "all"):
+        ks = (args.k,) if args.k is not None else (
+            (2,) if args.quick else (2, 4)
+        )
+        main_overlap(pallas_scale, pallas_steps, ks, args.json)
     if args.mode in ("event", "all"):
         ev_scale = args.scale if args.scale is not None else (
             0.005 if args.quick else 0.01

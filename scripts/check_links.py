@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Stdlib-only markdown link checker for the repo's docs.
+
+Walks the given markdown files (default: README.md, ROADMAP.md, and
+everything under docs/), extracts ``[text](target)`` links, and fails if
+a *local* target does not exist relative to the file that links it.
+External links (http/https/mailto) are not fetched — CI runs offline —
+only local file references are verified, which is where doc drift
+actually bites (renamed/deleted files).
+
+Exit status: 0 if every local link resolves, 1 otherwise.
+"""
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def iter_links(path):
+    """Yield (lineno, target) for markdown links outside code fences."""
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                yield lineno, m.group(1)
+
+
+def check_file(path, root):
+    bad = []
+    base = os.path.dirname(os.path.abspath(path))
+    for lineno, target in iter_links(path):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):  # intra-document anchor
+            continue
+        local = target.split("#", 1)[0]
+        if not local:
+            continue
+        resolved = os.path.normpath(os.path.join(base, local))
+        if not resolved.startswith(os.path.abspath(root) + os.sep):
+            # escapes the repo -> a GitHub site-relative URL (CI badge
+            # ../../actions/...), not a file reference
+            continue
+        if not os.path.exists(resolved):
+            bad.append((lineno, target, resolved))
+    return bad
+
+
+def default_targets(root):
+    out = []
+    for name in ("README.md", "ROADMAP.md"):
+        p = os.path.join(root, name)
+        if os.path.exists(p):
+            out.append(p)
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        for fn in sorted(os.listdir(docs)):
+            if fn.endswith(".md"):
+                out.append(os.path.join(docs, fn))
+    return out
+
+
+def main(argv):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = argv[1:] or default_targets(root)
+    failures = 0
+    for path in files:
+        for lineno, target, resolved in check_file(path, root):
+            print(f"{path}:{lineno}: broken link {target!r} "
+                  f"(resolved to {resolved})")
+            failures += 1
+    if failures:
+        print(f"{failures} broken link(s)")
+        return 1
+    print(f"checked {len(files)} file(s): all local links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -39,7 +39,9 @@ import numpy as np
 from numpy.lib import format as npf
 
 from ..core.dcsr import DCSRNetwork, DCSRPartition
-from ..io.dcsr_binary import check_shard_crc, registry_from_manifest
+from ..io.dcsr_binary import (
+    check_format_version, check_shard_crc, registry_from_manifest,
+)
 
 DEFAULT_CHUNK_ROWS = 8192
 
@@ -119,6 +121,7 @@ class SnapshotReader:
         self.path = os.fspath(path)
         with open(os.path.join(self.path, "manifest.json")) as f:
             self.manifest = json.load(f)
+        check_format_version(self.manifest, source=self.path)
         self.registry = registry_from_manifest(self.manifest)
         self.k = int(self.manifest["k"])
         self.n = int(self.manifest["n"])

@@ -52,6 +52,51 @@ from ..testing.faults import fault_point
 from .checkpoint import atomic_dir, step_candidates
 from .durability import fsync_dir, write_bytes_verified
 
+#: On-disk snapshot format version, written into every manifest as
+#: ``"format_version": "<major>.<minor>"`` and checked on read.  Bump the
+#: minor for backward-compatible additions (old readers may load new
+#: snapshots, new fields ignored); bump the major for layout changes old
+#: readers must not attempt.  The byte-level contract is documented in
+#: ``docs/FORMAT.md`` — keep the two in sync.
+FORMAT_VERSION = (1, 0)
+
+
+def check_format_version(man: Dict, source: str = "snapshot") -> Tuple[int, int]:
+    """Validate the manifest's ``format_version`` against this reader.
+
+    A manifest without the field predates versioning and is treated as the
+    current version (the 1.0 layout is exactly the historical one).  A
+    newer **minor** version loads with a :class:`UserWarning` (additions
+    are backward compatible by contract); a newer **major** version raises
+    ``ValueError`` — the layout may have changed incompatibly and reading
+    on would risk silently wrong state."""
+    raw = man.get("format_version")
+    if raw is None:
+        return FORMAT_VERSION
+    try:
+        maj, mino = (int(x) for x in str(raw).split("."))
+    except Exception:
+        raise ValueError(
+            f"{source}: unparseable format_version {raw!r} "
+            f"(expected '<major>.<minor>')"
+        )
+    if maj > FORMAT_VERSION[0]:
+        raise ValueError(
+            f"{source}: format_version {raw} is newer than this reader "
+            f"(supports up to major {FORMAT_VERSION[0]}); refusing to "
+            "guess at an incompatible layout"
+        )
+    if maj == FORMAT_VERSION[0] and mino > FORMAT_VERSION[1]:
+        import warnings
+
+        warnings.warn(
+            f"{source}: format_version {raw} is a newer minor revision "
+            f"than this reader ({FORMAT_VERSION[0]}.{FORMAT_VERSION[1]}); "
+            "loading anyway — unknown additive fields will be ignored",
+            UserWarning, stacklevel=2,
+        )
+    return maj, mino
+
 
 def _crc(path: str) -> int:
     c = 0
@@ -117,6 +162,7 @@ def snapshot_network(
                 arrs[f"sim_{k}"] = np.array(v, copy=True)
         parts.append((part.part_id, arrs))
     manifest = dict(
+        format_version=f"{FORMAT_VERSION[0]}.{FORMAT_VERSION[1]}",
         k=net.k, n=net.n, m=net.m,
         dist=[int(x) for x in net.dist],
         edist=[int(x) for x in net.edist],
@@ -242,6 +288,7 @@ def verify_snapshot(path: str) -> Tuple[Dict, List[int]]:
     then unusable as a whole, not per-shard recoverable)."""
     with open(os.path.join(path, "manifest.json")) as f:
         man = json.load(f)
+    check_format_version(man, source=path)
     bad: List[int] = []
     for p in range(int(man["k"])):
         try:
@@ -297,6 +344,7 @@ def load_binary(
     behaviour (all shards, validated)."""
     with open(os.path.join(path, "manifest.json")) as f:
         man = json.load(f)
+    check_format_version(man, source=path)
     registry = registry_from_manifest(man)
     dist = np.asarray(man["dist"], np.int64)
     k = int(man["k"])

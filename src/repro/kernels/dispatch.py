@@ -38,10 +38,31 @@ Separately from the *kernel* backend, ``select_step_engine`` decides the
                         the exchange carries the pre-trace vector, and the
                         post-exchange kernel folds the STDP weight update
                         into the same panel pass as the gathers;
+  * ``fused_event`` / ``fused_split_event`` — the event-driven gather
+                        variants of the fused engines: the activity vector
+                        is compressed to spike ids on-device and the
+                        post-exchange kernel touches only synapse row
+                        blocks flagged by a build-time touch bitmap
+                        (kernels/event_step.py); bit-equal to the dense
+                        sweep, selected by ``gather="event"`` (Session's
+                        ``gather="auto"`` swaps on the running spike rate);
   * ``unfused``       — the three-kernel sequence (one launch per op and
                         per delay bucket, plus a separate ``stdp_update``
                         pass for plastic nets); the fallback for
                         heterogeneous / heavy-row-split partitions.
+
+Orthogonally to the engine, the *split* engines carry an **overlap mode**
+(``StepEngineChoice.overlap``, from ``SimConfig(overlap=...)``): ``"off"``
+serializes pre-exchange → collective → post-exchange (the legacy
+bit-path); ``"local"`` decomposes the post-exchange gather into a local
+pass over build-time sub-panels of own-partition synapses — issued after
+the collective so it runs *under* it — plus a remote pass on the gathered
+activity; ``"double_buffer"`` additionally defers the remote pass of step
+t to the start of step t+1 (applied before that step's slot delivery, so
+the trajectory is bit-exact vs ``"local"``), pipelining the collective
+against a whole step of compute.  Overlap needs a collective to hide
+(identity exchanges resolve to ``"off"``) and, for plastic partitions,
+three VMEM-resident global vectors (``FUSED_SPLIT_OVERLAP_PLASTIC_MAX_N_GLOBAL``).
 
 Fusion (any variant) is only sound for a homogeneous LIF partition with
 identity ELL rows; neither the *identity of the exchange* (placement of
@@ -147,10 +168,19 @@ STEP_ENGINES = (
 )
 
 
+# exchange/compute overlap modes of the split engines ('auto' is resolved
+# by the simulators before selection: 'local' on the compiled pallas
+# backend — where the collective has real latency to hide — 'off' elsewhere)
+OVERLAP_MODES = ("off", "local", "double_buffer")
+
+
 @dataclasses.dataclass(frozen=True)
 class StepEngineChoice:
     engine: str  # one of STEP_ENGINES
     reason: str
+    # resolved overlap mode (one of OVERLAP_MODES); always "off" for
+    # non-split engines — there is no collective to overlap
+    overlap: str = "off"
 
     @property
     def fused(self) -> bool:
@@ -193,6 +223,12 @@ FUSED_SPLIT_MAX_N_GLOBAL = _FUSED_VECTOR_VMEM_BUDGET // 4
 # the plastic split variant pins the exchanged pre-trace vector alongside
 # the activity vector (two n_global f32 panels), halving the budget
 FUSED_SPLIT_PLASTIC_MAX_N_GLOBAL = _FUSED_VECTOR_VMEM_BUDGET // (2 * 4)
+# the overlapped plastic remote pass pins THREE global vectors whole in
+# VMEM (remote-masked activity + full activity + pre-trace) — plastic
+# panels are never split, so both overlap passes traverse the full panels
+FUSED_SPLIT_OVERLAP_PLASTIC_MAX_N_GLOBAL = (
+    _FUSED_VECTOR_VMEM_BUDGET // (3 * 4)
+)
 
 # -- event-driven gather (fused_event / fused_split_event) ----------------
 # the per-step compressed spike-id buffer (``event_select``) rides the
@@ -304,6 +340,7 @@ def select_step_engine(
     fused: Optional[bool] = None,
     gather: str = "dense",
     event_cap_frac: float = 0.05,
+    overlap: str = "off",
 ) -> StepEngineChoice:
     """Pick one of ``STEP_ENGINES`` for a partition's step.
 
@@ -331,11 +368,27 @@ def select_step_engine(
     a compressed id buffer past its VMEM budget) falls back to the
     *dense* fused variant with the reason attached — unless
     ``fused=True`` demanded the event engine, which raises.
+
+    ``overlap`` sets the exchange/compute overlap mode of the *split*
+    engines (``"off"`` | ``"local"`` | ``"double_buffer"`` — SimConfig's
+    ``"auto"`` is resolved by the simulators before selection).  Overlap
+    needs a collective to hide, so identity exchanges resolve to
+    ``"off"``; a plastic partition whose three VMEM-resident global
+    vectors exceed ``FUSED_SPLIT_OVERLAP_PLASTIC_MAX_N_GLOBAL`` likewise
+    falls back, with the reason attached — unless ``fused=True`` demanded
+    overlap, which raises.  The resolved mode is returned as
+    ``StepEngineChoice.overlap``.
     """
     if gather not in ("dense", "event"):
         raise ValueError(
             f"select_step_engine(gather={gather!r}): expected 'dense' or "
             "'event' ('auto' is resolved by Session before selection)"
+        )
+    if overlap not in OVERLAP_MODES:
+        raise ValueError(
+            f"select_step_engine(overlap={overlap!r}): expected one of "
+            f"{OVERLAP_MODES} ('auto' is resolved by the simulators "
+            "before selection)"
         )
     if fused is False:
         return StepEngineChoice("unfused", "disabled by config")
@@ -371,11 +424,37 @@ def select_step_engine(
             raise ValueError(f"event-driven gather requested but: {eb}")
         else:
             placement += f" (event gather unavailable: {eb})"
+    overlap_resolved = "off"
+    if overlap != "off":
+        ob = None
+        if identity_exchange:
+            ob = "identity exchange has no collective to overlap"
+        elif (
+            any_plastic
+            and n_global is not None
+            and n_global > FUSED_SPLIT_OVERLAP_PLASTIC_MAX_N_GLOBAL
+        ):
+            ob = (
+                f"network too large ({n_global} > "
+                f"{FUSED_SPLIT_OVERLAP_PLASTIC_MAX_N_GLOBAL} neurons) for "
+                "the three VMEM-resident global vectors of the plastic "
+                "remote pass"
+            )
+        if ob is None:
+            overlap_resolved = overlap
+            placement += f", {overlap} exchange/compute overlap"
+        elif fused is True:
+            raise ValueError(f"overlap={overlap!r} requested but: {ob}")
+        else:
+            placement += f" (overlap unavailable: {ob})"
     if fused is True:
-        return StepEngineChoice(target, f"forced by config ({placement})")
+        return StepEngineChoice(
+            target, f"forced by config ({placement})", overlap_resolved
+        )
     if backend in ("pallas", "pallas_interpret"):
         return StepEngineChoice(
-            target, f"auto: {backend} backend ({placement})"
+            target, f"auto: {backend} backend ({placement})",
+            overlap_resolved,
         )
     return StepEngineChoice(
         "unfused",

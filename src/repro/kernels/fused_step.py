@@ -636,6 +636,209 @@ def fused_post_exchange_pallas(
     return new_ring[:D, :n_p]
 
 
+# -- overlapped split engine: local / remote pass wrappers ----------------
+#
+# The overlapped engines (SimConfig(overlap=...)) decompose the
+# post-exchange gather into a *local pass* over build-time sub-panels of
+# own-partition synapses — runnable before (and concurrently with) the
+# exchange collective — and a *remote pass* adding the gathered remote
+# contributions afterwards.  Both passes are the same fused
+# rotate+gather kernel over different panel slices, so they delegate to
+# ``fused_post_exchange_pallas``; only the plastic remote pass (below)
+# needs a new kernel body (two activity vectors: remote-masked for the
+# ring update, full for the STDP terms).
+
+
+def fused_post_exchange_local_pallas(
+    act_local: jnp.ndarray,  # (n_p,) own-partition activity
+    ring: jnp.ndarray,  # (D, n_p) ring buffer, slot NOT yet cleared
+    clear_mask: jnp.ndarray,  # (D,) 0 at the delivered slot, 1 elsewhere
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    cols: Sequence[jnp.ndarray],  # per bucket (R, K_l) int32 LOCAL ids
+    weights: Sequence[jnp.ndarray],  # per bucket (R, K_l)
+    *,
+    block_r: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Local pass of the overlapped split step: ring rotate + the gathers
+    over the local sub-panels, fed by the partition's own (n_p,) spike
+    vector — no collective input, so the driver issues the exchange first
+    and this ``pallas_call`` runs under it."""
+    return fused_post_exchange_pallas(
+        act_local, ring, clear_mask, write_onehot, cols, weights,
+        block_r=block_r, interpret=interpret,
+    )
+
+
+def fused_post_exchange_remote_pallas(
+    act: jnp.ndarray,  # (n,) exchanged global activity
+    ring: jnp.ndarray,  # (D, n_p) ring ALREADY rotated by the local pass
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    cols: Sequence[jnp.ndarray],  # per bucket (R, K_r) int32 remote ids
+    weights: Sequence[jnp.ndarray],  # per bucket (R, K_r)
+    *,
+    block_r: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Remote pass of the overlapped split step: accumulate the gathered
+    remote contributions onto the local pass's ring.  The delivered slot
+    was already cleared there, so the clear mask degenerates to ones
+    (``x * 1.0`` is bitwise identity)."""
+    ones = jnp.ones((ring.shape[0],), jnp.float32)
+    return fused_post_exchange_pallas(
+        act, ring, ones, write_onehot, cols, weights,
+        block_r=block_r, interpret=interpret,
+    )
+
+
+def _make_post_remote_plastic_kernel(nd: int, stdp):
+    a_plus, a_minus, w_min, w_max = stdp
+
+    def kernel(*refs):
+        (actr_ref, actf_ref, pre_ref, ring_ref, oh_ref,
+         post_t_ref, post_s_ref) = refs[:7]
+        cols_refs = refs[7: 7 + nd]
+        w_refs = refs[7 + nd: 7 + 2 * nd]
+        pl_refs = refs[7 + 2 * nd: 7 + 3 * nd]
+        ring_out = refs[7 + 3 * nd]
+        w_out_refs = refs[8 + 3 * nd: 8 + 4 * nd]
+        act_r = actr_ref[...]  # (n,) remote-masked activity, VMEM-resident
+        act_f = actf_ref[...]  # (n,) full activity (STDP pre-spikes)
+        pre_t_vec = pre_ref[...]  # (n,) exchanged pre-trace
+        post_t = post_t_ref[...]  # (block_r, 1)
+        post_s = post_s_ref[...]  # (block_r, 1)
+        acc = ring_ref[...]  # already rotated by the local pass: no clear
+        for i in range(nd):
+            cols = cols_refs[i][...]  # (block_r, K_d)
+            w = w_refs[i][...]
+            # ring update from the REMOTE contributions only...
+            vals_r = jnp.take(act_r, cols, axis=0)
+            cur = jnp.sum(w.astype(jnp.float32) * vals_r, axis=1)
+            acc += oh_ref[i, :][:, None] * cur[None, :]
+            # ...while STDP sees the full exchanged activity (the update
+            # is elementwise per slot, so it runs exactly once, here)
+            vals_f = jnp.take(act_f, cols, axis=0)
+            pre_t = jnp.take(pre_t_vec, cols, axis=0)
+            dw = a_plus * pre_t * post_s - a_minus * post_t * vals_f
+            w_out_refs[i][...] = jnp.where(
+                pl_refs[i][...] > 0, jnp.clip(w + dw, w_min, w_max), w
+            )
+        ring_out[...] = acc
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nd", "block_r", "interpret", "stdp")
+)
+def _post_remote_plastic_call(
+    act_r, act_f, pre_trace, ring, onehot, post_t, post_s, *panels,
+    nd, block_r, interpret, stdp,
+):
+    cols = panels[:nd]
+    weights = panels[nd: 2 * nd]
+    plastic = panels[2 * nd:]
+    n_act = act_r.shape[0]
+    D_pad, R = ring.shape
+    grid = (R // block_r,)
+    nd_, D = onehot.shape
+
+    def panel_spec(p):
+        return pl.BlockSpec((block_r, p.shape[1]), lambda r: (r, 0))
+
+    col_spec = pl.BlockSpec((block_r, 1), lambda r: (r, 0))
+    ring_spec = pl.BlockSpec((D_pad, block_r), lambda r: (0, r))
+    outs = pl.pallas_call(
+        _make_post_remote_plastic_kernel(nd, stdp),
+        grid=grid,
+        in_specs=(
+            [pl.BlockSpec((n_act,), lambda r: (0,))] * 3  # act_r/act_f/pre
+            + [ring_spec]
+            + [pl.BlockSpec((nd_, D), lambda r: (0, 0))]
+            + [col_spec, col_spec]  # post-trace / post-spike row blocks
+            + [panel_spec(c) for c in cols]
+            + [panel_spec(w) for w in weights]
+            + [panel_spec(p) for p in plastic]
+        ),
+        out_specs=[ring_spec] + [panel_spec(w) for w in weights],
+        out_shape=(
+            [jax.ShapeDtypeStruct((D_pad, R), jnp.float32)]
+            + [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in weights]
+        ),
+        interpret=interpret,
+    )(act_r, act_f, pre_trace, ring, onehot, post_t, post_s,
+      *cols, *weights, *plastic)
+    return outs[0], outs[1:]
+
+
+def fused_post_exchange_remote_plastic_pallas(
+    act_remote: jnp.ndarray,  # (n,) exchanged activity, own slice zeroed
+    act: jnp.ndarray,  # (n,) full exchanged activity (STDP pre-spikes)
+    pre_trace: jnp.ndarray,  # (n,) exchanged global pre-synaptic traces
+    ring: jnp.ndarray,  # (D, n_p) ring ALREADY rotated by the local pass
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    post_trace: jnp.ndarray,  # (n_p,) local post-traces (already updated)
+    post_spike: jnp.ndarray,  # (n_p,) local spikes this step
+    cols: Sequence[jnp.ndarray],  # per bucket (R, K_d) int32 global FULL
+    weights: Sequence[jnp.ndarray],  # per bucket (R, K_d)
+    plastic: Sequence[jnp.ndarray],  # per bucket (R, K_d) 0/1 mask
+    *,
+    stdp: dict,  # a_plus / a_minus / w_min / w_max
+    block_r: int = 256,
+    interpret: bool = False,
+):
+    """Plastic remote pass of the overlapped split step: remote-only ring
+    accumulate + the full STDP weight update in one pass over the (full)
+    synapse panels.  Pins THREE global vectors whole in VMEM (remote-masked
+    activity, full activity, pre-trace) — the tighter
+    ``dispatch.FUSED_SPLIT_OVERLAP_PLASTIC_MAX_N_GLOBAL`` budget gates
+    eligibility.  Returns ``(new_ring, new_weights)``.
+    """
+    nd = len(cols)
+    assert nd >= 1, "post-exchange step needs at least one delay bucket"
+    assert len(weights) == nd and len(plastic) == nd
+    assert write_onehot.shape[0] == nd, (write_onehot.shape, nd)
+    assert act_remote.shape == act.shape == pre_trace.shape, (
+        act_remote.shape, act.shape, pre_trace.shape
+    )
+    D, n_p = ring.shape
+    R = cols[0].shape[0]
+    assert all(c.shape[0] == R for c in cols), (
+        "post-exchange step needs a common R across delay buckets: "
+        f"{[c.shape for c in cols]}"
+    )
+    assert R >= n_p, (R, n_p)
+
+    # same padding scheme as the serialized plastic post kernel
+    n_act = _align_up(max(act.shape[0], _LANES), _LANES)
+    pad_n = n_act - act.shape[0]
+    actr_p = jnp.pad(act_remote.astype(jnp.float32), (0, pad_n))
+    actf_p = jnp.pad(act.astype(jnp.float32), (0, pad_n))
+    pre_p = jnp.pad(pre_trace.astype(jnp.float32), (0, pad_n))
+    D_pad = _align_up(max(D, 8), 8)
+    ring_p = jnp.pad(ring, ((0, D_pad - D), (0, R - n_p)))
+    oh_p = jnp.pad(
+        write_onehot.astype(jnp.float32), ((0, 0), (0, D_pad - D))
+    )
+    post_t = jnp.pad(post_trace, (0, R - n_p))[:, None]
+    post_s = jnp.pad(post_spike, (0, R - n_p))[:, None]
+
+    bytes_per_row = sum(
+        c.shape[1] * (c.dtype.itemsize + 3 * w.dtype.itemsize)
+        for c, w in zip(cols, weights)
+    ) + 2 * D_pad * 4 + 8
+    max_rows = max(_PANEL_VMEM_BUDGET // max(bytes_per_row, 1), 1)
+    block_r = pick_block(R, min(block_r, max_rows), interpret=interpret,
+                         what="fused_post_exchange_remote_plastic rows")
+    new_ring, new_w = _post_remote_plastic_call(
+        actr_p, actf_p, pre_p, ring_p, oh_p, post_t, post_s,
+        *cols, *weights, *plastic,
+        nd=nd, block_r=block_r, interpret=interpret,
+        stdp=_stdp_tuple(stdp),
+    )
+    return new_ring[:D, :n_p], list(new_w)
+
+
 # -- split engine: plastic post-exchange kernel ---------------------------
 
 

@@ -24,8 +24,11 @@ from .keystream import keystream_jnp, keystream_pallas
 from .fused_step import (
     fused_lif_step_pallas,
     fused_plastic_step_pallas,
+    fused_post_exchange_local_pallas,
     fused_post_exchange_pallas,
     fused_post_exchange_plastic_pallas,
+    fused_post_exchange_remote_pallas,
+    fused_post_exchange_remote_plastic_pallas,
     fused_pre_exchange_pallas,
 )
 from .lif_step import lif_step_pallas
@@ -250,6 +253,97 @@ def fused_post_exchange(
     return lookup("fused_post_exchange", backend)(
         act, ring, clear_mask, write_onehot, tuple(cols), tuple(weights),
         **kw
+    )
+
+
+# -- overlapped split engine: local / remote gather passes ----------------
+
+@register("fused_post_exchange_local", "ref")
+def _fused_post_exchange_local_ref(
+    act_local, ring, clear_mask, write_onehot, cols, weights, **kw
+):
+    return ref.fused_post_exchange_local_ref(
+        act_local, ring, clear_mask, write_onehot, cols, weights
+    )
+
+
+_register_pallas("fused_post_exchange_local")(fused_post_exchange_local_pallas)
+
+
+def fused_post_exchange_local(
+    act_local, ring, clear_mask, write_onehot, cols, weights, *,
+    backend: Optional[str] = None, **kw
+):
+    """Local pass of the overlapped split step: ring rotate + the gathers
+    over the build-time *local* sub-panels, fed by the partition's own
+    ``(n_p,)`` activity — no collective input, so the caller issues the
+    exchange first and this pass runs concurrently with it.  Returns the
+    partially updated ``(D, n_p)`` ring (complete it with
+    ``fused_post_exchange_remote``)."""
+    return lookup("fused_post_exchange_local", backend)(
+        act_local, ring, clear_mask, write_onehot, tuple(cols),
+        tuple(weights), **kw
+    )
+
+
+@register("fused_post_exchange_remote", "ref")
+def _fused_post_exchange_remote_ref(
+    act, ring, write_onehot, cols, weights, **kw
+):
+    return ref.fused_post_exchange_remote_ref(
+        act, ring, write_onehot, cols, weights
+    )
+
+
+_register_pallas("fused_post_exchange_remote")(
+    fused_post_exchange_remote_pallas
+)
+
+
+def fused_post_exchange_remote(
+    act, ring, write_onehot, cols, weights, *,
+    backend: Optional[str] = None, **kw
+):
+    """Remote pass of the overlapped split step: accumulate the gathered
+    remote contributions (the *remote* sub-panels reference only
+    off-partition presynaptic ids) onto the local pass's already-rotated
+    ring.  Returns the completed ``(D, n_p)`` ring."""
+    return lookup("fused_post_exchange_remote", backend)(
+        act, ring, write_onehot, tuple(cols), tuple(weights), **kw
+    )
+
+
+@register("fused_post_exchange_remote_plastic", "ref")
+def _fused_post_exchange_remote_plastic_ref(
+    act_remote, act, pre_trace, ring, write_onehot, post_trace,
+    post_spike, cols, weights, plastic, *, stdp, **kw
+):
+    return ref.fused_post_exchange_remote_plastic_ref(
+        act_remote, act, pre_trace, ring, write_onehot, post_trace,
+        post_spike, cols, weights, plastic, stdp=_stdp_args(stdp),
+    )
+
+
+_register_pallas("fused_post_exchange_remote_plastic")(
+    fused_post_exchange_remote_plastic_pallas
+)
+
+
+def fused_post_exchange_remote_plastic(
+    act_remote, act, pre_trace, ring, write_onehot, post_trace,
+    post_spike, cols, weights, plastic, *, stdp,
+    backend: Optional[str] = None, **kw
+):
+    """Plastic remote pass of the overlapped split step: remote-only ring
+    accumulate (``act_remote`` is the exchanged activity with the own
+    slice zeroed — plastic panels are never split, their weights are
+    state) + the full STDP weight update from the *full* activity and
+    pre-trace vectors, one pass over the panels.  Returns
+    ``(new_ring, new_weights)``."""
+    return lookup("fused_post_exchange_remote_plastic", backend)(
+        act_remote, act, pre_trace, ring, write_onehot, post_trace,
+        post_spike, tuple(cols), tuple(weights), tuple(plastic),
+        stdp=stdp, **kw
     )
 
 

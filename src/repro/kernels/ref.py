@@ -208,6 +208,86 @@ def event_post_exchange_ref(
     return new_ring
 
 
+def fused_post_exchange_local_ref(
+    act_local: jnp.ndarray,  # (n_p,) own-partition activity (pre-collective)
+    ring: jnp.ndarray,  # (D, n_p) future-current ring buffer (uncleared)
+    clear_mask: jnp.ndarray,  # (D,) 0 at the just-delivered slot, 1 else
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    cols,  # per delay bucket (R, K_l) int32, LOCAL ids (< n_p)
+    weights,  # per delay bucket (R, K_l)
+) -> jnp.ndarray:
+    """Oracle for the *local pass* of the overlapped split step: the ring
+    rotate plus the gather restricted to the build-time local sub-panels
+    (synapses whose presynaptic neuron lives on this partition).  The
+    activity is the partition's own spike vector — available before any
+    collective, so this pass runs concurrently with the spike exchange.
+    Arithmetic is the plain post-exchange gather over the sub-panels.
+    """
+    return fused_post_exchange_ref(
+        act_local, ring, clear_mask, write_onehot, cols, weights
+    )
+
+
+def fused_post_exchange_remote_ref(
+    act: jnp.ndarray,  # (n,) exchanged global activity
+    ring: jnp.ndarray,  # (D, n_p) ring ALREADY rotated by the local pass
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    cols,  # per delay bucket (R, K_r) int32, global ids (remote only)
+    weights,  # per delay bucket (R, K_r)
+) -> jnp.ndarray:
+    """Oracle for the *remote pass* of the overlapped split step: add the
+    gathered remote contributions on top of the local pass's ring.  No
+    clear — the local pass already rotated the delivered slot; the remote
+    sub-panels reference only off-partition presynaptic ids, so the full
+    exchanged vector can be gathered directly.
+    """
+    ones = jnp.ones((ring.shape[0],), jnp.float32)
+    return fused_post_exchange_ref(
+        act, ring, ones, write_onehot, cols, weights
+    )
+
+
+def fused_post_exchange_remote_plastic_ref(
+    act_remote: jnp.ndarray,  # (n,) exchanged activity, own slice zeroed
+    act: jnp.ndarray,  # (n,) full exchanged activity (for STDP)
+    pre_trace: jnp.ndarray,  # (n,) exchanged global pre-synaptic traces
+    ring: jnp.ndarray,  # (D, n_p) ring ALREADY rotated by the local pass
+    write_onehot: jnp.ndarray,  # (nd, D) one-hot of (t + d) % D per bucket
+    post_trace: jnp.ndarray,  # (n_p,) local post-synaptic traces (updated)
+    post_spike: jnp.ndarray,  # (n_p,) local spikes this step
+    cols,  # per delay bucket (R, K_d) int32, global ids (FULL panels)
+    weights,  # per delay bucket (R, K_d)
+    plastic,  # per delay bucket (R, K_d) 0/1 mask of STDP slots
+    *,
+    stdp: Dict[str, float],  # a_plus / a_minus / w_min / w_max
+):
+    """Oracle for the plastic *remote pass* of the overlapped split step.
+
+    Plastic panels are never split (the weights inside them are mutable
+    state), so both passes traverse the full panels: the local pass
+    gathers an (n,)-embedded copy of the partition's own activity, and
+    this remote pass gathers ``act_remote`` (the exchanged vector with the
+    own-partition slice zeroed) for the ring update while the STDP weight
+    update — elementwise per synapse slot, hence not decomposable across
+    passes — applies here once from the *full* activity and pre-trace
+    vectors, exactly as in ``fused_post_exchange_plastic_ref``.  Returns
+    ``(new_ring, new_weights)``.
+    """
+    n_p = ring.shape[1]
+    new_ring = ring
+    new_weights = []
+    for i, (c, w, pm) in enumerate(zip(cols, weights, plastic)):
+        cur = spike_gather_ref(act_remote, c, w)[:n_p]
+        new_ring = new_ring + write_onehot[i][:, None] * cur[None, :]
+        pad_r = c.shape[0] - n_p
+        post_t = jnp.pad(post_trace, (0, pad_r)) if pad_r else post_trace
+        post_s = jnp.pad(post_spike, (0, pad_r)) if pad_r else post_spike
+        new_weights.append(
+            stdp_update_ref(w, pm, c, pre_trace, act, post_t, post_s, **stdp)
+        )
+    return new_ring, new_weights
+
+
 def fused_step_ref(
     v: jnp.ndarray,  # (n_p,)
     refrac: jnp.ndarray,  # (n_p,)

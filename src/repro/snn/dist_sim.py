@@ -23,6 +23,17 @@ the STDP weight update into the same pass over the synapse panels (each
 ELL panel crosses VMEM once per step, not twice).  Others fall back to
 the unfused three-kernel sequence.
 
+On top of the split engines, ``SimConfig(overlap=...)`` decouples the
+gather from the collective: the post-exchange pass splits into a **local
+pass** over the own-partition columns (data-independent of the
+collective, so it runs concurrently with the all-gather — the collective
+is issued first in program order and XLA's latency hiding does the rest)
+and a **remote pass** over the gathered remote spikes.
+``overlap='double_buffer'`` additionally defers step t's remote pass to
+the top of step t+1, pipelining the collective against a full step of
+compute; the per-slot add sequence is unchanged, so ``double_buffer`` is
+bit-exact against ``overlap='local'`` by construction.
+
 Requires uniform partitions (``to_dcsr(..., uniform=True)``): SPMD needs
 equal shard shapes, so deficient partitions are padded with inert dummy
 neurons at build time.  With uniform blocks, partition-contiguous global ids
@@ -141,6 +152,56 @@ def stack_partitions(net: DCSRNetwork, cfg: SimConfig) -> StackedNet:
     )
 
 
+def split_overlap_panels(
+    s: StackedNet, align_k: int
+) -> Tuple[List[np.ndarray], List[np.ndarray],
+           List[np.ndarray], List[np.ndarray]]:
+    """Split each stacked synapse panel by column ownership for the
+    overlap engines (non-plastic only — plastic weights are state and the
+    panels stay whole).
+
+    Local panels hold LOCAL column ids (``global - p*n_p``) so the local
+    gather reads the own ``(n_p,)`` spike vector before any collective;
+    remote panels keep global ids and reference only remote partitions,
+    so the full exchanged vector can be gathered directly (padding slots
+    point at col 0 with weight 0).  Packing is a stable argsort — the
+    surviving entries keep their original panel order — with K padded to
+    the max per-row count across rows and partitions, aligned up to
+    ``align_k`` (uniform shapes: SPMD shards must match).
+
+    Returns ``(cols_local, weights_local, cols_remote, weights_remote)``,
+    each a per-delay list of ``(k, R, K_out)`` arrays.
+    """
+    align = lambda x: max(((x + align_k - 1) // align_k) * align_k, align_k)
+    k, n_p = s.k, s.n_p
+    own_lo = (np.arange(k) * n_p)[:, None, None]
+    cols_l, w_l, cols_r, w_r = [], [], [], []
+    for di in range(len(s.delays)):
+        c = np.asarray(s.cols[di])
+        w = np.asarray(s.weights[di])
+        v = np.asarray(s.valid[di]) > 0
+        is_local = v & (c >= own_lo) & (c < own_lo + n_p)
+        for mask, out_c, out_w, localize in (
+            (is_local, cols_l, w_l, True),
+            (v & ~is_local, cols_r, w_r, False),
+        ):
+            order = np.argsort(~mask, axis=2, kind="stable")
+            cs = np.take_along_axis(c, order, axis=2)
+            ws = np.take_along_axis(w, order, axis=2)
+            ms = np.take_along_axis(mask, order, axis=2)
+            cnt = mask.sum(axis=2)  # (k, R)
+            k_out = align(int(cnt.max()) if cnt.size else 0)
+            if k_out > cs.shape[2]:
+                pad = ((0, 0), (0, 0), (0, k_out - cs.shape[2]))
+                cs, ws, ms = (np.pad(a, pad) for a in (cs, ws, ms))
+            cs, ws, ms = cs[:, :, :k_out], ws[:, :, :k_out], ms[:, :, :k_out]
+            if localize:
+                cs = cs - own_lo
+            out_c.append(np.where(ms, cs, 0).astype(np.int32))
+            out_w.append(np.where(ms, ws, 0.0).astype(np.float32))
+    return cols_l, w_l, cols_r, w_r
+
+
 class DistSimulator:
     """k partitions over k devices (mesh axis 'parts').
 
@@ -189,6 +250,15 @@ class DistSimulator:
             max(int(cfg.index_cap_frac * s.n_p), 8)
             if self.exchange == "index" else 0
         )
+        # overlap 'auto' resolves to the concurrent local/remote gather
+        # split only where it can pay off: the compiled pallas backend
+        # (interpreted backends execute serially regardless, and keeping
+        # them on the decomposition-free path preserves this container's
+        # bit-exact baselines); explicit modes are honored everywhere —
+        # the selector still vets eligibility
+        self.overlap = cfg.overlap
+        if self.overlap == "auto":
+            self.overlap = "local" if self.backend == "pallas" else "off"
         self.n_global = k * s.n_p
         self.models_present = _models_present(net)
         self._base_key = jax.random.PRNGKey(cfg.seed)
@@ -209,12 +279,19 @@ class DistSimulator:
             n_global=k * s.n_p,
             fused=cfg.fused,
             event_cap_frac=cfg.event_cap_frac,
+            overlap=self.overlap,
         )
         self.engine_choice = select_step_engine(
             gather="dense" if cfg.gather == "auto" else cfg.gather,
             **sel_kw,
         )
         self.event_capable = _probe_event_capable(**sel_kw)
+        # the non-plastic overlap engines gather build-time ownership
+        # sub-panels; plastic panels stay whole (weights are state)
+        self._overlap_panels = None
+        if (self.engine_choice.overlap != "off"
+                and not self.engine_choice.plastic):
+            self._overlap_panels = split_overlap_panels(s, cfg.align_k)
         # static schedule of the event engines: one row-block geometry for
         # the whole stack (uniform partitions share R and the K widths) and
         # per-partition touch bitmaps stacked on the parts axis — the local
@@ -333,8 +410,45 @@ class DistSimulator:
             record_raster=self.cfg.record_raster,
             record_v=self.cfg.record_v,
             engine_choice=self.engine_choice,
+            overlap_ctx=(
+                self._overlap_ctx()
+                if self.engine_choice.overlap != "off" else None
+            ),
         )
         return core, cap
+
+    def _overlap_ctx(self):
+        """Partition-geometry closures for the overlap engines (run inside
+        shard_map, where ``axis_index('parts')`` is live)."""
+        s = self.stacked
+        n_p, n = s.n_p, self.n_global
+        cap = self.index_cap
+        if self.exchange == "index":
+            def local(spikes):
+                # mirror the collective's cap truncation so the local
+                # pass delivers exactly the activity the exchange would
+                # have scattered for this partition
+                idx = jnp.nonzero(spikes, size=cap, fill_value=-1)[0]
+                return jnp.zeros((n_p,), jnp.float32).at[
+                    jnp.where(idx >= 0, idx, n_p)
+                ].set(1.0, mode="drop")
+        else:
+            def local(spikes):
+                return spikes
+
+        def embed(v):
+            p = jax.lax.axis_index("parts")
+            return jax.lax.dynamic_update_slice(
+                jnp.zeros((n,), v.dtype), v, (p * n_p,)
+            )
+
+        def mask_remote(act):
+            p = jax.lax.axis_index("parts")
+            return jax.lax.dynamic_update_slice(
+                act, jnp.zeros((n_p,), act.dtype), (p * n_p,)
+            )
+
+        return dict(local=local, embed=embed, mask_remote=mask_remote)
 
     def lower(self, steps: int):
         """Dry-run path: lower+compile the distributed step without
@@ -373,7 +487,8 @@ class DistSimulator:
         from .simulator import PartitionDeviceData
 
         def local_run(vtx_model, noise_ids, cols, valid, plastic, touch,
-                      carry):
+                      opan, carry):
+            nd = len(s.delays)
             local_carry = dict(
                 t=carry["t"],
                 vtx_state=carry["vtx_state"][0],
@@ -397,6 +512,15 @@ class DistSimulator:
                 ],
                 identity_rows=tuple(True for _ in s.delays),
                 any_plastic=s.any_plastic,
+                **(
+                    dict(
+                        cols_local=[a[0] for a in opan[0 * nd:1 * nd]],
+                        weights_local=[a[0] for a in opan[1 * nd:2 * nd]],
+                        cols_remote=[a[0] for a in opan[2 * nd:3 * nd]],
+                        weights_remote=[a[0] for a in opan[3 * nd:4 * nd]],
+                    )
+                    if opan else {}
+                ),
             )
             plan = None
             if self._event_touch is not None:
@@ -405,7 +529,15 @@ class DistSimulator:
                     [tc[0] for tc in touch],
                 )
             step, _ = self._build_step(dev, noise_ids[0], event_plan=plan)
+            if self.engine_choice.overlap == "double_buffer":
+                # the deferred remote contribution lives ONLY inside the
+                # scan carry: seeded empty here, flushed right after, so
+                # the external carry pytree (checkpoints, reshard) never
+                # sees it and chunk boundaries lose no spikes
+                local_carry["_pending"] = step.pending_init()
             final, outs = jax.lax.scan(step, local_carry, None, length=steps)
+            if self.engine_choice.overlap == "double_buffer":
+                final = step.pending_flush(final)
             new_carry = dict(
                 t=final["t"],
                 vtx_state=final["vtx_state"][None],
@@ -438,6 +570,10 @@ class DistSimulator:
                     len(self._event_touch)
                     if self._event_touch is not None else 0
                 ),
+                [P("parts")] * (
+                    4 * len(s.delays)
+                    if self._overlap_panels is not None else 0
+                ),
                 specs,
             ),
             out_specs=(out_carry_specs, out_specs),
@@ -448,10 +584,15 @@ class DistSimulator:
         noise_ids = np.stack(
             [p.global_ids.astype(np.int32) for p in self.net.parts]
         )
+        opan = (
+            [a for group in self._overlap_panels for a in group]
+            if self._overlap_panels is not None else []
+        )
         args = (s.vtx_model, noise_ids, list(s.cols), list(s.valid),
                 list(s.plastic),
                 list(self._event_touch)
-                if self._event_touch is not None else [])
+                if self._event_touch is not None else [],
+                opan)
         return shmapped, args
 
     # -- dCSR sync ---------------------------------------------------------

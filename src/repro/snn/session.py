@@ -476,6 +476,7 @@ class Session:
             engine=self.engine_kind, t=self.t,
             step_engine=self.engine_choice.engine,
             gather=self._gather_mode,
+            overlap=self.engine_choice.overlap,
         )
         if isinstance(self._current_engine, _SingleEngine):
             d["backend"] = self._current_engine.sim.backend

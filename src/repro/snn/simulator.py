@@ -42,6 +42,18 @@ from .neurons import (
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
+    """User-facing simulation knobs.
+
+    The engine-affecting knobs (``backend``, ``fused``, ``exchange``,
+    ``gather``, ``overlap``) feed :func:`kernels.dispatch.select_step_engine`,
+    which picks one of the step engines — ``fused`` / ``fused_plastic``
+    (identity exchange, one kernel), ``fused_split`` /
+    ``fused_split_plastic`` (split at the exchange), ``fused_event`` /
+    ``fused_split_event`` (event-driven gather), or ``unfused`` — plus an
+    orthogonal exchange/compute ``overlap`` mode for the split engines.
+    The full eligibility table and every ``auto`` resolution rule live in
+    ``docs/ARCHITECTURE.md``."""
+
     backend: Optional[str] = None  # None=auto, 'ref', 'pallas_interpret', 'pallas'
     fused: Optional[bool] = None  # None=auto, True=require fused step, False=off
     align_k: int = 128
@@ -63,6 +75,16 @@ class SimConfig:
     # kernels.dispatch.EVENT_ACTIVITY_THRESHOLD (and back when it rises)
     gather: str = "auto"
     event_cap_frac: float = 0.05  # compressed spike-id capacity, frac of n
+    # 'auto' | 'off' | 'local' | 'double_buffer': exchange/compute overlap
+    # for the split engines (k>1 — an identity exchange has no collective
+    # to hide).  'local' splits the post-exchange gather into an
+    # own-partition pass that is data-independent of the collective (so
+    # the all-gather runs concurrently with it) plus a remote pass behind
+    # it; 'double_buffer' additionally defers the remote pass of step t to
+    # the top of step t+1 so the collective pipelines against a full
+    # step's compute.  'auto' resolves to 'local' on the compiled pallas
+    # backend and 'off' elsewhere (interpreted/ref backends gain nothing)
+    overlap: str = "auto"
     seed: int = 42
 
     def __post_init__(self):
@@ -101,6 +123,15 @@ class SimConfig:
                 "compressed spike-id capacity is a fraction of the "
                 "activity-vector width and must lie in (0, 1]"
             )
+        if self.overlap not in ("auto", "off", "local", "double_buffer"):
+            raise ValueError(
+                f"SimConfig(overlap={self.overlap!r}): expected 'auto' "
+                "('local' on the compiled pallas backend, 'off' "
+                "elsewhere), 'off' (serialized exchange -> gather), "
+                "'local' (own-partition gather concurrent with the "
+                "collective) or 'double_buffer' (remote gather of step t "
+                "pipelined against the collective of step t+1)"
+            )
         if self.align_k < 1 or self.align_rows < 1:
             raise ValueError(
                 f"SimConfig(align_k={self.align_k}, "
@@ -124,6 +155,15 @@ class PartitionDeviceData:
     row_maps: List[jnp.ndarray]
     identity_rows: Tuple[bool, ...]
     any_plastic: bool
+    # overlap sub-panels (non-plastic split engines only; None otherwise):
+    # per bucket, the panel columns split by ownership.  Local panels hold
+    # LOCAL ids (col - row_start) gathered from the own (n_p,) spike
+    # vector before any collective; remote panels hold global ids that
+    # reference only remote partitions (padding col 0 carries weight 0)
+    cols_local: Optional[List[jnp.ndarray]] = None
+    weights_local: Optional[List[jnp.ndarray]] = None
+    cols_remote: Optional[List[jnp.ndarray]] = None
+    weights_remote: Optional[List[jnp.ndarray]] = None
 
 
 def partition_device_data(
@@ -199,6 +239,8 @@ def make_core_step(
     event_plan: Optional[EventPlan] = None,
     identity_exchange: Optional[bool] = None,
     engine_choice: Optional[StepEngineChoice] = None,
+    overlap: str = "off",
+    overlap_ctx: Optional[Dict[str, Callable]] = None,
 ) -> Callable:
     """The shared per-partition step; ``exchange`` injects the collective.
 
@@ -215,9 +257,22 @@ def make_core_step(
 
     The step engine (fused single-kernel vs fused-split-at-the-exchange —
     each with a ``*_plastic`` variant that folds the STDP pass into the
-    same panel traversal — vs unfused three-kernel) is chosen by
-    ``kernels.dispatch.select_step_engine``; the choice is attached to the
-    returned step as ``step.engine_choice``."""
+    same panel traversal — vs the event-gather variants vs unfused
+    three-kernel) is chosen by ``kernels.dispatch.select_step_engine``;
+    the choice is attached to the returned step as ``step.engine_choice``.
+
+    ``overlap_ctx`` (required whenever the resolved overlap mode is not
+    ``'off'``) supplies the three partition-geometry closures the overlap
+    engines need — ``local(spikes) -> (n_p,)`` the own-partition activity
+    slice *as the collective would deliver it* (a compressed index
+    exchange truncates at its cap, so this is not always ``spikes``
+    itself), ``embed(v) -> (n,)`` the own slice placed into a zeroed
+    global vector, and ``mask_remote(act) -> (n,)`` the exchanged vector
+    with the own slice zeroed.  With ``overlap='double_buffer'`` the
+    returned step carries a ``'_pending'`` entry holding step t's deferred
+    remote contribution; callers add ``step.pending_init()`` to the carry
+    before the scan and must call ``step.pending_flush(carry)`` after it
+    so no spikes are lost at the scan boundary."""
     D = d_ring
     n_p = dev.n_p
     any_plastic = dev.any_plastic and stdp_params is not None
@@ -244,7 +299,16 @@ def make_core_step(
             fused=fused,
             gather="dense" if gather == "auto" else gather,
             event_cap_frac=event_cap_frac,
+            overlap=overlap,
         )
+    if choice.overlap != "off" and overlap_ctx is None:
+        raise ValueError(
+            f"engine {choice.engine!r} resolved overlap="
+            f"{choice.overlap!r} but no overlap_ctx was provided; the "
+            "distributed driver must supply the local/embed/mask_remote "
+            "partition-geometry closures"
+        )
+    overlap_on = choice.overlap in ("local", "double_buffer")
     if choice.event and event_plan is None:
         event_plan = EventPlan.build(
             dev.cols, dev.valid, n_global, D,
@@ -260,18 +324,86 @@ def make_core_step(
     else:
         neuron_step = make_neuron_step(registry, models_present, dt, backend)
 
+    overlap_plastic = choice.engine == "fused_split_plastic"
+
+    def _pending_init() -> Dict[str, jnp.ndarray]:
+        """Zeroed deferred-remote-contribution record for double_buffer.
+
+        ``valid`` gates the apply: a zero-pending apply is NOT a bitwise
+        no-op (w * 0.0 = -0.0 for negative w; +0.0 + -0.0 = +0.0), so the
+        applied arrays are selected with ``jnp.where`` instead of relying
+        on zero activity being inert."""
+        pend = dict(
+            valid=jnp.zeros((), jnp.int32),
+            onehot=jnp.zeros((len(dev.delays), D), jnp.float32),
+            act=jnp.zeros((n_global,), jnp.float32),
+        )
+        if overlap_plastic:
+            pend.update(
+                pre_trace=jnp.zeros((n_global,), jnp.float32),
+                post_trace=jnp.zeros((n_p,), jnp.float32),
+                post_spike=jnp.zeros((n_p,), jnp.float32),
+            )
+        return pend
+
+    def _apply_pending(ring, weights, pend):
+        """Apply step t-1's deferred remote gather to (ring, weights).
+
+        Runs at the top of step t BEFORE the slot delivery/clear, so a
+        delay-1 remote contribution emitted at t-1 still lands in the
+        slot delivered at t — the per-slot add sequence is identical to
+        overlap='local', hence bit-exact by construction."""
+        valid = pend["valid"] > 0
+        if overlap_plastic:
+            act_remote = overlap_ctx["mask_remote"](pend["act"])
+            new_ring, new_w = ops.fused_post_exchange_remote_plastic(
+                act_remote, pend["act"], pend["pre_trace"], ring,
+                pend["onehot"], pend["post_trace"], pend["post_spike"],
+                dev.cols, weights, dev.plastic,
+                stdp=stdp_params, backend=backend,
+            )
+            ring = jnp.where(valid, new_ring, ring)
+            weights = tuple(
+                jnp.where(valid, nw, w) for nw, w in zip(new_w, weights)
+            )
+        elif choice.event:
+            act_remote = overlap_ctx["mask_remote"](pend["act"])
+            sel, flags = event_plan.select(act_remote)
+            new_ring = ops.event_post_exchange(
+                act_remote, ring, jnp.ones((D,), jnp.float32),
+                pend["onehot"], sel, flags, dev.cols, weights,
+                backend=backend,
+            )
+            ring = jnp.where(valid, new_ring, ring)
+        else:
+            new_ring = ops.fused_post_exchange_remote(
+                pend["act"], ring, pend["onehot"],
+                dev.cols_remote, dev.weights_remote, backend=backend,
+            )
+            ring = jnp.where(valid, new_ring, ring)
+        return ring, weights
+
     def step(carry, _):
         t = carry["t"]
         slot = jnp.mod(t, D)
+        if choice.overlap == "double_buffer":
+            # flush step t-1's deferred remote gather before this step
+            # reads or clears any slot (a delay-1 contribution from t-1
+            # lands in exactly the slot delivered now)
+            ring0, weights0 = _apply_pending(
+                carry["ring"], carry["weights"], carry["_pending"]
+            )
+        else:
+            ring0, weights0 = carry["ring"], carry["weights"]
+        new_pending = None
         i_syn = jax.lax.dynamic_index_in_dim(
-            carry["ring"], slot, axis=0, keepdims=False
+            ring0, slot, axis=0, keepdims=False
         )
         if not (choice.split or choice.event):
             # the split/event post-exchange kernels rotate the ring
             # themselves; the other engines clear the delivered slot here
             ring = jax.lax.dynamic_update_index_in_dim(
-                carry["ring"], jnp.zeros((carry["ring"].shape[1],),
-                                         carry["ring"].dtype),
+                ring0, jnp.zeros((ring0.shape[1],), ring0.dtype),
                 slot, axis=0,
             )
         # deterministic noise keyed by (seed, t, permanent neuron id)
@@ -305,7 +437,7 @@ def make_core_step(
             i_tot = i_syn + noise + vtx[:, LIF_BIAS]
             v2, r2, spikes, currents = ops.fused_step(
                 vtx[:, LIF_V], vtx[:, LIF_REF], i_tot,
-                dev.cols, carry["weights"],
+                dev.cols, weights0,
                 params=lif_params, backend=backend,
             )
             vtx_state = (
@@ -313,7 +445,7 @@ def make_core_step(
             )
             for i, d in enumerate(dev.delays):
                 ring = ring.at[jnp.mod(t + d, D)].add(currents[i][:n_p])
-            new_weights = carry["weights"]
+            new_weights = weights0
             tr_plus, tr_minus = carry["tr_plus"], carry["tr_minus"]
         elif choice.engine == "fused_plastic":
             # the single-kernel step grown by the STDP pass: trace decay
@@ -327,7 +459,7 @@ def make_core_step(
              new_weights) = ops.fused_step_plastic(
                 vtx[:, LIF_V], vtx[:, LIF_REF], i_tot,
                 carry["tr_plus"], carry["tr_minus"],
-                dev.cols, carry["weights"], dev.plastic,
+                dev.cols, weights0, dev.plastic,
                 params=lif_params, taus=(tau_plus, tau_minus),
                 stdp=stdp_params, backend=backend,
             )
@@ -353,13 +485,49 @@ def make_core_step(
             vtx_state = (
                 vtx.at[:, LIF_V].set(v2).at[:, LIF_REF].set(r2)
             )
-            act, pre_trace, overflow = exchange(spikes, tr_plus)
-            ring, new_weights = ops.fused_post_exchange_plastic(
-                act, pre_trace, carry["ring"], clear_mask, write_onehot,
-                tr_minus, spikes, dev.cols, carry["weights"], dev.plastic,
-                stdp=stdp_params, backend=backend,
-            )
-            new_weights = tuple(new_weights)
+            if overlap_on:
+                # plastic panels are never split (weights are state):
+                # the local pass gathers the full panels against the own
+                # slice embedded in a zeroed global vector, issued AFTER
+                # the collective in program order but data-independent of
+                # it; the remote pass carries the STDP update (elementwise
+                # in the full act/pre-trace, so weights stay bit-exact
+                # against the serialized engine)
+                act_local = overlap_ctx["embed"](
+                    overlap_ctx["local"](spikes)
+                )
+                act, pre_trace, overflow = exchange(spikes, tr_plus)
+                ring = ops.fused_post_exchange_local(
+                    act_local, ring0, clear_mask, write_onehot,
+                    dev.cols, weights0, backend=backend,
+                )
+                if choice.overlap == "double_buffer":
+                    new_pending = dict(
+                        valid=jnp.ones((), jnp.int32),
+                        onehot=write_onehot, act=act,
+                        pre_trace=pre_trace, post_trace=tr_minus,
+                        post_spike=spikes,
+                    )
+                    new_weights = weights0  # updated at the t+1 flush
+                else:
+                    act_remote = overlap_ctx["mask_remote"](act)
+                    ring, new_weights = (
+                        ops.fused_post_exchange_remote_plastic(
+                            act_remote, act, pre_trace, ring,
+                            write_onehot, tr_minus, spikes,
+                            dev.cols, weights0, dev.plastic,
+                            stdp=stdp_params, backend=backend,
+                        )
+                    )
+                    new_weights = tuple(new_weights)
+            else:
+                act, pre_trace, overflow = exchange(spikes, tr_plus)
+                ring, new_weights = ops.fused_post_exchange_plastic(
+                    act, pre_trace, ring0, clear_mask, write_onehot,
+                    tr_minus, spikes, dev.cols, weights0, dev.plastic,
+                    stdp=stdp_params, backend=backend,
+                )
+                new_weights = tuple(new_weights)
         elif choice.engine == "fused_split":
             # the same fusion split at the exchange: fused {LIF + emit}
             # kernel, the collective, then a fused {ring rotate + every
@@ -374,12 +542,35 @@ def make_core_step(
             vtx_state = (
                 vtx.at[:, LIF_V].set(v2).at[:, LIF_REF].set(r2)
             )
-            act, _, overflow = exchange(spikes, carry["tr_plus"])
-            ring = ops.fused_post_exchange(
-                act, carry["ring"], clear_mask, write_onehot,
-                dev.cols, carry["weights"], backend=backend,
-            )
-            new_weights = carry["weights"]
+            if overlap_on:
+                # the collective is issued first in program order; the
+                # local gather that follows reads only the own spike
+                # vector and the build-time local sub-panels, so XLA's
+                # latency hiding runs it under the all-gather
+                act_local = overlap_ctx["local"](spikes)
+                act, _, overflow = exchange(spikes, carry["tr_plus"])
+                ring = ops.fused_post_exchange_local(
+                    act_local, ring0, clear_mask, write_onehot,
+                    dev.cols_local, dev.weights_local, backend=backend,
+                )
+                if choice.overlap == "double_buffer":
+                    new_pending = dict(
+                        valid=jnp.ones((), jnp.int32),
+                        onehot=write_onehot, act=act,
+                    )
+                else:
+                    ring = ops.fused_post_exchange_remote(
+                        act, ring, write_onehot,
+                        dev.cols_remote, dev.weights_remote,
+                        backend=backend,
+                    )
+            else:
+                act, _, overflow = exchange(spikes, carry["tr_plus"])
+                ring = ops.fused_post_exchange(
+                    act, ring0, clear_mask, write_onehot,
+                    dev.cols, weights0, backend=backend,
+                )
+            new_weights = weights0
             tr_plus, tr_minus = carry["tr_plus"], carry["tr_minus"]
         elif choice.event:
             # event-driven gather: fused {LIF + emit}, the exchange, then
@@ -397,13 +588,38 @@ def make_core_step(
             vtx_state = (
                 vtx.at[:, LIF_V].set(v2).at[:, LIF_REF].set(r2)
             )
-            act, _, overflow = exchange(spikes, carry["tr_plus"])
-            sel, flags = event_plan.select(act)
-            ring = ops.event_post_exchange(
-                act, carry["ring"], clear_mask, write_onehot, sel, flags,
-                dev.cols, carry["weights"], backend=backend,
-            )
-            new_weights = carry["weights"]
+            if overlap_on:
+                # local sub-panels are gathered densely (they are small
+                # and available before the collective); the event-driven
+                # compression applies to the remote ids only, so the
+                # touched-block flags never wait on the own slice
+                act_local = overlap_ctx["local"](spikes)
+                act, _, overflow = exchange(spikes, carry["tr_plus"])
+                ring = ops.fused_post_exchange_local(
+                    act_local, ring0, clear_mask, write_onehot,
+                    dev.cols_local, dev.weights_local, backend=backend,
+                )
+                if choice.overlap == "double_buffer":
+                    new_pending = dict(
+                        valid=jnp.ones((), jnp.int32),
+                        onehot=write_onehot, act=act,
+                    )
+                else:
+                    act_remote = overlap_ctx["mask_remote"](act)
+                    sel, flags = event_plan.select(act_remote)
+                    ring = ops.event_post_exchange(
+                        act_remote, ring, jnp.ones((D,), jnp.float32),
+                        write_onehot, sel, flags,
+                        dev.cols, weights0, backend=backend,
+                    )
+            else:
+                act, _, overflow = exchange(spikes, carry["tr_plus"])
+                sel, flags = event_plan.select(act)
+                ring = ops.event_post_exchange(
+                    act, ring0, clear_mask, write_onehot, sel, flags,
+                    dev.cols, weights0, backend=backend,
+                )
+            new_weights = weights0
             tr_plus, tr_minus = carry["tr_plus"], carry["tr_minus"]
         else:
             vtx_state, spikes = neuron_step(
@@ -423,7 +639,7 @@ def make_core_step(
 
             act, pre_trace, overflow = exchange(spikes, tr_plus)
 
-            weights = carry["weights"]
+            weights = weights0
             new_weights = []
             for i, d in enumerate(dev.delays):
                 cur = ops.spike_gather(
@@ -463,6 +679,10 @@ def make_core_step(
             t=t + 1, vtx_state=vtx_state, ring=ring, hist=hist,
             weights=new_weights, tr_plus=tr_plus, tr_minus=tr_minus,
         )
+        if choice.overlap == "double_buffer":
+            new_carry["_pending"] = (
+                new_pending if new_pending is not None else _pending_init()
+            )
         out = dict(spike_count=jnp.sum(spikes), overflow=overflow)
         if record_raster:
             out["raster"] = spikes.astype(jnp.uint8)
@@ -470,7 +690,18 @@ def make_core_step(
             out["v_mean"] = jnp.mean(vtx_state[:, 0])
         return new_carry, out
 
+    def _pending_flush(carry):
+        """Apply and drop a trailing '_pending' entry (scan epilogue)."""
+        carry = dict(carry)
+        pend = carry.pop("_pending")
+        ring, weights = _apply_pending(carry["ring"], carry["weights"], pend)
+        carry["ring"] = ring
+        carry["weights"] = weights
+        return carry
+
     step.engine_choice = choice
+    step.pending_init = _pending_init
+    step.pending_flush = _pending_flush
     return step
 
 
@@ -521,6 +752,10 @@ class Simulator:
             fused=cfg.fused,
             gather=cfg.gather,
             event_cap_frac=cfg.event_cap_frac,
+            # k=1 is an identity exchange: 'auto' resolves to 'off', an
+            # explicit mode is still validated by the selector (raises
+            # with fused=True — there is no collective to overlap)
+            overlap="off" if cfg.overlap == "auto" else cfg.overlap,
         )
         self.engine_choice: StepEngineChoice = self._step.engine_choice
         self.event_capable = _probe_event_capable(

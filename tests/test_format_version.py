@@ -1,0 +1,109 @@
+"""Manifest ``format_version`` contract (docs/FORMAT.md): written on every
+save, checked on every read — unknown-major raises, unknown-minor warns,
+missing is treated as the current (pre-versioning) layout — and the stamp
+survives elastic reshard and the streaming-ingest read path."""
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.builder.ingest import load_binary_streamed, open_snapshot
+from repro.core import hash_partition, rcb_partition, repartition
+from repro.io import load_binary, save_binary
+from repro.io.dcsr_binary import FORMAT_VERSION, check_format_version
+from repro.snn import spatial_random, to_dcsr
+
+
+def _snapshot(tmp_path, name="snap", k=3):
+    net = spatial_random(90, avg_degree=6, seed=11)
+    d = to_dcsr(net, assignment=rcb_partition(net.coords, k))
+    path = os.path.join(tmp_path, name)
+    save_binary(d, path, t_now=5)
+    return d, path
+
+
+def _manifest(path):
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def _rewrite_version(path, version):
+    man = _manifest(path)
+    if version is None:
+        man.pop("format_version", None)
+    else:
+        man["format_version"] = version
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(man, f)
+
+
+def test_format_version_roundtrip(tmp_path):
+    d, path = _snapshot(tmp_path)
+    man = _manifest(path)
+    assert man["format_version"] == f"{FORMAT_VERSION[0]}.{FORMAT_VERSION[1]}"
+    d2, _, t = load_binary(path)
+    assert t == 5 and d2.n == d.n and d2.m == d.m
+    for pa, pb in zip(d.parts, d2.parts):
+        np.testing.assert_array_equal(pa.row_ptr, pb.row_ptr)
+        np.testing.assert_array_equal(pa.col_idx, pb.col_idx)
+
+
+def test_future_minor_warns_and_loads(tmp_path):
+    d, path = _snapshot(tmp_path)
+    _rewrite_version(path, f"{FORMAT_VERSION[0]}.{FORMAT_VERSION[1] + 7}")
+    with pytest.warns(UserWarning, match="newer minor revision"):
+        d2, _, _ = load_binary(path)
+    assert d2.m == d.m
+
+
+def test_future_major_raises(tmp_path):
+    _, path = _snapshot(tmp_path)
+    _rewrite_version(path, f"{FORMAT_VERSION[0] + 1}.0")
+    with pytest.raises(ValueError, match="newer than this reader"):
+        load_binary(path)
+
+
+def test_unparseable_version_raises(tmp_path):
+    _, path = _snapshot(tmp_path)
+    _rewrite_version(path, "banana")
+    with pytest.raises(ValueError, match="unparseable format_version"):
+        load_binary(path)
+
+
+def test_missing_version_is_current_and_silent(tmp_path):
+    d, path = _snapshot(tmp_path)
+    _rewrite_version(path, None)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any warning fails the test
+        d2, _, _ = load_binary(path)
+    assert d2.m == d.m
+    assert check_format_version({}) == FORMAT_VERSION
+
+
+def test_version_survives_elastic_reshard(tmp_path):
+    d, path = _snapshot(tmp_path, k=3)
+    loaded, _, _ = load_binary(path)
+    r = repartition(loaded, hash_partition(loaded.n, 2, seed=4))
+    path2 = os.path.join(tmp_path, "resharded")
+    save_binary(r, path2)
+    man2 = _manifest(path2)
+    assert man2["format_version"] == \
+        f"{FORMAT_VERSION[0]}.{FORMAT_VERSION[1]}"
+    assert int(man2["k"]) == 2
+    r2, _, _ = load_binary(path2)
+    assert r2.m == d.m
+
+
+def test_streamed_ingest_checks_version(tmp_path):
+    d, path = _snapshot(tmp_path)
+    # current version streams fine
+    with open_snapshot(path) as rdr:
+        assert rdr.m == d.m
+    d2, _, _ = load_binary_streamed(path)
+    assert d2.m == d.m
+    # future major refuses at open time, before any shard is touched
+    _rewrite_version(path, f"{FORMAT_VERSION[0] + 1}.0")
+    with pytest.raises(ValueError, match="newer than this reader"):
+        open_snapshot(path)
