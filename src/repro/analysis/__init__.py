@@ -1,0 +1,32 @@
+"""Static analysis for the repro codebase (see docs/ANALYSIS.md).
+
+Two CI-gated passes:
+
+* :mod:`repro.analysis.contracts` — lowers every eligible engine
+  configuration and verifies its declared
+  :data:`repro.kernels.dispatch.ENGINE_CONTRACTS` entry against the
+  jaxpr and compiled HLO (``python -m repro.analysis.contracts``);
+* :mod:`repro.analysis.repolint` — AST lint for repo-wide invariants:
+  registry-op completeness, durable-write discipline, fault-hook
+  coverage, and thread-lock discipline
+  (``python -m repro.analysis.repolint src/``).
+
+:mod:`repro.analysis.hlo` holds the shared HLO text parser (absorbed
+from the deprecated ``repro.launch.hlo_analysis``).
+
+This package stays import-light: neither jax nor the simulator stack is
+imported until a checker actually runs, so the contracts CLI can still
+provision fake host devices (``XLA_FLAGS``) for itself in a fresh
+process.
+"""
+from . import hlo  # noqa: F401  (pure text parser, no jax)
+
+__all__ = ["hlo", "contracts", "repolint"]
+
+
+def __getattr__(name):
+    if name in ("contracts", "repolint"):
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,665 @@
+"""Repo invariant lint: AST-enforced discipline rules for the repro tree.
+
+Run as ``python -m repro.analysis.repolint src/`` (exit 0 = clean).  The
+rules encode invariants the IO durability and fault-injection stacks
+rely on but example-based tests cannot pin repo-wide:
+
+``registry-op``
+    Every dispatch-registered op is complete: a ``@register(op, "ref")``
+    oracle, a ``_register_pallas(op)`` variant, and at least one test
+    file referencing the op by name (the parity sweep).
+
+``durable-write``
+    No raw durable write inside ``io/`` outside ``durability.py``:
+    ``open(..., "w*/a*/x*/+")``, ``np.save``/``np.savez``, and
+    ``.tofile`` are flagged — unless the target is an ``io.BytesIO``
+    local (serialize in memory, persist via ``write_bytes_verified``).
+
+``fault-hook``
+    (a) every literal site passed to ``fault_point`` /
+    ``write_bytes_verified`` / ``apply_state_faults`` is registered in
+    ``testing.faults.KNOWN_SITES``; (b) no registered site is dead; (c)
+    every function named ``*write*``/``*save*`` in ``io/`` modules and
+    ``snn/session.py`` reaches a fault hook through the call graph.
+
+``lock-discipline``
+    A class declaring ``_guarded_by_ = {"attr": "lock_attr"}`` promises
+    every mutation of ``self.attr`` outside ``__init__`` happens inside
+    ``with self.lock_attr:`` — worker-thread state (``AsyncWriter``,
+    supervisor marks) stays data-race free.
+
+``suppress``
+    Inline suppression is ``# repolint: allow[<rule>] -- <why>`` on the
+    violating line or the line above; a suppression without a
+    justification is itself a violation.
+
+See docs/ANALYSIS.md for the full rule catalogue and examples.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import os
+import re
+import sys
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+RULES = (
+    "registry-op", "durable-write", "fault-hook", "lock-discipline",
+    "suppress",
+)
+
+# call-graph seeds: reaching any of these counts as fault-hooked
+HOOK_SEEDS = frozenset({
+    "fault_point", "write_bytes_verified", "atomic_dir",
+    "apply_state_faults",
+})
+# container mutators: calling these on a guarded attribute is a mutation
+MUTATOR_METHODS = frozenset({
+    "append", "extend", "insert", "pop", "remove", "clear", "update",
+    "add", "discard", "popitem", "setdefault", "sort", "reverse",
+})
+_WRITE_MODE = re.compile(r"[wax+]")
+_SUPPRESS = re.compile(
+    r"#\s*repolint:\s*allow\[([a-z-]+)\]\s*(?:--\s*(\S.*))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+@dataclasses.dataclass
+class _File:
+    path: str  # as reported
+    rel: str  # normalized with forward slashes
+    tree: ast.AST
+    lines: List[str]
+    suppressions: Dict[int, Tuple[str, Optional[str]]]  # line -> (rule, why)
+
+
+def _parse_suppressions(
+    lines: List[str],
+) -> Dict[int, Tuple[str, Optional[str]]]:
+    out: Dict[int, Tuple[str, Optional[str]]] = {}
+    for i, text in enumerate(lines, start=1):
+        m = _SUPPRESS.search(text)
+        if m:
+            out[i] = (m.group(1), m.group(2))
+    return out
+
+
+def _load(path: str, root: str) -> Optional[_File]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            src = f.read()
+        tree = ast.parse(src, filename=path)
+    except (OSError, SyntaxError):
+        return None  # unreadable/broken files are pytest's problem
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    lines = src.splitlines()
+    return _File(path, rel, tree, lines, _parse_suppressions(lines))
+
+
+def _is_io_file(rel: str) -> bool:
+    return "/io/" in f"/{rel}" or rel.startswith("io/")
+
+
+def _str_arg(call: ast.Call, pos: int, kw: str = "") -> Optional[str]:
+    if len(call.args) > pos and isinstance(call.args[pos], ast.Constant) \
+            and isinstance(call.args[pos].value, str):
+        return call.args[pos].value
+    for k in call.keywords:
+        if kw and k.arg == kw and isinstance(k.value, ast.Constant) \
+                and isinstance(k.value.value, str):
+            return k.value.value
+    return None
+
+
+def _callee_name(func: ast.AST) -> Optional[str]:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+# ---------------------------------------------------------------------------
+# registry-op
+# ---------------------------------------------------------------------------
+
+
+def _registry_rule(
+    files: List[_File], tests_dir: Optional[str]
+) -> List[Violation]:
+    ref_ops: Dict[str, Tuple[_File, int]] = {}
+    pallas_ops: Dict[str, Tuple[_File, int]] = {}
+    for f in files:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _callee_name(node.func)
+            if name == "register":
+                op = _str_arg(node, 0)
+                backend = _str_arg(node, 1)
+                if op and backend == "ref":
+                    ref_ops.setdefault(op, (f, node.lineno))
+            elif name == "_register_pallas":
+                op = _str_arg(node, 0)
+                if op:
+                    pallas_ops.setdefault(op, (f, node.lineno))
+    if not ref_ops and not pallas_ops:
+        return []
+    out: List[Violation] = []
+    for op, (f, line) in sorted(ref_ops.items()):
+        if op not in pallas_ops:
+            out.append(Violation(
+                f.path, line, "registry-op",
+                f"op {op!r} has a ref oracle but no Pallas registration",
+            ))
+    for op, (f, line) in sorted(pallas_ops.items()):
+        if op not in ref_ops:
+            out.append(Violation(
+                f.path, line, "registry-op",
+                f"op {op!r} has a Pallas variant but no ref oracle",
+            ))
+    if tests_dir and os.path.isdir(tests_dir):
+        corpus = []
+        for dirpath, _dirs, names in os.walk(tests_dir):
+            for n in names:
+                if n.endswith(".py"):
+                    try:
+                        with open(os.path.join(dirpath, n),
+                                  encoding="utf-8") as fh:
+                            corpus.append(fh.read())
+                    except OSError:
+                        continue
+        blob = "\n".join(corpus)
+        for op, (f, line) in sorted(ref_ops.items()):
+            if not re.search(rf"\b{re.escape(op)}\b", blob):
+                out.append(Violation(
+                    f.path, line, "registry-op",
+                    f"no test under {tests_dir} references op {op!r} "
+                    "(parity coverage)",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# durable-write
+# ---------------------------------------------------------------------------
+
+
+def _scope_nodes(scope: ast.AST) -> Iterable[ast.AST]:
+    """Every node lexically in ``scope``'s body, without descending into
+    nested function definitions (each nested def is its own scope)."""
+    stack = list(getattr(scope, "body", []))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _bytesio_locals(scope: ast.AST) -> Set[str]:
+    """Names bound to BytesIO()/StringIO() directly in this scope."""
+    out: Set[str] = set()
+    for node in _scope_nodes(scope):
+        if isinstance(node, ast.Assign) and isinstance(
+            node.value, ast.Call
+        ):
+            cn = _callee_name(node.value.func)
+            if cn in ("BytesIO", "StringIO"):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out.add(tgt.id)
+    return out
+
+
+def _durable_write_rule(files: List[_File]) -> List[Violation]:
+    out: List[Violation] = []
+    for f in files:
+        if not _is_io_file(f.rel) or f.rel.endswith("durability.py"):
+            continue
+        scopes: List[ast.AST] = [f.tree] + [
+            n for n in ast.walk(f.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        for scope in scopes:
+            membuf = _bytesio_locals(scope)
+            for node in _scope_nodes(scope):
+                if not isinstance(node, ast.Call):
+                    continue
+                v = _check_write_call(node, membuf)
+                if v:
+                    out.append(Violation(
+                        f.path, node.lineno, "durable-write", v
+                    ))
+    return out
+
+
+def _check_write_call(
+    node: ast.Call, membuf: Set[str]
+) -> Optional[str]:
+    name = _callee_name(node.func)
+    if name == "open":
+        mode = _str_arg(node, 1, kw="mode")
+        if mode and _WRITE_MODE.search(mode):
+            return (
+                f"raw open(..., {mode!r}) in io/ — route durable writes "
+                "through durability.write_bytes_verified"
+            )
+        return None
+    if name in ("save", "savez", "savez_compressed") and isinstance(
+        node.func, ast.Attribute
+    ):
+        base = node.func.value
+        if isinstance(base, ast.Name) and base.id in ("np", "numpy"):
+            first = node.args[0] if node.args else None
+            if isinstance(first, ast.Name) and first.id in membuf:
+                return None  # serializing into an in-memory buffer
+            return (
+                f"np.{name} writing straight to disk in io/ — serialize "
+                "to BytesIO and persist via write_bytes_verified"
+            )
+    if name == "tofile":
+        return (
+            "ndarray.tofile in io/ — persist via write_bytes_verified"
+        )
+    return None
+
+
+# ---------------------------------------------------------------------------
+# fault-hook
+# ---------------------------------------------------------------------------
+
+_SITE_FNS = {
+    "fault_point": (0, "site"),
+    "apply_state_faults": (0, "site"),
+    "write_bytes_verified": (2, "site"),
+}
+
+
+def _is_write_name(name: str) -> bool:
+    """Exact-segment match: ``save_text`` / ``_write_and_mark`` are
+    write paths, ``_writer_obj`` (an accessor) is not."""
+    segs = [s for s in re.split(r"[_\d]+", name.lower()) if s]
+    return "write" in segs or "save" in segs
+
+
+def _known_sites(files: List[_File]) -> Optional[Tuple[_File, int,
+                                                       List[str]]]:
+    for f in files:
+        if not f.rel.endswith("testing/faults.py"):
+            continue
+        for node in ast.walk(f.tree):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                tgts = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                if any(isinstance(t, ast.Name) and t.id == "KNOWN_SITES"
+                       for t in tgts):
+                    val = node.value
+                    if isinstance(val, (ast.Tuple, ast.List)):
+                        sites = [
+                            e.value for e in val.elts
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, str)
+                        ]
+                        return f, node.lineno, sites
+    return None
+
+
+def _fault_hook_rule(files: List[_File]) -> List[Violation]:
+    out: List[Violation] = []
+    known = _known_sites(files)
+
+    # (a) literal sites must be registered; collect usage while walking
+    used_sites: Set[str] = set()
+    for f in files:
+        if f.rel.endswith("testing/faults.py"):
+            continue  # the registry itself (docstring/table mentions)
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _callee_name(node.func)
+            if name not in _SITE_FNS:
+                continue
+            pos, kw = _SITE_FNS[name]
+            site = _str_arg(node, pos, kw=kw)
+            if site is None:
+                continue
+            base = site[:-5] if site.endswith(":post") else site
+            used_sites.add(base)
+            if known is not None and base not in known[2]:
+                out.append(Violation(
+                    f.path, node.lineno, "fault-hook",
+                    f"fault site {site!r} is not registered in "
+                    "testing.faults.KNOWN_SITES",
+                ))
+    # (b) dead registered sites
+    if known is not None:
+        reg_file, reg_line, sites = known
+        for s in sites:
+            if s not in used_sites:
+                out.append(Violation(
+                    reg_file.path, reg_line, "fault-hook",
+                    f"registered fault site {s!r} has no call site "
+                    "(dead hook point)",
+                ))
+
+    # (c) write/save paths in io/ + snn/session.py must reach a hook
+    edges: Dict[str, Set[str]] = {}
+    targets: List[Tuple[str, _File, int]] = []
+    for f in files:
+        coverage_file = _is_io_file(f.rel) or f.rel.endswith(
+            "snn/session.py"
+        )
+        for node in ast.walk(f.tree):
+            if not isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                continue
+            callees = edges.setdefault(node.name, set())
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    cn = _callee_name(sub.func)
+                    if cn:
+                        callees.add(cn)
+                    for arg in list(sub.args) + [
+                        k.value for k in sub.keywords
+                    ]:
+                        an = _callee_name(arg)
+                        if an:
+                            callees.add(an)  # fn passed as a callback
+            if coverage_file and node.name not in HOOK_SEEDS and \
+                    _is_write_name(node.name):
+                targets.append((node.name, f, node.lineno))
+    hooked: Set[str] = set(HOOK_SEEDS)
+    changed = True
+    while changed:
+        changed = False
+        for fn, callees in edges.items():
+            if fn not in hooked and callees & hooked:
+                hooked.add(fn)
+                changed = True
+    for name, f, line in targets:
+        if name not in hooked:
+            out.append(Violation(
+                f.path, line, "fault-hook",
+                f"production write path {name!r} never reaches a "
+                "testing.faults hook point (fault_point / "
+                "write_bytes_verified)",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+
+def _guarded_map(cls: ast.ClassDef) -> Dict[str, str]:
+    for stmt in cls.body:
+        if isinstance(stmt, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "_guarded_by_"
+            for t in stmt.targets
+        ) and isinstance(stmt.value, ast.Dict):
+            out = {}
+            for k, v in zip(stmt.value.keys, stmt.value.values):
+                if isinstance(k, ast.Constant) and isinstance(
+                    v, ast.Constant
+                ):
+                    out[str(k.value)] = str(v.value)
+            return out
+    return {}
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and isinstance(
+        node.value, ast.Name
+    ) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _lock_rule(files: List[_File]) -> List[Violation]:
+    out: List[Violation] = []
+    for f in files:
+        for cls in ast.walk(f.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            guarded = _guarded_map(cls)
+            if not guarded:
+                continue
+            for method in cls.body:
+                if not isinstance(
+                    method, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ) or method.name in ("__init__", "__new__"):
+                    continue
+                _walk_locks(
+                    method.body, frozenset(), guarded, f, out
+                )
+    return out
+
+
+def _held_locks(withnode) -> Set[str]:
+    held = set()
+    for item in withnode.items:
+        ctx = item.context_expr
+        attr = _self_attr(ctx)
+        if attr:
+            held.add(attr)
+        elif isinstance(ctx, ast.Name):
+            held.add(ctx.id)
+    return held
+
+
+def _stmt_expr_nodes(stmt: ast.stmt) -> Iterable[ast.AST]:
+    """The statement and its expression-level children — nested
+    statements (bodies of if/for/try/with) are NOT descended into; the
+    caller recurses into those with the right lock set."""
+    yield stmt
+    stack = [
+        c for c in ast.iter_child_nodes(stmt)
+        if not isinstance(c, (ast.stmt, ast.ExceptHandler))
+    ]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, ast.Lambda):
+            continue  # deferred execution: its own (unknown) context
+        yield n
+        stack.extend(
+            c for c in ast.iter_child_nodes(n)
+            if not isinstance(c, (ast.stmt, ast.ExceptHandler))
+        )
+
+
+def _walk_locks(
+    stmts: Iterable[ast.stmt],
+    held: frozenset,
+    guarded: Dict[str, str],
+    f: _File,
+    out: List[Violation],
+) -> None:
+    for stmt in stmts:
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            _walk_locks(
+                stmt.body, held | _held_locks(stmt), guarded, f, out
+            )
+            continue
+        if isinstance(
+            stmt, (ast.FunctionDef, ast.AsyncFunctionDef)
+        ):
+            # nested function: may run on another thread, starts bare
+            _walk_locks(stmt.body, frozenset(), guarded, f, out)
+            continue
+        for node in _stmt_expr_nodes(stmt):
+            attr = _mutated_attr(node)
+            if attr and attr in guarded and guarded[attr] not in held:
+                out.append(Violation(
+                    f.path, node.lineno, "lock-discipline",
+                    f"mutation of self.{attr} outside "
+                    f"'with self.{guarded[attr]}:' (declared in "
+                    "_guarded_by_)",
+                ))
+        for attr_name in ("body", "orelse", "finalbody"):
+            _walk_locks(
+                getattr(stmt, attr_name, None) or [], held, guarded,
+                f, out,
+            )
+        for handler in getattr(stmt, "handlers", []) or []:
+            _walk_locks(handler.body, held, guarded, f, out)
+
+
+def _mutated_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+        tgts = node.targets if isinstance(node, ast.Assign) else \
+            [node.target]
+        for t in tgts:
+            attr = _self_attr(t)
+            if attr:
+                return attr
+            if isinstance(t, ast.Subscript):
+                attr = _self_attr(t.value)
+                if attr:
+                    return attr
+    if isinstance(node, ast.Delete):
+        for t in node.targets:
+            attr = _self_attr(t) or (
+                _self_attr(t.value) if isinstance(t, ast.Subscript)
+                else None
+            )
+            if attr:
+                return attr
+    if isinstance(node, ast.Call) and isinstance(
+        node.func, ast.Attribute
+    ) and node.func.attr in MUTATOR_METHODS:
+        return _self_attr(node.func.value)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def _dedupe_walk_bug(vs: List[Violation]) -> List[Violation]:
+    seen: Set[Tuple[str, int, str, str]] = set()
+    out = []
+    for v in vs:
+        key = (v.path, v.line, v.rule, v.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(v)
+    return out
+
+
+def _apply_suppressions(
+    violations: List[Violation], files: Dict[str, _File]
+) -> List[Violation]:
+    out: List[Violation] = []
+    for v in violations:
+        f = files.get(v.path)
+        sup = None
+        if f:
+            sup = f.suppressions.get(v.line) or f.suppressions.get(
+                v.line - 1
+            )
+        if sup and sup[0] == v.rule and sup[1]:
+            continue  # justified suppression
+        out.append(v)
+    # a suppression comment without a justification is itself wrong
+    for f in files.values():
+        for line, (rule, why) in sorted(f.suppressions.items()):
+            if not why:
+                out.append(Violation(
+                    f.path, line, "suppress",
+                    f"suppression 'allow[{rule}]' has no justification "
+                    "(write '# repolint: allow[<rule>] -- <why>')",
+                ))
+            elif rule not in RULES:
+                out.append(Violation(
+                    f.path, line, "suppress",
+                    f"suppression names unknown rule {rule!r} "
+                    f"(rules: {', '.join(RULES)})",
+                ))
+    return out
+
+
+def _default_tests_dir(roots: List[str]) -> Optional[str]:
+    for root in roots:
+        base = os.path.abspath(root)
+        for cand in (
+            os.path.join(base, "tests"),
+            os.path.join(os.path.dirname(base), "tests"),
+        ):
+            if os.path.isdir(cand):
+                return cand
+    return None
+
+
+def lint_paths(
+    paths: List[str], tests_dir: Optional[str] = None
+) -> List[Violation]:
+    """Lint every ``.py`` file under ``paths`` and return the surviving
+    (unsuppressed) violations, sorted by location."""
+    py_files: List[Tuple[str, str]] = []  # (path, root)
+    for p in paths:
+        if os.path.isfile(p):
+            py_files.append((p, os.path.dirname(p) or "."))
+        else:
+            for dirpath, _dirs, names in os.walk(p):
+                for n in sorted(names):
+                    if n.endswith(".py"):
+                        py_files.append((os.path.join(dirpath, n), p))
+    files = [f for f in (_load(fp, root) for fp, root in py_files) if f]
+    by_path = {f.path: f for f in files}
+    if tests_dir is None:
+        tests_dir = _default_tests_dir(list(paths))
+    violations: List[Violation] = []
+    violations += _registry_rule(files, tests_dir)
+    violations += _durable_write_rule(files)
+    violations += _fault_hook_rule(files)
+    violations += _lock_rule(files)
+    violations = _dedupe_walk_bug(violations)
+    violations = _apply_suppressions(violations, by_path)
+    return sorted(
+        violations, key=lambda v: (v.path, v.line, v.rule, v.message)
+    )
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.repolint",
+        description="AST lint for repro repo invariants "
+                    "(see docs/ANALYSIS.md).",
+    )
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--tests-dir", default=None,
+                    help="tests directory for parity-coverage checks "
+                         "(default: <path>/tests or its sibling)")
+    args = ap.parse_args(argv)
+    paths = args.paths or ["src"]
+    violations = lint_paths(paths, tests_dir=args.tests_dir)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"\n{len(violations)} violation(s) "
+              f"across {len({v.path for v in violations})} file(s)")
+        return 1
+    print("repolint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,6 +51,9 @@ class AsyncWriter:
     memory (each queued checkpoint job holds a full state copy).  The
     default (0) is unbounded."""
 
+    # appended by the worker thread, drained by the caller's check()
+    _guarded_by_ = {"_err": "_err_lock"}
+
     def __init__(self, name: str = "async-ckpt-writer",
                  max_pending: int = 0, retries: int = 2,
                  retry_backoff_s: float = 0.05):
@@ -60,6 +63,7 @@ class AsyncWriter:
         through tmp dirs, so a re-run is idempotent."""
         self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
         self._err: List[BaseException] = []
+        self._err_lock = threading.Lock()
         self._closed = False
         self.retries = max(int(retries), 0)
         self.retry_backoff_s = retry_backoff_s
@@ -133,17 +137,21 @@ class AsyncWriter:
                 return
             except OSError as e:  # transient disk: retry in place
                 if attempt + 1 >= attempts:
-                    self._err.append(self._wrap(e, context))
+                    with self._err_lock:
+                        self._err.append(self._wrap(e, context))
             except BaseException as e:  # not retryable
-                self._err.append(self._wrap(e, context))
+                with self._err_lock:
+                    self._err.append(self._wrap(e, context))
                 return
 
     # ------------------------------------------------------------ surface
     def check(self) -> None:
         """Re-raise the oldest pending background error (non-blocking);
         no-op when every completed job succeeded."""
-        if self._err:
-            raise self._err.pop(0)
+        with self._err_lock:
+            err = self._err.pop(0) if self._err else None
+        if err is not None:
+            raise err
 
     def wait(self) -> None:
         """Block until every queued job has run, then surface errors."""

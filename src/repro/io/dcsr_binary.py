@@ -75,11 +75,11 @@ def check_format_version(man: Dict, source: str = "snapshot") -> Tuple[int, int]
         return FORMAT_VERSION
     try:
         maj, mino = (int(x) for x in str(raw).split("."))
-    except Exception:
+    except Exception as e:
         raise ValueError(
             f"{source}: unparseable format_version {raw!r} "
             f"(expected '<major>.<minor>')"
-        )
+        ) from e
     if maj > FORMAT_VERSION[0]:
         raise ValueError(
             f"{source}: format_version {raw} is newer than this reader "

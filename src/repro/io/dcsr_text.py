@@ -42,10 +42,19 @@ import numpy as np
 from ..core.dcsr import DCSRNetwork, DCSRPartition
 from ..core.events import EVENT_DTYPE
 from ..core.state import ModelRegistry, NONE_MODEL
+from .durability import write_bytes_verified
 
 
 def _fmt(x: float) -> str:
     return format(float(x), ".9g")
+
+
+def _write_text(full: str, lines: List[str]) -> int:
+    """Persist one textual artifact durably (CRC read-back verify plus
+    the ``text_write`` fault hook) and return its byte size."""
+    data = ("\n".join(lines) + "\n" if lines else "").encode()
+    write_bytes_verified(full, data, "text_write")
+    return len(data)
 
 
 # ---------------------------------------------------------------------------
@@ -60,35 +69,38 @@ def save_text(
     t_now: int = 0,
 ) -> Dict[str, int]:
     """Serialize; returns bytes written per file kind (the benchmark reads
-    this for the paper's linear-in-synapses claim)."""
+    this for the paper's linear-in-synapses claim).  Each file is built
+    in memory and persisted via :func:`durability.write_bytes_verified`
+    (the ``text_write`` site), keeping every on-disk artifact CRC-checked
+    and fault-injectable."""
     os.makedirs(path, exist_ok=True)
     sizes: Dict[str, int] = {}
 
     # .dist
-    p_dist = os.path.join(path, f"{name}.dist")
-    with open(p_dist, "w") as f:
-        f.write(f"{net.k} {net.n} {net.m}\n")
-        f.write(" ".join(str(int(x)) for x in net.dist) + "\n")
-        f.write(" ".join(str(int(x)) for x in net.edist) + "\n")
-    sizes[".dist"] = os.path.getsize(p_dist)
+    sizes[".dist"] = _write_text(os.path.join(path, f"{name}.dist"), [
+        f"{net.k} {net.n} {net.m}",
+        " ".join(str(int(x)) for x in net.dist),
+        " ".join(str(int(x)) for x in net.edist),
+    ])
 
     # .model
-    p_model = os.path.join(path, f"{name}.model")
-    with open(p_model, "w") as f:
-        for mname, kind, size, params in net.registry.to_entries():
-            pstr = " ".join(f"{k}={_fmt(v)}" for k, v in sorted(params.items()))
-            f.write(f"{mname} {kind} {size} {pstr}".rstrip() + "\n")
-        for spec in list(net.registry.vertex_models()) + list(
-            net.registry.edge_models()
-        ):
-            if spec.state_vars:
-                f.write(
-                    f"@layout {spec.name} {','.join(spec.state_vars)}\n"
-                )
-        for k, v in sorted(net.meta.items()):
-            f.write(f"@meta {k}={_fmt(v)}\n")
-        f.write(f"@time {int(t_now)}\n")
-    sizes[".model"] = os.path.getsize(p_model)
+    model_lines: List[str] = []
+    for mname, kind, size, params in net.registry.to_entries():
+        pstr = " ".join(f"{k}={_fmt(v)}" for k, v in sorted(params.items()))
+        model_lines.append(f"{mname} {kind} {size} {pstr}".rstrip())
+    for spec in list(net.registry.vertex_models()) + list(
+        net.registry.edge_models()
+    ):
+        if spec.state_vars:
+            model_lines.append(
+                f"@layout {spec.name} {','.join(spec.state_vars)}"
+            )
+    for k, v in sorted(net.meta.items()):
+        model_lines.append(f"@meta {k}={_fmt(v)}")
+    model_lines.append(f"@time {int(t_now)}")
+    sizes[".model"] = _write_text(
+        os.path.join(path, f"{name}.model"), model_lines
+    )
 
     # transpose: outgoing-only neighbors per (global) vertex
     out_only = _outgoing_only(net)
@@ -100,59 +112,54 @@ def save_text(
 
     for part in net.parts:
         sfx = f".{part.part_id}"
-        pa = os.path.join(path, f"{name}.adjcy{sfx}")
-        pc = os.path.join(path, f"{name}.coord{sfx}")
-        ps = os.path.join(path, f"{name}.state{sfx}")
-        with open(pa, "w") as fa, open(pc, "w") as fc, open(ps, "w") as fs:
-            for r in range(part.n):
-                e0, e1 = int(part.row_ptr[r]), int(part.row_ptr[r + 1])
-                incoming = part.col_idx[e0:e1]
-                extra = out_only.get(part.row_start + r, ())
-                fa.write(
-                    " ".join(
-                        [str(int(c)) for c in incoming]
-                        + [str(int(c)) for c in extra]
-                    )
-                    + "\n"
-                )
-                fc.write(
-                    " ".join(_fmt(x) for x in part.coords[r]) + "\n"
-                )
-                vm = int(part.vtx_model[r])
-                tokens = [vnames[vm]] + [
-                    _fmt(x) for x in part.vtx_state[r, : vsizes[vm]]
+        adjcy: List[str] = []
+        coord: List[str] = []
+        state: List[str] = []
+        for r in range(part.n):
+            e0, e1 = int(part.row_ptr[r]), int(part.row_ptr[r + 1])
+            incoming = part.col_idx[e0:e1]
+            extra = out_only.get(part.row_start + r, ())
+            adjcy.append(" ".join(
+                [str(int(c)) for c in incoming]
+                + [str(int(c)) for c in extra]
+            ))
+            coord.append(" ".join(_fmt(x) for x in part.coords[r]))
+            vm = int(part.vtx_model[r])
+            tokens = [vnames[vm]] + [
+                _fmt(x) for x in part.vtx_state[r, : vsizes[vm]]
+            ]
+            for e in range(e0, e1):
+                em = int(part.edge_model[e])
+                tokens.append(enames[em])
+                tokens += [
+                    _fmt(x) for x in part.edge_state[e, : esizes[em]]
                 ]
-                for e in range(e0, e1):
-                    em = int(part.edge_model[e])
-                    tokens.append(enames[em])
-                    tokens += [
-                        _fmt(x) for x in part.edge_state[e, : esizes[em]]
-                    ]
-                tokens += [NONE_MODEL] * len(extra)
-                fs.write(" ".join(tokens) + "\n")
-        sizes[".adjcy"] = sizes.get(".adjcy", 0) + os.path.getsize(pa)
-        sizes[".coord"] = sizes.get(".coord", 0) + os.path.getsize(pc)
-        sizes[".state"] = sizes.get(".state", 0) + os.path.getsize(ps)
-
-        pr = os.path.join(path, f"{name}.remap{sfx}")
-        with open(pr, "w") as fr:
-            fr.write("\n".join(str(int(g)) for g in part.global_ids))
-            fr.write("\n")
-        sizes[".remap"] = sizes.get(".remap", 0) + os.path.getsize(pr)
-
-        pe = os.path.join(path, f"{name}.event{sfx}")
-        with open(pe, "w") as fe:
-            evs = (
-                events_by_part[part.part_id]
-                if events_by_part is not None
-                else np.zeros(0, EVENT_DTYPE)
+            tokens += [NONE_MODEL] * len(extra)
+            state.append(" ".join(tokens))
+        for kind, lines in ((".adjcy", adjcy), (".coord", coord),
+                            (".state", state)):
+            sizes[kind] = sizes.get(kind, 0) + _write_text(
+                os.path.join(path, f"{name}{kind}{sfx}"), lines,
             )
-            for e in evs:
-                fe.write(
-                    f"{int(e['src'])} {int(e['t_arr'])} {e['kind']} "
-                    f"{int(e['tgt'])} {_fmt(e['weight'])}\n"
-                )
-        sizes[".event"] = sizes.get(".event", 0) + os.path.getsize(pe)
+
+        sizes[".remap"] = sizes.get(".remap", 0) + _write_text(
+            os.path.join(path, f"{name}.remap{sfx}"),
+            [str(int(g)) for g in part.global_ids],
+        )
+
+        evs = (
+            events_by_part[part.part_id]
+            if events_by_part is not None
+            else np.zeros(0, EVENT_DTYPE)
+        )
+        sizes[".event"] = sizes.get(".event", 0) + _write_text(
+            os.path.join(path, f"{name}.event{sfx}"),
+            [
+                f"{int(e['src'])} {int(e['t_arr'])} {e['kind']} "
+                f"{int(e['tgt'])} {_fmt(e['weight'])}"
+                for e in evs
+            ],
+        )
     return sizes
 
 

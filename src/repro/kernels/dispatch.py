@@ -248,6 +248,113 @@ EVENT_MAX_IDS = EVENT_IDS_VMEM_BUDGET // 4
 EVENT_ACTIVITY_THRESHOLD = 0.002
 
 
+# -- per-engine contracts (machine-checked by repro.analysis.contracts) ---
+#
+# Each engine declares the properties the analyzer verifies against the
+# *lowered program* (jaxpr + post-SPMD HLO) for every eligible selector
+# configuration: the exact number of parts-axis collectives one step may
+# issue (keyed by exchange flavour), the collective kinds allowed inside
+# the scan body, and how many full-length f32 vectors the engine keeps
+# VMEM-resident per step — the same counts the budget constants above
+# divide by, so the selector's eligibility promises are checked against
+# what XLA actually built.  Declaring a new engine without a contract is
+# itself a checker failure (see docs/ANALYSIS.md).
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineContract:
+    """The machine-checked promises of one step engine.
+
+    ``collectives_per_step`` maps an exchange key — ``identity`` /
+    ``dense`` / ``index``, with ``+plastic`` appended when the exchange
+    also carries the pre-trace vector — to the EXACT number of
+    parts-axis collectives a single scan step issues.  A key absent from
+    the map means that exchange flavour is not a valid configuration of
+    the engine, and the checker fails if the selector ever produces it.
+
+    ``resident_np_vectors`` / ``resident_nglobal_vectors`` count the
+    full-length f32 vectors ((n_p,) state and (n_global,) exchanged
+    panels) the engine pins in VMEM per step — multiplied by the actual
+    widths of the lowered program and checked against
+    ``_FUSED_VECTOR_VMEM_BUDGET``, exactly the arithmetic behind
+    ``FUSED_MAX_N_P`` / ``FUSED_PLASTIC_MAX_N_P`` /
+    ``FUSED_SPLIT_*_MAX_N_GLOBAL``.  ``overlap_nglobal_vectors``
+    replaces the n_global count when an overlap mode is active (the
+    plastic remote pass pins three global vectors).
+
+    ``id_buffer_budget`` bounds the int32 compressed spike-id buffer of
+    the event engines (``EVENT_IDS_VMEM_BUDGET``)."""
+
+    engine: str
+    collectives_per_step: Dict[str, int]
+    allowed_collectives: Tuple[str, ...] = ("all_gather",)
+    resident_np_vectors: int = 0
+    resident_nglobal_vectors: int = 0
+    overlap_nglobal_vectors: Optional[int] = None
+    id_buffer_budget: Optional[int] = None
+
+
+ENGINE_CONTRACTS: Dict[str, EngineContract] = {
+    c.engine: c
+    for c in (
+        EngineContract(
+            "fused",
+            {"identity": 0},
+            resident_np_vectors=6,
+        ),
+        EngineContract(
+            "fused_plastic",
+            {"identity+plastic": 0},
+            resident_np_vectors=10,
+        ),
+        EngineContract(
+            "fused_event",
+            {"identity": 0},
+            resident_np_vectors=6,
+            id_buffer_budget=EVENT_IDS_VMEM_BUDGET,
+        ),
+        EngineContract(
+            "fused_split",
+            {"dense": 1, "index": 1},
+            resident_np_vectors=6,
+            resident_nglobal_vectors=1,
+        ),
+        EngineContract(
+            "fused_split_plastic",
+            # dense rides spikes+traces on ONE stacked all_gather; the
+            # index exchange needs a second collective for the dense
+            # real-valued pre-trace vector
+            {"dense+plastic": 1, "index+plastic": 2},
+            resident_np_vectors=10,
+            resident_nglobal_vectors=2,
+            overlap_nglobal_vectors=3,
+        ),
+        EngineContract(
+            "fused_split_event",
+            {"dense": 1, "index": 1},
+            resident_np_vectors=6,
+            resident_nglobal_vectors=1,
+            id_buffer_budget=EVENT_IDS_VMEM_BUDGET,
+        ),
+        EngineContract(
+            # the unfused fallback tiles state into panels — no
+            # VMEM-residency promise — but its exchange discipline is
+            # identical to the split engines'
+            "unfused",
+            {
+                "identity": 0, "identity+plastic": 0,
+                "dense": 1, "index": 1,
+                "dense+plastic": 1, "index+plastic": 2,
+            },
+        ),
+    )
+}
+assert set(ENGINE_CONTRACTS) == set(STEP_ENGINES), (
+    "every step engine must declare an EngineContract "
+    "(see docs/ANALYSIS.md)"
+)
+
+
 def event_id_cap(n_global: int, cap_frac: float) -> int:
     """Effective compressed spike-id capacity of the event engines — the
     single source of the formula (SimConfig(event_cap_frac=...) is a

@@ -38,7 +38,7 @@ from ..sharding.policy import make_policy, param_shardings, policy_context
 from ..train.optimizer import AdamW
 from ..train.train_loop import make_train_step
 from ..train.serve import make_serve_step, make_prefill_fn
-from .hlo_analysis import (
+from ..analysis.hlo import (
     analyze_hlo, roofline_terms, dominant_term, PEAK_FLOPS,
 )
 from .mesh import make_production_mesh

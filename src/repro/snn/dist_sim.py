@@ -124,7 +124,9 @@ def stack_partitions(net: DCSRNetwork, cfg: SimConfig) -> StackedNet:
                                 np.asarray(dv.plastic[i]),
                                 np.asarray(dv.valid[i]))
                 pr, pk = R - c.shape[0], K - c.shape[1]
-                pad = lambda a: np.pad(a, ((0, pr), (0, pk)))
+                pad = lambda a, pr=pr, pk=pk: np.pad(  # noqa: E731
+                    a, ((0, pr), (0, pk))
+                )
                 c, w, pl_, v = pad(c), pad(w), pad(pl_), pad(v)
             else:
                 c = np.zeros((R, K), np.int32)
@@ -211,8 +213,10 @@ class DistSimulator:
         importing it from ``repro.snn`` emits a ``DeprecationWarning``.
     """
 
-    def __init__(self, net: DCSRNetwork, cfg: SimConfig = SimConfig(),
+    def __init__(self, net: DCSRNetwork,
+                 cfg: Optional[SimConfig] = None,
                  mesh: Optional[Mesh] = None):
+        cfg = SimConfig() if cfg is None else cfg
         self._compiled: Dict[int, Tuple] = {}  # steps -> (jitted fn, args)
         self._sync_ells: Optional[List] = None  # per-part ELLs for sync
         self.net = net

@@ -95,6 +95,7 @@ import collections.abc
 import dataclasses
 import os
 import shutil
+import threading
 import time
 import warnings
 import weakref
@@ -286,6 +287,9 @@ class Session:
     """One object for the paper's whole workflow; see the module docstring
     for the engine-selection rules and the serialization contract."""
 
+    # advanced by the AsyncWriter worker, read on the run loop's thread
+    _guarded_by_ = {"_last_good_ckpt_step": "_ckpt_mark_lock"}
+
     def __init__(
         self,
         net_or_path,
@@ -356,6 +360,7 @@ class Session:
         # step of the newest snapshot whose background write LANDED —
         # the operator's actual rollback point when a later write fails
         self._last_good_ckpt_step: Optional[int] = None
+        self._ckpt_mark_lock = threading.Lock()
         self._writer: Optional[AsyncWriter] = None
         # eager engine build: surfaces SimConfig/backend errors at
         # construction and fixes dt/d_ring for save()
@@ -597,7 +602,8 @@ class Session:
                         wait=checkpoint_sync,
                     )
                 except OSError as e:
-                    last = self._last_good_ckpt_step
+                    with self._ckpt_mark_lock:
+                        last = self._last_good_ckpt_step
                     raise OSError(
                         f"checkpoint at step {t_run0 + done} failed "
                         "(writer retries exhausted); last successful "
@@ -750,7 +756,8 @@ class Session:
         """Background write body: only a write that fully landed advances
         ``_last_good_ckpt_step`` (the rollback point named in errors)."""
         write_snapshot(snap, path, atomic=True)
-        self._last_good_ckpt_step = step
+        with self._ckpt_mark_lock:
+            self._last_good_ckpt_step = step
 
     def wait(self) -> None:
         """Drain the background checkpoint writer: block until every
@@ -783,6 +790,7 @@ class Session:
                     "background checkpoint write failed while unwinding "
                     f"another exception: {drain_err!r}",
                     RuntimeWarning,
+                    stacklevel=2,
                 )
         return False
 

@@ -715,8 +715,10 @@ class Simulator:
         emits a ``DeprecationWarning``.
     """
 
-    def __init__(self, net: DCSRNetwork, cfg: SimConfig = SimConfig()):
+    def __init__(self, net: DCSRNetwork,
+                 cfg: Optional[SimConfig] = None):
         assert net.k == 1, "Simulator takes k=1 nets; see dist_sim for k>1"
+        cfg = SimConfig() if cfg is None else cfg
         self.net = net
         self.cfg = cfg
         self.dt = float(net.meta.get("dt", 0.1))

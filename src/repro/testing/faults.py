@@ -31,7 +31,14 @@ site                                  where it fires
                                       directory fsync + ``.old`` cleanup
 ``supervisor:state``                  after each supervised chunk, before
                                       the health check (state corruption)
+``text_write`` / ``:post``            around each textual artifact write
+                                      (io/dcsr_text: .dist/.model/.adjcy/
+                                      .coord/.state/.remap/.event)
 ====================================  =======================================
+
+The machine-readable registry of these sites is :data:`KNOWN_SITES`;
+``repro.analysis.repolint`` enforces that every literal site used by
+production code is registered here and that no registered site is dead.
 
 Failure kinds: ``io_error`` (transient ``OSError``), ``torn`` (truncate
 the just-written file at a seeded offset), ``stall`` (sleep
@@ -64,6 +71,7 @@ __all__ = [
     "FaultPlan",
     "InjectedCrash",
     "InjectedIOError",
+    "KNOWN_SITES",
     "active_plans",
     "apply_state_faults",
     "chaos_plan",
@@ -73,6 +81,20 @@ __all__ = [
 STATE_KINDS = ("nan", "storm")
 FILE_KINDS = ("torn", "bit_flip")
 KINDS = ("io_error", "stall", "crash") + FILE_KINDS + STATE_KINDS
+
+# every fault site compiled into production code (the lint's registry:
+# a site used but not listed here — or listed but never used — is a
+# repolint 'fault-hook' violation; each site X also covers 'X:post')
+KNOWN_SITES: Tuple[str, ...] = (
+    "shard_write",
+    "manifest_write",
+    "shard_read",
+    "text_write",
+    "atomic_dir:pre_swap",
+    "atomic_dir:between_renames",
+    "atomic_dir:after_swap",
+    "supervisor:state",
+)
 
 
 class InjectedCrash(RuntimeError):
@@ -120,6 +142,9 @@ class FaultPlan:
     ``(site, path, kind)`` that actually fired, in order — tests assert
     against it.  ``plan.rng_for(fault_idx, hit)`` is the deterministic
     generator behind every stochastic choice."""
+
+    # hook entry points run on shard-writer pools and checkpoint workers
+    _guarded_by_ = {"_hits": "_lock", "fired": "_lock"}
 
     def __init__(self, faults, seed: int = 0, name: str = ""):
         self.faults: Tuple[Fault, ...] = tuple(faults)

@@ -43,7 +43,7 @@ except ImportError:
 
         def __getattr__(self, name):
             def strategy(*args, **kwargs):
-                return None
+                return
 
             return strategy
 
